@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: robust timing + CSV emission.
+
+This container is CPU-only: wall-clock numbers are CPU numbers and are
+reported as *ratios between methods* (the paper's own cross-method
+comparisons); TPU-facing results are roofline-derived (benchmarks read the
+dry-run artifacts).  Every row prints ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def bench(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def section(title: str) -> None:
+    print(f"\n# === {title} ===", flush=True)

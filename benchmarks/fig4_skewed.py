@@ -1,0 +1,35 @@
+"""Paper Fig. 4: skewed matmul A(m,n) @ B(n,k) with skewness s = m/n.
+
+The paper shows GPUs lose badly at high aspect ratios while the IPU stays
+flat.  We measure the skewness response of this backend and (the TPU-facing
+number) derive the MXU-utilization expectation: dims < 128 underfill the
+128x128 systolic array, so predicted efficiency ~ min(m,128)/128 x
+min(n,128)/128-ish — recorded in `derived` for the roofline narrative.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench, emit, section
+
+
+def run(total: int = 2**22, skews=(1 / 64, 1 / 16, 1 / 4, 1, 4, 16, 64)) -> None:
+    section("fig4: skewed MM, s = m/n with m*n fixed (CPU-measured)")
+    k = 512
+    for s in skews:
+        m = int((total * s) ** 0.5)
+        n = int((total / s) ** 0.5)
+        m, n = max(m, 8), max(n, 8)
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+        b = jax.random.normal(jax.random.PRNGKey(1), (n, k))
+        f = jax.jit(lambda a, b: a @ b)
+        t = bench(f, a, b)
+        flops = 2.0 * m * n * k
+        mxu = min(m, 128) / 128 * min(n, 128) / 128
+        emit(f"fig4/skew={s:g}", t,
+             f"m={m};n={n};gflops={flops / t / 1e9:.2f};"
+             f"tpu_mxu_fill_pred={mxu:.3f}")
+
+
+if __name__ == "__main__":
+    run()

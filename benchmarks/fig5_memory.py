@@ -1,0 +1,48 @@
+"""Paper Fig. 5 / Fig. 7: memory usage vs problem size.
+
+The paper's observation 3: IPU memory = tensor footprint + compiler
+structures (compute sets).  The XLA analogue: ``temp_size_in_bytes`` from
+the compiled executable (scratch the compiler adds beyond the tensors).
+We report, per method and N: param bytes, argument bytes, temp bytes —
+showing the same "memory is more than your tensors" effect on this stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section
+from repro.core import ButterflySpec, DenseSpec, PixelflySpec
+
+
+def _mem(fn, *args) -> dict:
+    compiled = jax.jit(fn).lower(*args).compile()
+    ma = compiled.memory_analysis()
+    return {
+        "arg": ma.argument_size_in_bytes,
+        "temp": ma.temp_size_in_bytes,
+        "out": ma.output_size_in_bytes,
+    }
+
+
+def run(batch: int = 32, sizes=(512, 1024, 2048, 4096)) -> None:
+    section("fig5: memory (params + compiler temp) vs N")
+    for n in sizes:
+        x = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+        for name, spec in (
+            ("dense", DenseSpec(n, n, bias=False)),
+            ("butterfly", ButterflySpec(n, n, block_size=min(64, n // 8),
+                                        bias=False)),
+            ("pixelfly", PixelflySpec(n, n, block_size=min(32, n // 8),
+                                      rank=8, bias=False)),
+        ):
+            params = jax.eval_shape(spec.init, jax.random.PRNGKey(0))
+            m = _mem(lambda p, x: spec.apply(p, x), params, x)
+            emit(f"fig5/{name}/n={n}", 0.0,
+                 f"params={spec.param_count()};arg_bytes={m['arg']};"
+                 f"temp_bytes={m['temp']};"
+                 f"compression={spec.compression_ratio():.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Fig. 6: torch.nn.Linear vs butterfly vs pixelfly over matrix dim N.
+
+Reproduces the break-even analysis: below some N the dense layer wins
+(factorization overhead), above it the O(N log N) methods win.  The paper
+reports break-even N=2^10 on IPU / 2^11 on GPU with worst-case overheads
+1.4x (IPU) / 14.45x (GPU) for butterfly.  We report the same sweep measured
+on this backend plus the analytic FLOP ratio N / (2 b log2(N/b)) that
+predicts the TPU break-even.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import bench, emit, section
+from repro.core import ButterflySpec, PixelflySpec
+
+
+def run(batch: int = 64, sizes=(256, 512, 1024, 2048, 4096)) -> None:
+    section("fig6: linear vs butterfly vs pixelfly over N (CPU-measured)")
+    break_even_bf = None
+    for n in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n, n)) / n**0.5
+        t_dense = bench(jax.jit(lambda x, w: x @ w), x, w)
+        emit(f"fig6/dense/n={n}", t_dense, "")
+
+        b = 1  # paper-faithful butterfly (2x2 twiddles)
+        bspec = ButterflySpec(n, n, block_size=b, bias=False)
+        bparams = bspec.init(jax.random.PRNGKey(2))
+        t_bf = bench(jax.jit(lambda p, x: bspec.apply(p, x)), bparams, x)
+        flop_ratio = n / (2 * b * math.log2(n / b))
+        emit(f"fig6/butterfly_b1/n={n}", t_bf,
+             f"speedup_vs_dense={t_dense / t_bf:.3f};"
+             f"flop_ratio={flop_ratio:.1f}")
+        if break_even_bf is None and t_bf < t_dense:
+            break_even_bf = n
+
+        bb = min(64, n // 8)  # TPU-native block butterfly
+        bbspec = ButterflySpec(n, n, block_size=bb, bias=False)
+        bbparams = bbspec.init(jax.random.PRNGKey(3))
+        t_bbf = bench(jax.jit(lambda p, x: bbspec.apply(p, x)), bbparams, x)
+        emit(f"fig6/butterfly_block/n={n}", t_bbf,
+             f"speedup_vs_dense={t_dense / t_bbf:.3f};block={bb}")
+
+        pspec = PixelflySpec(n, n, block_size=min(32, n // 8), rank=8,
+                             bias=False)
+        pparams = pspec.init(jax.random.PRNGKey(4))
+        t_pf = bench(jax.jit(lambda p, x: pspec.apply(p, x)), pparams, x)
+        emit(f"fig6/pixelfly/n={n}", t_pf,
+             f"speedup_vs_dense={t_dense / t_pf:.3f}")
+    emit("fig6/break_even_butterfly", 0.0,
+         f"first_N_where_butterfly_wins={break_even_bf}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Beyond-paper: the compression/quality trade-off inside an actual LM.
+
+Trains the butterfly-lm family (reduced config, CPU) with each
+factorization on the same token stream and budget; reports params, final
+loss, and step time — the paper's Table-4 question asked at the
+architecture level where the technique would actually be deployed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.configs import get_config, reduced
+from repro.core.factorized import FactorizationConfig
+from repro.data.synthetic import lm_batch
+from repro.models import param_count
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+KINDS = ("dense", "butterfly", "pixelfly", "lowrank")
+
+
+def run(steps: int = 80, batch: int = 8, seq: int = 64) -> None:
+    section("lm_ablation: factorization kind vs LM loss at equal budget")
+    base = reduced(get_config("butterfly-lm-100m"))
+    results = {}
+    for kind in KINDS:
+        fact = FactorizationConfig(
+            kind=kind, block_size=8, rank=16,
+            sites=("mlp", "attn_qkv", "attn_out"))
+        cfg = dataclasses.replace(base, name=f"lm-{kind}", fact=fact)
+        tc = TrainConfig(lr=3e-3, schedule="warmup_cosine",
+                         warmup=steps // 10, total_steps=steps)
+        state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(cfg, tc))
+        losses = []
+        t0 = time.perf_counter()
+        for s in range(steps):
+            tok, lab = lm_batch(s, batch, seq, cfg.vocab_size, seed=11)
+            state, metrics = step_fn(state, jnp.asarray(tok), jnp.asarray(lab))
+            losses.append(float(metrics["loss"]))
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        n = param_count(cfg)
+        final = float(np.mean(losses[-10:]))
+        results[kind] = (final, n)
+        emit(f"lm_ablation/{kind}", dt / steps,
+             f"final_loss={final:.4f};first_loss={losses[0]:.4f};params={n}")
+    dense_n = results["dense"][1]
+    for kind in KINDS[1:]:
+        loss, n = results[kind]
+        emit(f"lm_ablation/{kind}_vs_dense", 0.0,
+             f"loss_delta={loss - results['dense'][0]:+.4f};"
+             f"compression={1 - n / dense_n:.3f}")
+
+
+if __name__ == "__main__":
+    run()

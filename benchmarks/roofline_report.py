@@ -1,0 +1,77 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md section-Roofline table (40 cells x 2 meshes)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, section
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | bound_s | roofline_frac | useful_flops_ratio | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped ({r['reason'][:40]}…) | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR {r.get('error', '')[:60]} |||||||||")
+            continue
+        roof = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0)) / 1e9
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {roof['compute_s']:.3f} | {roof['memory_s']:.3f} "
+            f"| {roof['collective_s']:.3f} | {roof['dominant']} "
+            f"| {roof['bound_s']:.3f} | {roof['compute_fraction']:.3f} "
+            f"| {ratio:.3f} | {hbm:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | - |||||||||")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    section("roofline: aggregate dry-run records")
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    emit("roofline/cells_ok", 0.0, f"count={len(ok)}")
+    emit("roofline/cells_skipped", 0.0, f"count={len(skipped)}")
+    emit("roofline/cells_error", 0.0, f"count={len(err)}")
+    for r in ok:
+        roof = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             roof["bound_s"],
+             f"dom={roof['dominant']};frac={roof['compute_fraction']:.3f}")
+    out = os.path.join(DRYRUN_DIR, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(markdown_table(recs) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

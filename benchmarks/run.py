@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+table2  — dense vs sparse/structured MM            (paper Table 2)
+fig4    — skewed MM                                (paper Fig. 4)
+fig5    — memory vs problem size                   (paper Fig. 5/7)
+fig6    — linear vs butterfly vs pixelfly sweep    (paper Fig. 6)
+table4  — SHL CIFAR-10, 6 compression methods      (paper Table 4)
+table5  — pixelfly parameter sweep                 (paper Table 5)
+roofline— 40-cell arch x shape roofline aggregate  (beyond-paper)
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sizes / fewer steps")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark (e.g. table4)")
+    args = ap.parse_args()
+    fast = args.fast
+
+    from benchmarks import (
+        fig4_skewed,
+        fig5_memory,
+        fig6_factorization_sweep,
+        lm_ablation,
+        roofline_report,
+        table2_matmul,
+        table4_shl,
+        table5_pixelfly_sweep,
+    )
+
+    benches = {
+        "table2": lambda: table2_matmul.run(
+            sizes=(512, 1024) if fast else (512, 1024, 2048)),
+        "fig4": lambda: fig4_skewed.run(
+            skews=(1 / 16, 1, 16) if fast else (1 / 64, 1 / 16, 1 / 4, 1, 4, 16, 64)),
+        "fig5": lambda: fig5_memory.run(
+            sizes=(512, 1024) if fast else (512, 1024, 2048, 4096)),
+        "fig6": lambda: fig6_factorization_sweep.run(
+            sizes=(256, 1024) if fast else (256, 512, 1024, 2048, 4096)),
+        "table4": lambda: table4_shl.run(steps=50 if fast else 400),
+        "table5": lambda: table5_pixelfly_sweep.run(steps=30 if fast else 150),
+        "lm_ablation": lambda: lm_ablation.run(steps=20 if fast else 80),
+        "roofline": roofline_report.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 2: dense vs structured-sparse matmul throughput.
+
+The paper compares dense MM against sparse MM on GPU/IPU at several
+configurations.  Here: dense jnp matmul vs the butterfly product vs the
+pixelfly block-sparse matmul, at equal *dense-equivalent transform size*
+(an N->N linear map).  GFLOP/s are dense-equivalent:
+``2 B N^2 / t`` — "how fast is this method at applying an NxN transform",
+the paper's effective-throughput framing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit, section
+from repro.core import ButterflySpec, PixelflySpec
+
+
+def run(batch: int = 64, sizes=(512, 1024, 2048)) -> None:
+    section("table2: dense vs butterfly vs pixelfly MM (CPU-measured)")
+    for n in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n, n)) / n**0.5
+        dense = jax.jit(lambda x, w: x @ w)
+        t_dense = bench(dense, x, w)
+        flops = 2.0 * batch * n * n
+        emit(f"table2/dense/n={n}", t_dense,
+             f"gflops={flops / t_dense / 1e9:.2f}")
+
+        bspec = ButterflySpec(n, n, block_size=min(64, n // 8), bias=False)
+        bparams = bspec.init(jax.random.PRNGKey(2))
+        bf = jax.jit(lambda p, x: bspec.apply(p, x))
+        t_bf = bench(bf, bparams, x)
+        emit(f"table2/butterfly/n={n}", t_bf,
+             f"dense_equiv_gflops={flops / t_bf / 1e9:.2f};"
+             f"speedup_vs_dense={t_dense / t_bf:.2f};"
+             f"compression={bspec.compression_ratio():.4f}")
+
+        pspec = PixelflySpec(n, n, block_size=min(32, n // 8), rank=8,
+                             bias=False)
+        pparams = pspec.init(jax.random.PRNGKey(3))
+        pf = jax.jit(lambda p, x: pspec.apply(p, x))
+        t_pf = bench(pf, pparams, x)
+        emit(f"table2/pixelfly/n={n}", t_pf,
+             f"dense_equiv_gflops={flops / t_pf / 1e9:.2f};"
+             f"speedup_vs_dense={t_dense / t_pf:.2f};"
+             f"compression={pspec.compression_ratio():.4f}")
+
+
+if __name__ == "__main__":
+    run()

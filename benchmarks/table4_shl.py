@@ -1,0 +1,116 @@
+"""Paper Table 4: SHL benchmark on CIFAR-10 with all compression methods.
+
+Single-hidden-layer MLP (3072 -> hidden -> 10), hidden layer replaced by
+each method: baseline dense, butterfly, fastfood, circulant, low-rank,
+pixelfly.  Paper hyperparameters (Table 3): SGD momentum 0.9, lr 1e-3,
+batch 50, ReLU, cross-entropy.  Offline container => synthetic CIFAR-10-
+shaped data; the reproduction target is the BETWEEN-METHOD ordering of
+accuracy / params / time, not absolute accuracy (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.configs.shl_cifar10 import IN_FEATURES, METHODS, NUM_CLASSES, SHLConfig
+from repro.core import make_spec
+from repro.core.factorized import FactorizationConfig
+from repro.data.synthetic import cifar10_like
+from repro.optim.adamw import make_optimizer
+
+
+def build_shl(method: str, shl: SHLConfig):
+    fc_kwargs = {
+        "dense": dict(kind="dense"),
+        "butterfly": dict(kind="butterfly", block_size=shl.butterfly_block),
+        "pixelfly": dict(kind="pixelfly", block_size=shl.block_size,
+                         rank=shl.rank),
+        "lowrank": dict(kind="lowrank", rank=shl.rank),
+        "circulant": dict(kind="circulant"),
+        "fastfood": dict(kind="fastfood"),
+    }[method]
+    fc = FactorizationConfig(sites=("mlp",), **fc_kwargs)
+    hidden_spec = make_spec(fc, IN_FEATURES, shl.hidden, site="mlp", bias=True)
+    out_spec = make_spec(FactorizationConfig(kind="dense"), shl.hidden,
+                         NUM_CLASSES, site="other", bias=True)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"hidden": hidden_spec.init(k1), "out": out_spec.init(k2)}
+
+    def apply(params, x):
+        h = jax.nn.relu(hidden_spec.apply(params["hidden"], x))
+        return out_spec.apply(params["out"], h)
+
+    n_params = hidden_spec.param_count() + out_spec.param_count()
+    return init, apply, n_params
+
+
+def train_one(method: str, shl: SHLConfig, steps: int = 400,
+              eval_batches: int = 10, optimizer: str = "adamw",
+              lr: float = 3e-3):
+    """NOTE: the paper's Table 3 uses SGD(momentum=0.9, lr=1e-3) over full
+    CIFAR-10 epochs.  On this CPU container the budget is a few hundred
+    steps, where SGD leaves the multiplicative (butterfly-family)
+    parametrizations far from convergence; we use AdamW lr=3e-3 UNIFORMLY
+    for all methods (equal treatment) and record the deviation in
+    EXPERIMENTS.md.  Pass optimizer="sgd" to run the paper-faithful setting.
+    """
+    init, apply, n_params = build_shl(method, shl)
+    params = init(jax.random.PRNGKey(0))
+    if optimizer == "sgd":
+        opt_init, opt_update = make_optimizer("sgd", lr=shl.lr,
+                                              momentum=shl.momentum)
+    else:
+        opt_init, opt_update = make_optimizer("adamw", lr=lr,
+                                              weight_decay=0.0)
+    opt = opt_init(params)
+
+    def loss_fn(p, x, y):
+        logits = apply(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, opt, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, opt = opt_update(g, opt, p)
+        return p, opt, loss
+
+    t0 = time.perf_counter()
+    for s in range(steps):
+        x, y = cifar10_like(s, shl.batch_size, seed=1)
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+    jax.block_until_ready(loss)
+    train_time = time.perf_counter() - t0
+
+    @jax.jit
+    def acc_fn(p, x, y):
+        return (jnp.argmax(apply(p, x), axis=1) == y).mean()
+
+    accs = []
+    for s in range(eval_batches):
+        x, y = cifar10_like(10_000 + s, 500, seed=1)
+        accs.append(float(acc_fn(params, jnp.asarray(x), jnp.asarray(y))))
+    return float(np.mean(accs)), n_params, train_time
+
+
+def run(steps: int = 600) -> None:
+    section("table4: SHL on (synthetic) CIFAR-10 — all 6 methods")
+    shl = SHLConfig()
+    baseline_params = None
+    for method in METHODS:
+        acc, n_params, t = train_one(method, shl, steps)
+        if method == "dense":
+            baseline_params = n_params
+        comp = 1 - n_params / baseline_params if baseline_params else 0.0
+        emit(f"table4/{method}", t,
+             f"acc={acc:.4f};n_params={n_params};compression={comp:.4f}")
+
+
+if __name__ == "__main__":
+    run()

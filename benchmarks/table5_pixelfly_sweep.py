@@ -1,0 +1,48 @@
+"""Paper Table 5: pixelfly parameter sweep on the SHL benchmark.
+
+Vary one of (butterfly/padded size via block granularity, block size,
+low-rank size) with the others fixed; report mean/std of train time,
+accuracy and N_params — the paper's conclusion is that no single config
+wins all three metrics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.configs.shl_cifar10 import SHLConfig
+from benchmarks.table4_shl import train_one
+
+
+def _sweep(name: str, configs: list[SHLConfig], steps: int):
+    times, accs, params = [], [], []
+    for c in configs:
+        acc, n, t = train_one("pixelfly", c, steps)
+        times.append(t)
+        accs.append(acc)
+        params.append(n)
+    emit(f"table5/vary_{name}", float(np.mean(times)),
+         f"time_std={np.std(times):.3f};acc_mean={np.mean(accs):.4f};"
+         f"acc_std={np.std(accs):.4f};params_mean={np.mean(params):.0f};"
+         f"params_std={np.std(params):.0f}")
+
+
+def run(steps: int = 150) -> None:
+    section("table5: pixelfly parameter sweep (block size / low-rank size)")
+    base = SHLConfig()
+    _sweep("block_size",
+           [SHLConfig(block_size=b, rank=base.rank) for b in (4, 8, 16, 32)],
+           steps)
+    _sweep("lowrank_size",
+           [SHLConfig(block_size=base.block_size, rank=r)
+            for r in (2, 8, 32, 128)],
+           steps)
+    # "butterfly size" axis: the padded butterfly dimension, driven here by
+    # the hidden width (n_padded = next_pow2(max(3072, hidden)))
+    _sweep("butterfly_size",
+           [SHLConfig(hidden=h) for h in (256, 342, 1024, 2048)],
+           steps)
+
+
+if __name__ == "__main__":
+    run()

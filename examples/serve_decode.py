@@ -1,0 +1,78 @@
+"""Batched serving example: prefill + greedy decode with KV/state caches,
+including a recurrent (xLSTM) arch where the 'KV cache' is O(1) state —
+the long_500k serving story at toy scale.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-4b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import decode_step, init_caches, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b",
+                    help="any assigned arch, e.g. xlstm-350m (recurrent)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, p = args.batch, args.prompt_len
+    max_len = p + args.max_new
+    caches = init_caches(cfg, b, max_len)
+
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches))
+    print(f"{cfg.name}: cache footprint {cache_bytes/1e6:.2f} MB "
+          f"for max_len={max_len} "
+          f"({'O(1) recurrent state' if cfg.sub_quadratic else 'KV cache'})")
+
+    step = jax.jit(lambda pr, t, c, pos: decode_step(pr, cfg, t, c, pos))
+
+    if cfg.input_mode == "tokens":
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
+                                    cfg.vocab_size)
+        feed = lambda t: prompt[:, t:t + 1]
+    else:  # [vlm]/[audio]: frontend stub provides embeddings
+        emb = jax.random.normal(jax.random.PRNGKey(1), (b, p, cfg.d_model),
+                                cfg.dtype)
+        feed = lambda t: emb[:, t:t + 1]
+
+    t0 = time.time()
+    logits = None
+    for t in range(p):  # prefill through the decode path
+        logits, caches = step(params, feed(t), caches,
+                              jnp.full((b,), t, jnp.int32))
+    toks = []
+    tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
+    for i in range(args.max_new):
+        toks.append(np.asarray(tok)[:, 0])
+        if cfg.input_mode == "tokens":
+            logits, caches = step(params, tok, caches,
+                                  jnp.full((b,), p + i, jnp.int32))
+        else:
+            # audio/vlm decode feeds the embedding of the sampled token; the
+            # frontend stub uses a random fixed embedding table
+            e = jax.random.normal(jax.random.PRNGKey(100 + i),
+                                  (b, 1, cfg.d_model), cfg.dtype)
+            logits, caches = step(params, e, caches,
+                                  jnp.full((b,), p + i, jnp.int32))
+        tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(toks, 1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({gen.size/dt:.1f} tok/s on CPU)")
+    print("sample:", gen[0][:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end LM training with butterfly-factorized projections — the
+paper's memory-reduction technique inside a modern transformer, with the
+full production substrate: sharded step, checkpoint/restart, fault-tolerant
+loop, straggler watchdog.
+
+On this CPU container it trains the REDUCED config for a few hundred steps
+(loss visibly decreases); on a pod the same driver runs the full 100M+
+config (launch/train.py shares the code path).
+
+Run:  PYTHONPATH=src python examples/train_butterfly_lm.py --steps 120
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data.synthetic import lm_batch
+from repro.models import param_count
+from repro.runtime.fault_tolerance import StragglerWatchdog, run_fault_tolerant
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full 100M config (slow on CPU)")
+    args = ap.parse_args()
+
+    cfg = get_config("butterfly-lm-100m")
+    if not args.full:
+        cfg = reduced(cfg)
+    print(f"config {cfg.name}: {param_count(cfg):,} params "
+          f"(butterfly sites: {cfg.fact.sites})")
+
+    tc = TrainConfig(lr=3e-3, schedule="warmup_cosine",
+                     warmup=max(args.steps // 10, 5), total_steps=args.steps)
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, tc))
+    mgr = CheckpointManager("/tmp/repro_butterfly_lm", keep=2)
+    wd = StragglerWatchdog()
+    losses = []
+
+    def one_step(s, state):
+        tok, lab = lm_batch(s, args.batch, args.seq, cfg.vocab_size, seed=7)
+        state, metrics = step_fn(state, jnp.asarray(tok), jnp.asarray(lab))
+        losses.append(float(metrics["loss"]))
+        if s % 20 == 0:
+            print(f"step {s:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+        return state
+
+    t0 = time.time()
+    final, state = run_fault_tolerant(
+        one_step, state, 0, args.steps,
+        save_fn=lambda s, st: mgr.save(s, st, blocking=False),
+        restore_fn=lambda: mgr.restore(state),
+        checkpoint_every=50, watchdog=wd)
+    mgr.wait()
+    print(f"{final} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
+    print("step-time stats:", wd.stats())
+    assert np.mean(losses[-10:]) < losses[0], "loss did not decrease!"
+
+
+if __name__ == "__main__":
+    main()

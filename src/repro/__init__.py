@@ -1,0 +1,5 @@
+"""repro: butterfly factorizations as a first-class memory-reduction
+feature in a multi-pod JAX training/serving framework (TPU-native
+adaptation of Shekofteh et al., CS.DC 2023)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,61 @@
+"""Architecture registry: ``get_config(name)`` + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+_ARCH_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "xlstm-350m": "xlstm_350m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "minitron-8b": "minitron_8b",
+    "qwen3-4b": "qwen3_4b",
+    "musicgen-medium": "musicgen_medium",
+    "butterfly-lm-100m": "butterfly_lm_100m",
+}
+
+ARCHS = tuple(k for k in _ARCH_MODULES if k != "butterfly-lm-100m")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ModelConfig, periods: int = 2) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests: few layers, narrow width,
+    few experts, small vocab -- same pattern/flavor flags."""
+    period = len(cfg.pattern)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=period * periods,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=32,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        num_shared_experts=min(cfg.num_shared_experts, 1),
+        mamba_d_state=8,
+        mamba_dt_rank=8,
+        attn_chunk=64,
+        scan_chunk=32,
+        remat=False,
+    )
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config", "reduced",
+    "shape_applicable",
+]

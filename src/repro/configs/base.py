@@ -1,0 +1,127 @@
+"""Config dataclasses: model architecture, input shapes, mesh."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.factorized import DENSE, FactorizationConfig
+
+# layer slot = (mixer, ffn); mixer in MIXERS, ffn in FFNS
+MIXERS = ("attn", "mamba", "mlstm", "slstm")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # layer pattern: tuple of (mixer, ffn) slots, cycled over num_layers.
+    # num_layers must be a multiple of len(pattern) (the scan period).
+    pattern: tuple[tuple[str, str], ...] = (("attn", "dense"),)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # attention flavor
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    mrope: bool = False  # qwen2-vl M-RoPE (3 position streams)
+    attn_chunk: int = 512  # kv-chunk for flash-style train/prefill attention
+    # mamba
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_dconv: int = 4
+    mamba_dt_rank: int = 0  # 0 -> ceil(d_model/16)
+    scan_chunk: int = 256  # ssm chunked-scan length
+    # xlstm
+    xlstm_expand: int = 2
+    # io
+    input_mode: str = "tokens"  # tokens | embeddings (modality-frontend stub)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # paper technique
+    fact: FactorizationConfig = DENSE
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    # training
+    z_loss: float = 1e-4
+
+    def __post_init__(self):
+        if self.num_layers % len(self.pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not a multiple of "
+                f"pattern period {len(self.pattern)}"
+            )
+        for mixer, ffn in self.pattern:
+            if mixer not in MIXERS or ffn not in FFNS:
+                raise ValueError(f"bad slot ({mixer}, {ffn})")
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def uses_full_attention(self) -> bool:
+        return any(m == "attn" for m, _ in self.pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve a 500k-token context (no quadratic-only mixer)?"""
+        return any(m in ("mamba", "mlstm", "slstm") for m, _ in self.pattern)
+
+    def with_fact(self, fact: FactorizationConfig) -> "ModelConfig":
+        return dataclasses.replace(self, fact=fact)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+    microbatch: int = 0  # 0 = no grad accumulation (train only)
+
+
+# The assigned LM shape set (same four for every arch).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k only for sub-quadratic archs (see DESIGN.md section 5)."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

@@ -1,0 +1,30 @@
+"""butterfly-lm-100m — the paper's technique end-to-end: a ~100M-param LM
+whose MLP + attention projections are butterfly-factorized (TPU block
+variant).  Used by examples/train_butterfly_lm.py."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import FactorizationConfig
+
+CONFIG = ModelConfig(
+    name="butterfly-lm-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=32768,
+    pattern=(("attn", "dense"),),
+    # block 16: at d_model=768 the padded butterfly dim is 4096, so larger
+    # blocks would cost more params than dense (2*N*b*log2(N/b) vs in*out).
+    # Production archs (d_model >= 4096) use block 128 (MXU-native).
+    fact=FactorizationConfig(
+        kind="butterfly", block_size=16,
+        sites=("mlp", "attn_qkv", "attn_out"),
+    ),
+)
+
+# dense twin for paper-style baseline comparisons
+DENSE_CONFIG = dataclasses.replace(
+    CONFIG, name="dense-lm-100m", fact=FactorizationConfig(kind="dense"))

@@ -1,0 +1,24 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e
+top-2 on every other layer.  [arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    top_k=2,
+    # period of 8: one attention layer per 8 (1:7), MoE every other layer
+    pattern=(
+        ("mamba", "dense"), ("mamba", "moe"),
+        ("mamba", "dense"), ("attn", "moe"),
+        ("mamba", "dense"), ("mamba", "moe"),
+        ("mamba", "dense"), ("mamba", "moe"),
+    ),
+    mamba_d_state=16,
+)

@@ -1,0 +1,17 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.  Backbone
+only; the EnCodec frontend is a stub (input_specs provides frame
+embeddings).  [arXiv:2306.05284; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    input_mode="embeddings",
+    pattern=(("attn", "dense"),),
+)

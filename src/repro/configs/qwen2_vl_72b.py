@@ -1,0 +1,18 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution.  Backbone only; the
+vision frontend is a stub (input_specs provides patch embeddings).
+[arXiv:2409.12191; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mrope=True,
+    input_mode="embeddings",
+    pattern=(("attn", "dense"),),
+)

@@ -1,0 +1,29 @@
+"""The paper's own benchmark model (section 4.2): single-hidden-layer MLP on
+CIFAR-10, hidden layer replaced by each compression method (Table 4).
+
+Hyperparameters follow the paper's Table 3: SGD momentum 0.9, lr 1e-3,
+batch 50, ReLU, cross-entropy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+IN_FEATURES = 3 * 32 * 32  # CIFAR-10 image flattened
+NUM_CLASSES = 10
+HIDDEN = 342  # baseline N_params ~= 1,059,850 as in Table 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SHLConfig:
+    method: str = "dense"  # dense | butterfly | pixelfly | lowrank | circulant | fastfood
+    hidden: int = HIDDEN
+    block_size: int = 8       # pixelfly "block size"
+    rank: int = 8             # pixelfly/lowrank "low-rank size"
+    butterfly_block: int = 1  # paper-faithful 2x2 twiddles by default
+    lr: float = 1e-3
+    momentum: float = 0.9
+    batch_size: int = 50
+    epochs: int = 1
+
+
+METHODS = ("dense", "butterfly", "pixelfly", "lowrank", "circulant", "fastfood")

@@ -1,0 +1,16 @@
+"""xlstm-350m [ssm] — alternating sLSTM + mLSTM blocks, no separate FFN
+(blocks carry their own up/down projections).  [arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=(("mlstm", "none"), ("slstm", "none")),
+    xlstm_expand=2,
+)

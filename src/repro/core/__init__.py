@@ -1,0 +1,27 @@
+"""Factorization core: the paper's contribution as composable JAX modules."""
+from repro.core.baselines import (
+    CirculantSpec,
+    DenseSpec,
+    FastfoodSpec,
+    LowRankSpec,
+    fwht,
+)
+from repro.core.butterfly import (
+    ButterflySpec,
+    apply_butterfly,
+    apply_factor,
+    factor_shape,
+    factor_strides,
+    fft_twiddles,
+    init_factors,
+)
+from repro.core.factorized import DENSE, KINDS, SITES, FactorizationConfig, Linear, make_spec
+from repro.core.pixelfly import PixelflySpec, apply_flat_butterfly, butterfly_support_cols
+
+__all__ = [
+    "ButterflySpec", "PixelflySpec", "DenseSpec", "LowRankSpec", "CirculantSpec",
+    "FastfoodSpec", "FactorizationConfig", "Linear", "make_spec", "DENSE",
+    "KINDS", "SITES", "apply_butterfly", "apply_factor", "factor_shape",
+    "factor_strides", "fft_twiddles", "init_factors", "apply_flat_butterfly",
+    "butterfly_support_cols", "fwht",
+]

@@ -1,0 +1,217 @@
+"""The paper's Table-4 baseline compression methods + plain dense.
+
+Low-rank, Circulant and Fastfood (Le et al. 2013) — all as (init, apply,
+dense_equivalent) specs with the same interface as ButterflySpec/PixelflySpec
+so the SHL benchmark can sweep methods exactly like the paper does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utils import ilog2, next_pow2
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    in_features: int
+    out_features: int
+    bias: bool = True
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def dense_param_count(self) -> int:
+        return self.param_count()
+
+    def compression_ratio(self) -> float:
+        return 0.0
+
+    def init(self, key: jax.Array) -> dict:
+        std = (1.0 / self.in_features) ** 0.5
+        params = {
+            "w": jax.random.normal(key, (self.in_features, self.out_features), self.dtype) * std
+        }
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        y = x @ params["w"]
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        return params["w"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankSpec:
+    in_features: int
+    out_features: int
+    rank: int = 8
+    bias: bool = True
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        n = self.rank * (self.in_features + self.out_features)
+        return n + (self.out_features if self.bias else 0)
+
+    def dense_param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def compression_ratio(self) -> float:
+        return 1.0 - self.param_count() / self.dense_param_count()
+
+    def init(self, key: jax.Array) -> dict:
+        ku, kv = jax.random.split(key)
+        params = {
+            "u": jax.random.normal(ku, (self.in_features, self.rank), self.dtype)
+            * (1.0 / self.in_features) ** 0.5,
+            "v": jax.random.normal(kv, (self.rank, self.out_features), self.dtype)
+            * (1.0 / max(self.rank, 1)) ** 0.5,
+        }
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        y = (x @ params["u"]) @ params["v"]
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        return params["u"] @ params["v"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CirculantSpec:
+    """y = (C x)[:out] with C circulant; multiplication via FFT in O(N log N)."""
+
+    in_features: int
+    out_features: int
+    bias: bool = True
+    dtype: Any = jnp.float32
+
+    @property
+    def n_padded(self) -> int:
+        return next_pow2(max(self.in_features, self.out_features))
+
+    def param_count(self) -> int:
+        return self.n_padded + (self.out_features if self.bias else 0)
+
+    def dense_param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def compression_ratio(self) -> float:
+        return 1.0 - self.param_count() / self.dense_param_count()
+
+    def init(self, key: jax.Array) -> dict:
+        n = self.n_padded
+        params = {"c": jax.random.normal(key, (n,), self.dtype) * (1.0 / n) ** 0.5}
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        n = self.n_padded
+        pad = n - self.in_features
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        y = jnp.fft.irfft(jnp.fft.rfft(xp, axis=-1) * jnp.fft.rfft(params["c"]), n=n, axis=-1)
+        y = y[..., : self.out_features].astype(self.dtype)
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        eye = jnp.eye(self.in_features, dtype=self.dtype)
+        p = dict(params)
+        if self.bias:
+            p["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return self.apply(p, eye)
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh-Hadamard transform along the last axis (length 2^k), unnormalized."""
+    n = x.shape[-1]
+    batch = x.shape[:-1]
+    for s in [1 << i for i in range(ilog2(n))]:
+        xv = x.reshape(*batch, n // (2 * s), 2, s)
+        top = xv[..., 0, :] + xv[..., 1, :]
+        bot = xv[..., 0, :] - xv[..., 1, :]
+        x = jnp.stack([top, bot], axis=-2).reshape(*batch, n)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class FastfoodSpec:
+    """Fastfood (Le et al. 2013): V = (1/sigma*sqrt(n)) S H G Pi H B.
+
+    Three learnable diagonals (S, G, B), a fixed permutation Pi, two Hadamard
+    transforms.  O(N) params, O(N log N) compute.
+    """
+
+    in_features: int
+    out_features: int
+    bias: bool = True
+    dtype: Any = jnp.float32
+
+    @property
+    def n_padded(self) -> int:
+        return next_pow2(max(self.in_features, self.out_features))
+
+    def param_count(self) -> int:
+        return 3 * self.n_padded + (self.out_features if self.bias else 0)
+
+    def dense_param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def compression_ratio(self) -> float:
+        return 1.0 - self.param_count() / self.dense_param_count()
+
+    @property
+    def perm(self) -> np.ndarray:
+        """Fixed (non-learnable) permutation — deterministic in the layer
+        dims so it never enters params (int params break jax.grad) and stays
+        checkpoint-stable."""
+        return np.random.default_rng(self.n_padded * 7919 + self.in_features
+                                     ).permutation(self.n_padded)
+
+    def init(self, key: jax.Array) -> dict:
+        n = self.n_padded
+        ks, kg, kb = jax.random.split(key, 3)
+        params = {
+            "s": jax.random.normal(ks, (n,), self.dtype),
+            "g": jax.random.normal(kg, (n,), self.dtype),
+            "b": jnp.sign(jax.random.normal(kb, (n,), self.dtype)) + 0.0,
+        }
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        n = self.n_padded
+        pad = n - self.in_features
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        h = fwht(xp * params["b"])
+        h = jnp.take(h, jnp.asarray(self.perm), axis=-1)
+        h = fwht(h * params["g"])
+        y = (h * params["s"]) / n  # 1/n normalizes the two unnormalized FWHTs
+        y = y[..., : self.out_features]
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        eye = jnp.eye(self.in_features, dtype=self.dtype)
+        p = dict(params)
+        if self.bias:
+            p["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return self.apply(p, eye)

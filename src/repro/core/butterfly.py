@@ -1,0 +1,199 @@
+"""Butterfly factorization (Dao et al. 2019), TPU-native block variant.
+
+A butterfly matrix of size N (N = b * 2^k, block size b) is the product of
+``k = log2(N/b)`` *butterfly factors*.  The factor with block-stride ``s``
+mixes block ``j`` with block ``j ^ s`` through four learnable (b, b) blocks —
+at b=1 these are the classic 2x2 twiddles of the Cooley-Tukey FFT; at b>=128
+every factor is a batch of MXU-aligned (b, b) matmuls (the TPU adaptation of
+the paper's IPU schedule, see DESIGN.md section 2).
+
+Layout used throughout: for a factor with block-stride ``s`` the padded
+feature axis of x (N = nb * b elements, nb blocks) is viewed as
+
+    (j, c, t, b)  with  block_index = j * 2s + c * s + t,
+                        j in [nb / 2s),  c in {0, 1},  t in [s)
+
+and the factor weights have shape ``(nb/(2s), 2, 2, s, b, b)`` with
+
+    y[..., j, r, t, :] = sum_c  x[..., j, c, t, :] @ w[j, r, c, t].
+
+Parameters per factor: 2 * nb * b^2 = 2 * N * b, so a full butterfly holds
+``2 N b log2(N/b)`` parameters versus ``N^2`` dense (b=1: 2 N log2 N).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utils import bit_reversal_permutation, ilog2, padded_dim
+
+
+def factor_strides(num_blocks: int) -> list[int]:
+    """Block-strides of the factors, applied in order (FFT DIT order)."""
+    return [1 << i for i in range(ilog2(num_blocks))]
+
+
+def factor_shape(num_blocks: int, stride: int, block_size: int) -> tuple[int, ...]:
+    return (num_blocks // (2 * stride), 2, 2, stride, block_size, block_size)
+
+
+def apply_factor(x: jax.Array, w: jax.Array, stride: int, block_size: int) -> jax.Array:
+    """Apply one butterfly factor to the last axis of x (length nb * b)."""
+    n = x.shape[-1]
+    nb = n // block_size
+    batch_shape = x.shape[:-1]
+    xv = x.reshape(*batch_shape, nb // (2 * stride), 2, stride, block_size)
+    # x: (..., j, c, t, i), w: (j, r, c, t, i, o) -> y: (..., j, r, t, o)
+    y = jnp.einsum("...jcti,jrctio->...jrto", xv, w)
+    return y.reshape(*batch_shape, n)
+
+
+def init_factors(
+    key: jax.Array,
+    n_padded: int,
+    block_size: int,
+    dtype: Any = jnp.float32,
+    init: str = "variance_scaling",
+) -> list[jax.Array]:
+    """Initialize all factors so the product roughly preserves variance.
+
+    Each output block of a factor is the sum of 2 contributions, each a (b, b)
+    matmul, so per-factor weight variance 1/(2b) keeps activations unit-scale
+    through the whole product.
+    """
+    nb = n_padded // block_size
+    strides = factor_strides(nb)
+    keys = jax.random.split(key, max(len(strides), 1))
+    factors = []
+    for s, k in zip(strides, keys):
+        shape = factor_shape(nb, s, block_size)
+        if init == "variance_scaling":
+            # identity-perturbed: the butterfly is a product of log2(nb)
+            # factors (a deep linear net in one layer) — pure random factors
+            # train poorly with SGD; identity + noise keeps the product
+            # well-conditioned while staying fully expressive.
+            std = 0.4 * (1.0 / (2.0 * block_size)) ** 0.5
+            w = jax.random.normal(k, shape, dtype=dtype) * jnp.asarray(std, dtype)
+            eye = jnp.eye(block_size, dtype=dtype)
+            w = w.at[:, 0, 0].add(eye)
+            w = w.at[:, 1, 1].add(eye)
+        elif init == "identity":
+            eye = jnp.eye(block_size, dtype=dtype)
+            w = jnp.zeros(shape, dtype=dtype)
+            w = w.at[:, 0, 0].set(eye)
+            w = w.at[:, 1, 1].set(eye)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        factors.append(w)
+    return factors
+
+
+def apply_butterfly(
+    factors: Sequence[jax.Array],
+    x: jax.Array,
+    block_size: int,
+    permute: str = "none",
+) -> jax.Array:
+    """Apply the full butterfly product to the last axis of x (padded length)."""
+    n = x.shape[-1]
+    nb = n // block_size
+    if permute == "bitrev":
+        perm = np.asarray(bit_reversal_permutation(nb))
+        xb = x.reshape(*x.shape[:-1], nb, block_size)
+        x = xb[..., perm, :].reshape(x.shape)
+    elif permute != "none":
+        raise ValueError(f"unknown permute {permute!r}")
+    for s, w in zip(factor_strides(nb), factors):
+        x = apply_factor(x, w, s, block_size)
+    return x
+
+
+def fft_twiddles(n: int) -> list[jax.Array]:
+    """Factors (b=1, complex64) that make the butterfly equal the DFT matrix.
+
+    F_n @ x == apply_butterfly(fft_twiddles(n), x, 1, permute="bitrev")
+    This is the correctness anchor tying the learnable factorization back to
+    the Cooley-Tukey construction the paper builds on (its eq. 1 vs eq. 2).
+    """
+    factors = []
+    for s in factor_strides(n):
+        m = 2 * s
+        t = np.arange(s)
+        omega = np.exp(-2j * np.pi * t / m)
+        w = np.zeros((n // m, 2, 2, s), dtype=np.complex64)
+        w[:, 0, 0, :] = 1.0
+        w[:, 0, 1, :] = omega
+        w[:, 1, 0, :] = 1.0
+        w[:, 1, 1, :] = -omega
+        factors.append(jnp.asarray(w)[..., None, None])  # block_size=1 trailing dims
+    return factors
+
+
+@dataclasses.dataclass(frozen=True)
+class ButterflySpec:
+    """Configuration of one butterfly linear layer (replaces a dense (in, out))."""
+
+    in_features: int
+    out_features: int
+    block_size: int = 1
+    bias: bool = True
+    permute: str = "none"  # none | bitrev (block-level bit reversal)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_padded(self) -> int:
+        return padded_dim(max(self.in_features, self.out_features), self.block_size)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n_padded // self.block_size
+
+    @property
+    def num_factors(self) -> int:
+        return ilog2(self.num_blocks)
+
+    def param_count(self) -> int:
+        per_factor = 2 * self.n_padded * self.block_size
+        n = per_factor * self.num_factors
+        if self.bias:
+            n += self.out_features
+        return n
+
+    def dense_param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def compression_ratio(self) -> float:
+        """Fraction of dense parameters removed (paper reports 98.5%)."""
+        return 1.0 - self.param_count() / self.dense_param_count()
+
+    def init(self, key: jax.Array, init: str = "variance_scaling") -> dict:
+        kf, kb = jax.random.split(key)
+        params = {
+            "factors": init_factors(kf, self.n_padded, self.block_size, self.dtype, init)
+        }
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        """x: (..., in_features) -> (..., out_features)."""
+        n = self.n_padded
+        pad = n - self.in_features
+        if pad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        y = apply_butterfly(params["factors"], x, self.block_size, self.permute)
+        y = y[..., : self.out_features]
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        """Materialize the (in_features, out_features) dense matrix (oracle)."""
+        eye = jnp.eye(self.in_features, dtype=self.dtype)
+        no_bias = dict(params, bias=jnp.zeros((self.out_features,), self.dtype)) \
+            if self.bias else params
+        return self.apply(no_bias, eye)

@@ -1,0 +1,160 @@
+"""Unified linear-layer factory — the paper's technique as a composable feature.
+
+Every linear layer in the model stack goes through ``make_linear``; a
+``FactorizationConfig`` selects dense vs butterfly vs pixelfly vs the paper's
+Table-4 baselines, per call-site class.  This is what makes butterfly a
+first-class framework feature rather than a bolted-on layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import CirculantSpec, DenseSpec, FastfoodSpec, LowRankSpec
+from repro.core.butterfly import ButterflySpec
+from repro.core.pixelfly import PixelflySpec
+
+KINDS = ("dense", "butterfly", "pixelfly", "lowrank", "circulant", "fastfood")
+
+# call-sites a model can tag; config chooses which of them get factorized
+SITES = ("attn_qkv", "attn_out", "mlp", "expert", "head", "ssm_proj", "other")
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationConfig:
+    """Which factorization to use, and where.
+
+    kind: one of KINDS. block_size: butterfly/pixelfly block (1 = paper-faithful
+    2x2 twiddles; 128 = TPU/MXU-native). rank: pixelfly/lowrank rank.
+    sites: call-sites to factorize; everything else stays dense.
+    use_kernel: route butterfly/pixelfly applications through the Pallas
+    kernels (ops.py) instead of the jnp reference path.
+    """
+
+    kind: str = "dense"
+    block_size: int = 128
+    rank: int = 16
+    sites: tuple[str, ...] = ("mlp", "attn_qkv", "attn_out", "expert")
+    use_kernel: bool = False
+    permute: str = "none"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {self.kind!r}")
+        for s in self.sites:
+            if s not in SITES:
+                raise ValueError(f"unknown site {s!r}; valid: {SITES}")
+
+    def kind_for_site(self, site: str) -> str:
+        return self.kind if site in self.sites else "dense"
+
+
+DENSE = FactorizationConfig(kind="dense")
+
+
+def make_spec(
+    fc: FactorizationConfig,
+    in_features: int,
+    out_features: int,
+    site: str = "other",
+    bias: bool = False,
+    dtype: Any = jnp.float32,
+):
+    kind = fc.kind_for_site(site)
+    if kind == "dense":
+        return DenseSpec(in_features, out_features, bias, dtype)
+    if kind == "butterfly":
+        # block size can't exceed the padded dim; shrink for small layers
+        b = fc.block_size
+        while b > 1 and b * 2 > max(in_features, out_features):
+            b //= 2
+        return ButterflySpec(in_features, out_features, b, bias, fc.permute, dtype)
+    if kind == "pixelfly":
+        b = fc.block_size
+        while b > 1 and b * 2 > max(in_features, out_features):
+            b //= 2
+        return PixelflySpec(in_features, out_features, b, fc.rank, bias, dtype)
+    if kind == "lowrank":
+        return LowRankSpec(in_features, out_features, fc.rank, bias, dtype)
+    if kind == "circulant":
+        return CirculantSpec(in_features, out_features, bias, dtype)
+    if kind == "fastfood":
+        return FastfoodSpec(in_features, out_features, bias, dtype)
+    raise ValueError(kind)
+
+
+class Linear:
+    """A (possibly factorized) linear layer bound to a spec.
+
+    init(key) -> params pytree; (params, x) -> y.  ``batch_dims`` adds leading
+    parameter batch axes (e.g. MoE experts): init/apply are vmapped.
+    """
+
+    def __init__(
+        self,
+        fc: FactorizationConfig,
+        in_features: int,
+        out_features: int,
+        site: str = "other",
+        bias: bool = False,
+        dtype: Any = jnp.float32,
+        batch_dims: tuple[int, ...] = (),
+    ):
+        self.spec = make_spec(fc, in_features, out_features, site, bias, dtype)
+        self.fc = fc
+        self.site = site
+        self.batch_dims = tuple(batch_dims)
+
+    # -- params -----------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        if not self.batch_dims:
+            return self.spec.init(key)
+        init = self.spec.init
+        for _ in self.batch_dims:
+            init = jax.vmap(init)
+        nkeys = 1
+        for d in self.batch_dims:
+            nkeys *= d
+        keys = jax.random.split(key, nkeys).reshape(*self.batch_dims, 2)
+        return init(keys)
+
+    def param_count(self) -> int:
+        n = self.spec.param_count()
+        for d in self.batch_dims:
+            n *= d
+        return n
+
+    def dense_param_count(self) -> int:
+        n = self.spec.dense_param_count()
+        for d in self.batch_dims:
+            n *= d
+        return n
+
+    # -- forward ----------------------------------------------------------
+    def _apply_one(self, params: dict, x: jax.Array) -> jax.Array:
+        if isinstance(self.spec, (ButterflySpec, PixelflySpec)) and x.ndim == 3:
+            # distributed butterfly schedule: tokens shard over BOTH mesh
+            # axes, features stay full — factor weights (data-sharded or
+            # replicated) then apply without inter-factor activation
+            # resharding (no-op without an installed mesh)
+            from repro.parallel import context as pctx
+            x = pctx.constrain(x, "dp", "tp", None)
+        if self.fc.use_kernel and isinstance(self.spec, ButterflySpec) \
+                and self.spec.block_size >= 8:
+            from repro.kernels.butterfly import ops as bops
+            return bops.butterfly_linear(self.spec, params, x)
+        if self.fc.use_kernel and isinstance(self.spec, PixelflySpec) \
+                and self.spec.block_size >= 8:
+            from repro.kernels.pixelfly import ops as pops
+            return pops.pixelfly_linear(self.spec, params, x)
+        return self.spec.apply(params, x)
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        """params has leading batch_dims; x has matching leading dims."""
+        apply = self._apply_one
+        for _ in self.batch_dims:
+            apply = jax.vmap(apply)
+        return apply(params, x)

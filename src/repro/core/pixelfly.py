@@ -1,0 +1,136 @@
+"""Pixelated butterfly (Chen et al. 2021) — flat block butterfly + low rank.
+
+Flat butterfly replaces the *product* of butterfly factors by a *sum* with a
+residual connection: B ~= I + sum_i (B_i - I).  The support of that sum is a
+fixed block-sparse pattern: block-row ``r`` holds a nonzero (b, b) block at
+block-column ``c`` iff ``c == r`` or ``c == r ^ 2^i`` (XOR, one bit flipped).
+That gives ``k = 1 + log2(nb)`` blocks per block-row, i.e. O(N log N) params,
+but — unlike the product form — a single fused block-sparse matmul.
+
+Pixelfly = flat block butterfly + a rank-``r`` term:  y = x W_bsr^T-like + (x U) V.
+
+On the IPU the paper found this *blocked* variant loses to plain butterfly
+(0.53x); on a dense processor it wins.  The TPU is a dense processor, so this
+is the variant we expect to win on the target (validated in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utils import ilog2, padded_dim
+
+
+def butterfly_support_cols(num_blocks: int) -> np.ndarray:
+    """(nb, k) int32: for each block-row, the contributing block-columns.
+
+    Column 0 is the diagonal; column 1+i is row ^ 2^i.  Pure XOR structure —
+    computable inside a Pallas index_map without gather tables.
+    """
+    k = 1 + ilog2(num_blocks)
+    rows = np.arange(num_blocks)[:, None]
+    cols = np.empty((num_blocks, k), dtype=np.int32)
+    cols[:, 0] = rows[:, 0]
+    for i in range(k - 1):
+        cols[:, 1 + i] = rows[:, 0] ^ (1 << i)
+    return cols
+
+
+def apply_flat_butterfly(
+    w_blocks: jax.Array, x: jax.Array, block_size: int
+) -> jax.Array:
+    """Block-sparse matmul with butterfly support (jnp reference path).
+
+    w_blocks: (nb, k, b, b) — w_blocks[r, i] maps input block cols[r, i] to
+    output block r.  x: (..., nb * b).
+    """
+    nb, k = w_blocks.shape[0], w_blocks.shape[1]
+    cols = jnp.asarray(butterfly_support_cols(nb))
+    xb = x.reshape(*x.shape[:-1], nb, block_size)
+    xg = xb[..., cols, :]  # (..., nb, k, b)
+    y = jnp.einsum("...rki,rkio->...ro", xg, w_blocks)
+    return y.reshape(*x.shape[:-1], nb * block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PixelflySpec:
+    """Pixelfly linear layer: flat block butterfly + low-rank + bias."""
+
+    in_features: int
+    out_features: int
+    block_size: int = 32
+    rank: int = 8  # low-rank term size (paper: "low rank size")
+    bias: bool = True
+    dtype: Any = jnp.float32
+
+    @property
+    def n_padded(self) -> int:
+        return padded_dim(max(self.in_features, self.out_features), self.block_size)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.n_padded // self.block_size
+
+    @property
+    def nnz_per_row(self) -> int:
+        return 1 + ilog2(self.num_blocks)
+
+    def param_count(self) -> int:
+        n = self.num_blocks * self.nnz_per_row * self.block_size**2
+        n += self.rank * (self.in_features + self.out_features)
+        if self.bias:
+            n += self.out_features
+        return n
+
+    def dense_param_count(self) -> int:
+        return self.in_features * self.out_features + (self.out_features if self.bias else 0)
+
+    def compression_ratio(self) -> float:
+        return 1.0 - self.param_count() / self.dense_param_count()
+
+    def init(self, key: jax.Array) -> dict:
+        kb, ku, kv, _ = jax.random.split(key, 4)
+        nb, k, b = self.num_blocks, self.nnz_per_row, self.block_size
+        std = (1.0 / (k * b)) ** 0.5
+        params = {
+            "blocks": jax.random.normal(kb, (nb, k, b, b), self.dtype) * std,
+            "u": jax.random.normal(ku, (self.in_features, self.rank), self.dtype)
+            * (1.0 / self.in_features) ** 0.5,
+            "v": jax.random.normal(kv, (self.rank, self.out_features), self.dtype)
+            * (1.0 / max(self.rank, 1)) ** 0.5,
+        }
+        if self.bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array:
+        n = self.n_padded
+        pad = n - self.in_features
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+        y = apply_flat_butterfly(params["blocks"], xp, self.block_size)
+        y = y[..., : self.out_features]
+        if self.rank > 0:
+            y = y + (x @ params["u"]) @ params["v"]
+        if self.bias:
+            y = y + params["bias"]
+        return y
+
+    def dense_equivalent(self, params: dict) -> jax.Array:
+        eye = jnp.eye(self.in_features, dtype=self.dtype)
+        p = dict(params)
+        if self.bias:
+            p["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return self.apply(p, eye)
+
+    def dense_support(self) -> np.ndarray:
+        """(n_padded, n_padded) 0/1 mask of the flat-butterfly support."""
+        nb, b = self.num_blocks, self.block_size
+        cols = butterfly_support_cols(nb)
+        mask = np.zeros((nb, nb), dtype=np.float32)
+        for r in range(nb):
+            mask[r, cols[r]] = 1.0
+        return np.kron(mask, np.ones((b, b), dtype=np.float32))

@@ -1,0 +1,39 @@
+"""Small shared helpers for the factorization core."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    if x < 1:
+        raise ValueError(f"next_pow2 needs x >= 1, got {x}")
+    return 1 << (x - 1).bit_length()
+
+
+def is_pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+def ilog2(x: int) -> int:
+    if not is_pow2(x):
+        raise ValueError(f"ilog2 needs a power of two, got {x}")
+    return x.bit_length() - 1
+
+
+def bit_reversal_permutation(n: int) -> np.ndarray:
+    """Indices of the bit-reversal permutation of length n (n a power of 2)."""
+    bits = ilog2(n)
+    idx = np.arange(n)
+    out = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        out |= ((idx >> b) & 1) << (bits - 1 - b)
+    return out
+
+
+def padded_dim(features: int, block_size: int) -> int:
+    """Smallest b * 2^k >= features (the butterfly working dimension)."""
+    if features <= block_size:
+        return block_size
+    blocks = -(-features // block_size)  # ceil div
+    return block_size * next_pow2(blocks)

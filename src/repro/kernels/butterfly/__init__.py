@@ -1,0 +1,6 @@
+from repro.kernels.butterfly.kernel import (
+    butterfly_factor_apply,
+    fused_butterfly_apply,
+    pack_factors,
+)
+from repro.kernels.butterfly.ops import butterfly_linear, fused_apply

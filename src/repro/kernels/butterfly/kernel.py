@@ -1,0 +1,165 @@
+"""Fused block-butterfly Pallas TPU kernel.
+
+The paper's IPU win comes from keeping the whole working set in on-chip SRAM.
+The TPU analogue: keep the activation tile **VMEM-resident across all
+log2(nb) butterfly factors** — one HBM read of x, one HBM write of y, and the
+(tiny, O(N b log nb)) factor weights streamed factor-by-factor through the
+grid pipeline.  The unfused jnp path instead round-trips (TM, N) activations
+to HBM once per factor, i.e. ~log2(nb) x more HBM traffic.
+
+Grid: (num_batch_tiles, L) with the factor axis innermost ("arbitrary"
+semantics).  A VMEM scratch holds the activation tile between factor steps;
+factor weights arrive packed as (L, nb, 2, b, b):
+
+    w_packed[l, o, c] = W_l[j, r, c, t]   with  o = j*2s + r*s + t,  s = 2^l
+
+so output block ``o`` of factor ``l`` is x_block(o & ~s) @ w[o, 0] +
+x_block(o | s) @ w[o, 1].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.utils import ilog2
+
+
+def pack_factors(factors, num_blocks: int, block_size: int) -> jax.Array:
+    """Stack per-stride factors (J,2,2,S,b,b) into (L, nb, 2, b, b)."""
+    packed = []
+    for w in factors:
+        # (j, r, c, t, i, o) -> (j, r, t, c, i, o); row-major (j,r,t) == out block
+        wt = jnp.transpose(w, (0, 1, 3, 2, 4, 5))
+        packed.append(wt.reshape(num_blocks, 2, block_size, block_size))
+    return jnp.stack(packed)
+
+
+def _fused_kernel(x_ref, w_ref, o_ref, scratch, *, num_factors: int, block_size: int):
+    l = pl.program_id(1)
+    tm, n = x_ref.shape
+    nb = n // block_size
+
+    @pl.when(l == 0)
+    def _load():
+        scratch[...] = x_ref[...].astype(scratch.dtype)
+
+    # One static branch per factor: stride is a Python constant inside each,
+    # so the strided block view is a static reshape (MXU-friendly dot per pair).
+    for lf in range(num_factors):
+        @pl.when(l == lf)
+        def _apply(lf=lf):
+            s = 1 << lf
+            j = nb // (2 * s)
+            cur = scratch[...].reshape(tm, j, 2, s, block_size)        # (m,j,c,t,i)
+            w = w_ref[0].reshape(j, 2, s, 2, block_size, block_size)   # (j,r,t,c,i,o)
+            y = jnp.einsum(
+                "mjcti,jrtcio->mjrto", cur, w,
+                preferred_element_type=jnp.float32,
+            )
+            scratch[...] = y.reshape(tm, n).astype(scratch.dtype)
+
+    @pl.when(l == num_factors - 1)
+    def _store():
+        o_ref[...] = scratch[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "batch_tile", "interpret")
+)
+def fused_butterfly_apply(
+    x: jax.Array,
+    w_packed: jax.Array,
+    *,
+    block_size: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, N) with N = nb * b, nb a power of two.  Returns (M, N).
+
+    M must be a multiple of batch_tile (ops.py pads).
+    """
+    m, n = x.shape
+    num_factors, nb = w_packed.shape[0], w_packed.shape[1]
+    assert nb * block_size == n, (nb, block_size, n)
+    assert m % batch_tile == 0, (m, batch_tile)
+    assert 1 << ilog2(nb) == nb
+
+    grid = (m // batch_tile, num_factors)
+    kernel = functools.partial(
+        _fused_kernel, num_factors=num_factors, block_size=block_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch_tile, n), lambda i, l: (i, 0)),
+            pl.BlockSpec(
+                (1, nb, 2, block_size, block_size), lambda i, l: (l, 0, 0, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, n), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((batch_tile, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w_packed)
+
+
+def _single_factor_kernel(x_ref, w_ref, o_ref):
+    """Unfused single-factor kernel (one grid step mixes one block pair)."""
+    x = x_ref[:, 0, :, 0, :]  # (TM, c=2, b)
+    w = w_ref[0, :, :, 0]     # (r, c, i, o)
+    y = jnp.einsum("mci,rcio->mro", x, w, preferred_element_type=jnp.float32)
+    o_ref[:, 0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "block_size", "batch_tile", "interpret")
+)
+def butterfly_factor_apply(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int,
+    block_size: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply ONE butterfly factor.  x: (M, N); w: (J, 2, 2, S, b, b)."""
+    m, n = x.shape
+    nb = n // block_size
+    j, s = nb // (2 * stride), stride
+    assert w.shape == (j, 2, 2, s, block_size, block_size)
+    assert m % batch_tile == 0
+
+    # view x as (M, J, 2, S, b) without data movement; grid over (m, j, t)
+    xv = x.reshape(m, j, 2, s, block_size)
+    grid = (m // batch_tile, j, s)
+    out = pl.pallas_call(
+        _single_factor_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (batch_tile, 1, 2, 1, block_size), lambda i, jj, t: (i, jj, 0, t, 0)
+            ),
+            pl.BlockSpec(
+                (1, 2, 2, 1, block_size, block_size),
+                lambda i, jj, t: (jj, 0, 0, t, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (batch_tile, 1, 2, 1, block_size), lambda i, jj, t: (i, jj, 0, t, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, j, 2, s, block_size), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(xv, w)
+    return out.reshape(m, n)

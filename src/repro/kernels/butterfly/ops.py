@@ -1,0 +1,79 @@
+"""jit'd public wrappers around the butterfly Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True``; on TPU they
+compile natively.  ``butterfly_linear`` is what ``repro.core.Linear`` calls
+when ``FactorizationConfig.use_kernel`` is set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.butterfly import ButterflySpec
+from repro.core.utils import bit_reversal_permutation
+from repro.kernels.butterfly.kernel import fused_butterfly_apply, pack_factors
+
+import numpy as np
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_batch_tile(m: int, n: int, dtype_bytes: int = 4) -> int:
+    """Pick TM so that 2 activation tiles + one packed factor fit ~12MB VMEM."""
+    budget = 12 * 2**20
+    for tm in (512, 256, 128, 64, 32, 16, 8):
+        if 2 * tm * n * dtype_bytes <= budget:
+            return tm
+    return 8
+
+
+def fused_apply(
+    x: jax.Array,
+    factors,
+    *,
+    block_size: int,
+    interpret: bool | None = None,
+    batch_tile: int | None = None,
+) -> jax.Array:
+    """Apply the full butterfly product to the last axis via the fused kernel.
+
+    x: (..., N) with N = nb * block_size.  Handles batch flattening + padding.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.shape[-1]
+    nb = n // block_size
+    w_packed = pack_factors(factors, nb, block_size)
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    xf = x.reshape(m, n)
+    tm = batch_tile or _pick_batch_tile(m, n)
+    tm = min(tm, max(8, m))
+    pad = (-m) % tm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    y = fused_butterfly_apply(
+        xf, w_packed, block_size=block_size, batch_tile=tm, interpret=interpret
+    )
+    if pad:
+        y = y[:m]
+    return y.reshape(*lead, n)
+
+
+def butterfly_linear(spec: ButterflySpec, params: dict, x: jax.Array) -> jax.Array:
+    """Kernel-backed equivalent of ``ButterflySpec.apply``."""
+    n = spec.n_padded
+    pad = n - spec.in_features
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    if spec.permute == "bitrev":
+        perm = np.asarray(bit_reversal_permutation(spec.num_blocks))
+        xb = x.reshape(*x.shape[:-1], spec.num_blocks, spec.block_size)
+        x = xb[..., perm, :].reshape(x.shape)
+    y = fused_apply(x, params["factors"], block_size=spec.block_size)
+    y = y[..., : spec.out_features]
+    if spec.bias:
+        y = y + params["bias"]
+    return y

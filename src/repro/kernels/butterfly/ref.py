@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the butterfly kernels (no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.butterfly import apply_butterfly, apply_factor
+from repro.core.utils import ilog2
+
+
+def fused_butterfly_apply_ref(
+    x: jax.Array, factors, *, block_size: int
+) -> jax.Array:
+    """Reference for kernel.fused_butterfly_apply (takes the UNPACKED factors)."""
+    return apply_butterfly(factors, x, block_size, permute="none")
+
+
+def butterfly_factor_apply_ref(
+    x: jax.Array, w: jax.Array, *, stride: int, block_size: int
+) -> jax.Array:
+    return apply_factor(x, w, stride, block_size)
+
+
+def unpack_factors(w_packed: jax.Array, block_size: int):
+    """Inverse of kernel.pack_factors, for round-trip tests."""
+    num_factors, nb = w_packed.shape[0], w_packed.shape[1]
+    assert ilog2(nb) == num_factors
+    factors = []
+    for l in range(num_factors):
+        s = 1 << l
+        j = nb // (2 * s)
+        wt = w_packed[l].reshape(j, 2, s, 2, block_size, block_size)
+        factors.append(jnp.transpose(wt, (0, 1, 3, 2, 4, 5)))
+    return factors

@@ -1,0 +1,2 @@
+from repro.kernels.pixelfly.kernel import pixelfly_bsmm
+from repro.kernels.pixelfly.ops import bsmm, pixelfly_linear

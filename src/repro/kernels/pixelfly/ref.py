@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the pixelfly block-sparse kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.pixelfly import apply_flat_butterfly
+
+
+def pixelfly_bsmm_ref(x: jax.Array, w_blocks: jax.Array, *, block_size: int) -> jax.Array:
+    return apply_flat_butterfly(w_blocks, x, block_size)

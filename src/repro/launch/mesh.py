@@ -1,0 +1,29 @@
+"""Production mesh construction (spec'd API — a FUNCTION, so importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips.
+
+    Axes: data (DP), model (TP/EP/SP); the pod axis is pure DP across pods
+    (gradient all-reduce crosses the inter-pod links only once per step).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh made by make_production_mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for in-process multi-device tests (host platform devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

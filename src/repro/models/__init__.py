@@ -1,0 +1,9 @@
+from repro.models import attention, layers, mlp, model, moe, ssm, xlstm
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    lm_loss,
+    param_count,
+)

@@ -1,0 +1,236 @@
+"""GQA attention: fused (factorizable) QKV, RoPE/M-RoPE, qk-norm, chunked
+flash-style training attention, and KV-cache decode."""
+from __future__ import annotations
+
+from typing import Any
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import Linear
+from repro.models.layers import apply_mrope, apply_rope, init_rms_norm, rms_norm
+from repro.parallel import context as pctx
+
+NEG_INF = -1e30
+
+
+def _linears(cfg: ModelConfig):
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    qkv_out = (hq + 2 * hkv) * hd
+    qkv = Linear(cfg.fact, cfg.d_model, qkv_out, site="attn_qkv",
+                 bias=cfg.qkv_bias, dtype=cfg.param_dtype)
+    out = Linear(cfg.fact, hq * hd, cfg.d_model, site="attn_out",
+                 bias=False, dtype=cfg.param_dtype)
+    return qkv, out
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig) -> dict:
+    qkv, out = _linears(cfg)
+    k1, k2 = jax.random.split(key)
+    params = {"qkv": qkv.init(k1), "out": out.init(k2)}
+    if cfg.qk_norm:
+        params["q_norm"] = init_rms_norm(cfg.hd, cfg.param_dtype)
+        params["k_norm"] = init_rms_norm(cfg.hd, cfg.param_dtype)
+    return params
+
+
+def _project_qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """x: (B, S, d) -> q (B,S,Hq,hd), k,v (B,S,Hkv,hd), roped + normed."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    qkv_lin, _ = _linears(cfg)
+    qkv = qkv_lin(params["qkv"], x)  # (B, S, (hq+2hkv)*hd)
+    q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    # head-parallel over "tp" (Megatron); kv heads fall back to replicated
+    # when fewer than the tp degree (constrain() guards divisibility)
+    q = pctx.constrain(q.reshape(b, s, hq, hd), "dp", None, "tp", None)
+    k = pctx.constrain(k.reshape(b, s, hkv, hd), "dp", None, "tp", None)
+    v = pctx.constrain(v.reshape(b, s, hkv, hd), "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _direct_attention(q, k, v):
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qh = (q * hd ** -0.5).reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def _flash_forward(q, k, v, chunk: int):
+    """Returns (o, lse).  Never materializes (S, S); memory per step is the
+    (B,kv,g,S,chunk) score tile."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qh = (q * hd ** -0.5).reshape(b, s, hkv, g, hd)
+    nch = s // chunk
+    kc = k.reshape(b, nch, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nch, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,kv,g,S), (B,kv,g,S), (B,S,kv,g,hd)
+        i, (kb, vb) = inp
+        scores = jnp.einsum("bqkgh,bckh->bkgqc", qh.astype(jnp.float32),
+                            kb.astype(jnp.float32))  # (B,kv,g,S,chunk)
+        kv_pos = i * chunk + jnp.arange(chunk)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bkgqc,bckh->bqkgh", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nch), (kc, vc)))
+    o = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,kv,g,S)
+    return o.reshape(b, s, hq, hd).astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_attention(q, k, v, chunk: int):
+    return _flash_forward(q, k, v, chunk)[0]
+
+
+def _flash_fwd_rule(q, k, v, chunk: int):
+    o, lse = _flash_forward(q, k, v, chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(chunk: int, res, do):
+    """FlashAttention backward: recompute score tiles per kv chunk from the
+    saved lse — residuals are O(S) (q, k, v, o, lse), never per-chunk
+    accumulators (which an autodiff'd scan would stash: ~nch x acc bytes)."""
+    q, k, v, o, lse = res
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = hd ** -0.5
+    qh = (q * scale).reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    doh = do.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    # D_i = rowsum(do * o)
+    dsum = jnp.einsum("bqkgh,bqkgh->bkgq", doh,
+                      o.reshape(b, s, hkv, g, hd).astype(jnp.float32))
+    nch = s // chunk
+    kc = k.reshape(b, nch, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nch, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s)
+
+    def body(dq_acc, inp):
+        i, (kb, vb) = inp
+        scores = jnp.einsum("bqkgh,bckh->bkgqc", qh, kb.astype(jnp.float32))
+        kv_pos = i * chunk + jnp.arange(chunk)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jnp.exp(scores - lse[..., None])  # (B,kv,g,S,chunk)
+        dv = jnp.einsum("bkgqc,bqkgh->bckh", p, doh)
+        dp = jnp.einsum("bqkgh,bckh->bkgqc", doh, vb.astype(jnp.float32))
+        ds = p * (dp - dsum[..., None])
+        dk = jnp.einsum("bkgqc,bqkgh->bckh", ds, qh) * 1.0
+        dq_acc = dq_acc + jnp.einsum("bkgqc,bckh->bqkgh", ds,
+                                     kb.astype(jnp.float32))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nch), (kc, vc)))
+    dq = (dq * scale).reshape(b, s, hq, hd).astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, s, hkv, hd).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, s, hkv, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, chunk: int
+) -> jax.Array:
+    """Flash-style causal attention: scan over KV chunks with running
+    (max, sum, acc) so the (S, S) score matrix is never materialized;
+    custom VJP keeps backward residuals at O(S) (FlashAttention-2 style).
+
+    q: (B, S, Hq, hd); k, v: (B, S, Hkv, hd) with Hq % Hkv == 0.
+    """
+    s = q.shape[1]
+    if s <= 2 * chunk:  # small enough: direct masked attention
+        return _direct_attention(q, k, v)
+    assert s % chunk == 0, (s, chunk)
+    return _flash_attention(q, k, v, chunk)
+
+
+def attn_forward(
+    params: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Training/prefill forward.  Returns (out (B,S,d), cache {k, v})."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    o = chunked_causal_attention(q, k, v, cfg.attn_chunk)
+    o = pctx.constrain(o, "dp", None, "tp", None)
+    _, out_lin = _linears(cfg)
+    y = out_lin(params["out"], o.reshape(*x.shape[:2], -1))
+    cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+    return y, cache
+
+
+def attn_decode(
+    params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Single-token decode.  x: (B, 1, d); cache k/v: (B, T, Hkv, hd);
+    pos: (B,) current position (tokens written at cache[pos])."""
+    b = x.shape[0]
+    positions = pos[:, None]  # (B, 1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    t = cache["k"].shape[1]
+    onehot = jax.nn.one_hot(pos, t, dtype=cache["k"].dtype)  # (B, T)
+    k = cache["k"] + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
+    v = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
+
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    g = hq // hkv
+    qh = (q * hd ** -0.5).reshape(b, 1, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qh.astype(jnp.float32),
+                        k.astype(jnp.float32))  # (B,kv,g,1,T)
+    valid = jnp.arange(t)[None, :] <= pos[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
+    _, out_lin = _linears(cfg)
+    y = out_lin(params["out"], o)
+    return y, {"k": k, "v": v}
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), cfg.dtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), cfg.dtype),
+    }

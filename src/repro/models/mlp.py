@@ -1,0 +1,45 @@
+"""SwiGLU MLP — every matmul goes through the factorization registry."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import FactorizationConfig, Linear
+from repro.parallel import context as pctx
+
+
+def _linears(cfg: ModelConfig, d_ff: int, site: str = "mlp",
+             batch_dims: tuple[int, ...] = ()):
+    gate = Linear(cfg.fact, cfg.d_model, d_ff, site=site,
+                  dtype=cfg.param_dtype, batch_dims=batch_dims)
+    up = Linear(cfg.fact, cfg.d_model, d_ff, site=site,
+                dtype=cfg.param_dtype, batch_dims=batch_dims)
+    down = Linear(cfg.fact, d_ff, cfg.d_model, site=site,
+                  dtype=cfg.param_dtype, batch_dims=batch_dims)
+    return gate, up, down
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
+             site: str = "mlp", batch_dims: tuple[int, ...] = ()) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    gate, up, down = _linears(cfg, d_ff, site, batch_dims)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": gate.init(k1), "up": up.init(k2), "down": down.init(k3)}
+
+
+def mlp_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                d_ff: int | None = None, site: str = "mlp",
+                batch_dims: tuple[int, ...] = ()) -> jax.Array:
+    d_ff = d_ff or cfg.d_ff
+    gate, up, down = _linears(cfg, d_ff, site, batch_dims)
+    g = gate(params["gate"], x)
+    u = up(params["up"], x)
+    if not batch_dims and g.ndim == 3:
+        # Megatron TP: the hidden dim shards over "tp" (col-parallel gate/up,
+        # row-parallel down); without this GSPMD drifts to pure-FSDP and
+        # all-reduces full weight gradients every microbatch.
+        g = pctx.constrain(g, "dp", None, "tp")
+        u = pctx.constrain(u, "dp", None, "tp")
+    h = jax.nn.silu(g) * u
+    return down(params["down"], h)

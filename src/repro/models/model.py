@@ -1,0 +1,242 @@
+"""LM assembly: embedding -> scan over layer *periods* -> norm -> head.
+
+``cfg.pattern`` is a period of (mixer, ffn) slots; the layer stack is
+``num_periods`` repetitions, scanned with stacked parameters so the HLO holds
+ONE period body regardless of depth (essential for 80-layer dry-run compiles).
+Every linear goes through the factorization registry — the paper's butterfly
+/pixelfly compression is a config flag away for any architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import Linear
+from repro.models import attention, moe as moe_lib, ssm, xlstm
+from repro.models.layers import init_embedding, init_rms_norm, rms_norm
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.parallel import context as pctx
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------- init ------
+
+
+def _head_linear(cfg: ModelConfig) -> Linear:
+    return Linear(cfg.fact, cfg.d_model, cfg.padded_vocab, site="head",
+                  dtype=cfg.param_dtype)
+
+
+def _init_slot(key: jax.Array, cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": init_rms_norm(cfg.d_model, cfg.param_dtype)}
+    if mixer == "attn":
+        p["mixer"] = attention.init_attn(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg)
+    elif mixer == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(k1, cfg)
+    elif mixer == "slstm":
+        p["mixer"] = xlstm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = init_rms_norm(cfg.d_model, cfg.param_dtype)
+        p["ffn"] = (moe_lib.init_moe(k2, cfg) if ffn == "moe"
+                    else init_mlp(k2, cfg))
+    return p
+
+
+def _init_period(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"slot{i}": _init_slot(keys[i], cfg, m, f)
+        for i, (m, f) in enumerate(cfg.pattern)
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, kp, kh = jax.random.split(key, 3)
+    pkeys = jax.random.split(kp, cfg.num_periods)
+    params: dict[str, Any] = {
+        "periods": jax.vmap(lambda k: _init_period(k, cfg))(pkeys),
+        "final_norm": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "head": _head_linear(cfg).init(kh),
+    }
+    if cfg.input_mode == "tokens":
+        params["embed"] = init_embedding(ke, cfg.padded_vocab, cfg.d_model,
+                                         cfg.param_dtype)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    return sum(int(jnp.prod(jnp.asarray(x.shape))) if x.shape else 1
+               for x in jax.tree.leaves(shapes))
+
+
+# ------------------------------------------------------------ forward ----
+
+
+def _slot_forward(p: dict, cfg: ModelConfig, mixer: str, ffn: str,
+                  x: jax.Array, positions: jax.Array):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        h, cache = attention.attn_forward(p["mixer"], cfg, h, positions)
+    elif mixer == "mamba":
+        h, cache = ssm.mamba_forward(p["mixer"], cfg, h)
+    elif mixer == "mlstm":
+        h, cache = xlstm.mlstm_forward(p["mixer"], cfg, h)
+    elif mixer == "slstm":
+        h, cache = xlstm.slstm_forward(p["mixer"], cfg, h)
+    x = x + h
+    if ffn != "none":
+        g = rms_norm(x, p["norm2"], cfg.norm_eps)
+        g = (moe_lib.moe_forward(p["ffn"], cfg, g) if ffn == "moe"
+             else mlp_forward(p["ffn"], cfg, g))
+        x = x + g
+    return x, cache
+
+
+def _slot_decode(p: dict, cfg: ModelConfig, mixer: str, ffn: str,
+                 x: jax.Array, cache: dict, pos: jax.Array):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        h, nc = attention.attn_decode(p["mixer"], cfg, h, cache, pos)
+    elif mixer == "mamba":
+        h, nc = ssm.mamba_decode(p["mixer"], cfg, h, cache, pos)
+    elif mixer == "mlstm":
+        h, nc = xlstm.mlstm_decode(p["mixer"], cfg, h, cache, pos)
+    elif mixer == "slstm":
+        h, nc = xlstm.slstm_decode(p["mixer"], cfg, h, cache, pos)
+    x = x + h
+    if ffn != "none":
+        g = rms_norm(x, p["norm2"], cfg.norm_eps)
+        g = (moe_lib.moe_forward(p["ffn"], cfg, g) if ffn == "moe"
+             else mlp_forward(p["ffn"], cfg, g))
+        x = x + g
+    return x, nc
+
+
+def cast_params(params, dtype):
+    """Cast floating-point params to the compute dtype (bf16 matmuls on TPU);
+    norm scales stay f32 inside rms_norm, which upcasts internally."""
+    def cast(x):
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+    return jax.tree.map(cast, params)
+
+
+def _embed_inputs(params: dict, cfg: ModelConfig, inputs: jax.Array) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        tok = jnp.clip(inputs, 0, cfg.vocab_size - 1)
+        x = jnp.take(params["embed"], tok, axis=0)
+    else:
+        x = inputs  # precomputed frontend embeddings (B, S, d)
+    return x.astype(cfg.dtype)
+
+
+def forward(params: dict, cfg: ModelConfig, inputs: jax.Array,
+            positions: jax.Array | None = None,
+            return_caches: bool = False):
+    """Full-sequence forward.  inputs: (B, S) tokens or (B, S, d) embeddings.
+
+    Returns logits (B, S, padded_vocab) [+ caches stacked (P, ...)].
+    """
+    b, s = inputs.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    params = cast_params(params, cfg.dtype)
+    x = _embed_inputs(params, cfg, inputs)
+    # sequence-parallel residual stream: (B, S, d) sharded (dp, tp, -) between
+    # blocks; GSPMD all-gathers S at attention and reduce-scatters after.
+    x = pctx.constrain(x, "dp", "tp", None)
+
+    def period_body(x, pp):
+        def inner(x):
+            caches = []
+            for i, (m, f) in enumerate(cfg.pattern):
+                x, cache = _slot_forward(pp[f"slot{i}"], cfg, m, f, x, positions)
+                x = pctx.constrain(x, "dp", "tp", None)
+                caches.append(cache)
+            return x, tuple(caches)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        x, caches = inner(x)
+        return x, caches
+
+    x, caches = jax.lax.scan(period_body, x, params["periods"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_linear(cfg)(params["head"], x)
+    if return_caches:
+        return logits, caches
+    return logits
+
+
+def decode_step(params: dict, cfg: ModelConfig, inputs: jax.Array,
+                caches, pos: jax.Array):
+    """One decode step.  inputs: (B, 1) tokens or (B, 1, d) embeddings;
+    caches: pytree stacked over periods; pos: (B,) int32.
+    Returns (logits (B, 1, padded_vocab), new caches)."""
+    params = cast_params(params, cfg.dtype)
+    x = _embed_inputs(params, cfg, inputs)
+
+    def period_body(x, inp):
+        pp, pcaches = inp
+        new = []
+        for i, (m, f) in enumerate(cfg.pattern):
+            x, nc = _slot_decode(pp[f"slot{i}"], cfg, m, f, x, pcaches[i], pos)
+            new.append(nc)
+        return x, tuple(new)
+
+    x, new_caches = jax.lax.scan(period_body, x, (params["periods"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_linear(cfg)(params["head"], x)
+    return logits, new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode caches for the whole stack, stacked over periods."""
+    def one_period():
+        caches = []
+        for m, _ in cfg.pattern:
+            if m == "attn":
+                caches.append(attention.init_attn_cache(cfg, batch, max_len))
+            elif m == "mamba":
+                caches.append(ssm.init_mamba_cache(cfg, batch))
+            elif m == "mlstm":
+                caches.append(xlstm.init_mlstm_cache(cfg, batch))
+            elif m == "slstm":
+                caches.append(xlstm.init_slstm_cache(cfg, batch))
+        return tuple(caches)
+
+    one = one_period()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_periods,) + x.shape), one)
+
+
+# ------------------------------------------------------------- loss ------
+
+
+def lm_loss(params: dict, cfg: ModelConfig, inputs: jax.Array,
+            labels: jax.Array, positions: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross-entropy (+ z-loss), pad-vocab masked."""
+    logits = forward(params, cfg, inputs, positions)
+    logits = logits.astype(jnp.float32)
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], NEG_INF, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    if cfg.z_loss:
+        ce = ce + cfg.z_loss * (lse ** 2).mean()
+    return ce

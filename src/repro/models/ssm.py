@@ -1,0 +1,190 @@
+"""Mamba (S6) block with chunked selective scan.
+
+The recurrence is diagonal, so each chunk runs a parallel associative scan
+(O(log chunk) depth) and a lax.scan carries the (B, D, N) state across
+chunks — states are never materialized for the whole sequence.  Projections
+go through the factorization registry (site "ssm_proj"); the scan/conv are
+inherently not matmuls and keep their native form (DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import Linear
+from repro.parallel import context as pctx
+
+
+def _linears(cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    in_proj = Linear(cfg.fact, d, 2 * di, site="ssm_proj", dtype=cfg.param_dtype)
+    out_proj = Linear(cfg.fact, di, d, site="ssm_proj", dtype=cfg.param_dtype)
+    return in_proj, out_proj
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, kc = cfg.dt_rank, cfg.mamba_dconv
+    keys = jax.random.split(key, 6)
+    in_proj, out_proj = _linears(cfg)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=cfg.param_dtype), (di, 1))
+    return {
+        "in_proj": in_proj.init(keys[0]),
+        "out_proj": out_proj.init(keys[1]),
+        "conv_w": jax.random.normal(keys[2], (kc, di), cfg.param_dtype) * (1.0 / kc) ** 0.5,
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": jax.random.normal(keys[3], (di, dtr + 2 * n), cfg.param_dtype)
+        * (1.0 / di) ** 0.5,
+        "dt_proj": jax.random.normal(keys[4], (dtr, di), cfg.param_dtype)
+        * (1.0 / dtr) ** 0.5,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, cfg.param_dtype))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, D); w: (K, D)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_params(params, cfg: ModelConfig, xc: jax.Array):
+    """xc: (B, L, D) conv'd activations -> dA, dBx, C for the scan."""
+    n, dtr = cfg.mamba_d_state, cfg.dt_rank
+    proj = xc @ params["x_proj"].astype(xc.dtype)  # (B, L, dtr+2n)
+    dt_r, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(xc.dtype)
+                         + params["dt_bias"].astype(xc.dtype))  # (B, L, D)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (D, N)
+    dt32 = dt.astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * a)  # (B, L, D, N)
+    dbx = (dt32 * xc.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[..., None, :]  # (B, L, D, N)
+    return da, dbx, c_mat.astype(jnp.float32)
+
+
+def _chunk_scan(da, dbx, c_mat, h0, chunk: int):
+    """Chunked selective scan.  da/dbx: (B, S, D, N); c: (B, S, N).
+    Returns (y (B, S, D) fp32, h_final (B, D, N)).
+
+    Kept as the *oracle* (materializes (B,S,D,N)); the model path uses
+    _fused_chunk_scan below, which builds da/dbx per chunk inside the scan
+    so the (B,S,D,N) discretization is never resident at once.
+    """
+    b, s, d, n = da.shape
+    nch = max(1, s // chunk)
+    chunk = s // nch
+    assert s % nch == 0
+
+    da_c = da.reshape(b, nch, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(b, nch, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    c_c = c_mat.reshape(b, nch, chunk, n).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def body(h, inp):
+        a, bx, cm = inp  # (B, chunk, D, N), (B, chunk, N)
+        aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hh = hh + aa * h[:, None]  # inject carry state
+        y = jnp.einsum("bldn,bln->bld", hh, cm)
+        return hh[:, -1], y
+
+    hf, ys = jax.lax.scan(body, h0, (da_c, dbx_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, hf
+
+
+def _fused_chunk_scan(params, cfg: ModelConfig, xc: jax.Array, h0):
+    """Chunked selective scan with per-chunk discretization: the (chunk-
+    local) da/dbx tensors are (B, chunk, D, N) transients instead of a
+    (B, S, D, N) resident — an ~S/chunk reduction in scan working set."""
+    b, s, d = xc.shape
+    chunk = min(cfg.scan_chunk, s)
+    nch = max(1, s // chunk)
+    chunk = s // nch
+    assert s % nch == 0, (s, nch)
+    xc_c = xc.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    @jax.checkpoint  # residuals = (h, xcb) only; da/dbx/hh recomputed in bwd
+    def body(h, xcb):  # xcb: (B, chunk, D)
+        da, dbx, cm = _ssm_params(params, cfg, xcb)
+        da = pctx.constrain(da, "dp", None, "tp", None)
+        dbx = pctx.constrain(dbx, "dp", None, "tp", None)
+        aa, hh = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hh = hh + aa * h[:, None]
+        y = jnp.einsum("bldn,bln->bld", hh, cm)
+        return hh[:, -1], y.astype(xc.dtype)
+
+    hf, ys = jax.lax.scan(body, h0, xc_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, hf
+
+
+def mamba_forward(params: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, cache) — cache carries (h, conv tail) for decode."""
+    di = cfg.mamba_d_inner
+    in_proj, out_proj = _linears(cfg)
+    xz = in_proj(params["in_proj"], x)
+    xz = pctx.constrain(xz, "dp", None, "tp")  # d_inner TP (conv/scan local)
+    xi, z = jnp.split(xz, [di], axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, params["conv_w"].astype(xi.dtype),
+                                  params["conv_b"].astype(xi.dtype)))
+    # Scan sharding notes: S must stay replicated inside the scan (odd/even
+    # slicing over a sharded axis => SPMD full-rematerialization, ~10x
+    # collective blowup) while d_inner stays tp-sharded; discretization runs
+    # per-chunk inside the scan so (B,S,D,N) is never resident (S/chunk
+    # working-set reduction).
+    xc = pctx.constrain(xc, "dp", None, "tp")
+    h0 = jnp.zeros((x.shape[0], di, cfg.mamba_d_state), jnp.float32)
+    h0 = pctx.constrain(h0, "dp", "tp", None)
+    y, hf = _fused_chunk_scan(params, cfg, xc, h0)
+    y = pctx.constrain(y, "dp", None, "tp")
+    y = y.astype(jnp.float32) \
+        + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = out_proj(params["out_proj"], y)
+    cache = {
+        "h": hf.astype(cfg.dtype),
+        "conv": xi[:, -(cfg.mamba_dconv - 1):, :].astype(cfg.dtype),
+    }
+    return out, cache
+
+
+def mamba_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                 pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Single-token step.  x: (B, 1, d); cache h: (B, D, N), conv: (B, K-1, D)."""
+    di, kc = cfg.mamba_d_inner, cfg.mamba_dconv
+    in_proj, out_proj = _linears(cfg)
+    xz = in_proj(params["in_proj"], x)
+    xi, z = jnp.split(xz, [di], axis=-1)  # (B, 1, di)
+    window = jnp.concatenate([cache["conv"].astype(xi.dtype), xi], axis=1)  # (B,K,di)
+    w = params["conv_w"].astype(xi.dtype)
+    xc = jax.nn.silu((window * w[None]).sum(axis=1, keepdims=True)
+                     + params["conv_b"].astype(xi.dtype))
+    da, dbx, c_mat = _ssm_params(params, cfg, xc)
+    h = cache["h"].astype(jnp.float32) * da[:, 0] + dbx[:, 0]  # (B, D, N)
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = out_proj(params["out_proj"], y)
+    new_cache = {"h": h.astype(cfg.dtype), "conv": window[:, 1:].astype(cfg.dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), cfg.dtype),
+        "conv": jnp.zeros((batch, cfg.mamba_dconv - 1, cfg.mamba_d_inner), cfg.dtype),
+    }

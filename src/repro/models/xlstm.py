@@ -1,0 +1,208 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, inherently sequential -> lax.scan over time).
+
+Both use exponential gating with the max-stabilizer trick.  Projections are
+factorizable (site "ssm_proj"); the recurrences are not matmuls and keep
+their native form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.factorized import Linear
+from repro.models.layers import init_rms_norm, rms_norm
+
+# ---------------------------------------------------------------- mLSTM ----
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    di = cfg.xlstm_expand * cfg.d_model
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+def _mlstm_linears(cfg: ModelConfig):
+    d = cfg.d_model
+    di, _, _ = _mlstm_dims(cfg)
+    up = Linear(cfg.fact, d, 2 * di, site="ssm_proj", dtype=cfg.param_dtype)
+    qkv = Linear(cfg.fact, di, 3 * di, site="ssm_proj", dtype=cfg.param_dtype)
+    down = Linear(cfg.fact, di, d, site="ssm_proj", dtype=cfg.param_dtype)
+    return up, qkv, down
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    di, h, _ = _mlstm_dims(cfg)
+    up, qkv, down = _mlstm_linears(cfg)
+    keys = jax.random.split(key, 5)
+    return {
+        "up": up.init(keys[0]),
+        "qkv": qkv.init(keys[1]),
+        "down": down.init(keys[2]),
+        "gates_w": jax.random.normal(keys[3], (di, 2 * h), cfg.param_dtype)
+        * (1.0 / di) ** 0.5,
+        "gates_b": jnp.concatenate([
+            jnp.zeros((h,), cfg.param_dtype),                 # input gate bias
+            jnp.full((h,), 3.0, cfg.param_dtype),             # forget gate bias
+        ]),
+        "out_norm": init_rms_norm(di, cfg.param_dtype),
+    }
+
+
+def _mlstm_step(carry, inp):
+    c, n, m = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+    q, k, v, ig, fg = inp  # (B,H,dk) (B,H,dk) (B,H,dv) (B,H) (B,H)
+    m_new = jnp.maximum(fg + m, ig)
+    i = jnp.exp(ig - m_new)
+    f = jnp.exp(fg + m - m_new)
+    c = f[..., None, None] * c + i[..., None, None] * (k[..., None] * v[..., None, :])
+    n = f[..., None] * n + i[..., None] * k
+    hn = jnp.einsum("bhk,bhkv->bhv", q, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), 1.0)
+    y = hn / denom[..., None]
+    return (c, n, m_new), y
+
+
+def mlstm_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  cache: dict | None = None) -> tuple[jax.Array, dict]:
+    """x: (B, S, d).  Recurrent scan over time (vectorized over B, H)."""
+    b, s, _ = x.shape
+    di, h, dk = _mlstm_dims(cfg)
+    up, qkv_lin, down = _mlstm_linears(cfg)
+    xz = up(params["up"], x)
+    xi, z = jnp.split(xz, [di], axis=-1)
+    qkv = qkv_lin(params["qkv"], xi)
+    q, k, v = [a.reshape(b, s, h, dk) for a in jnp.split(qkv, 3, axis=-1)]
+    k = k * dk ** -0.5
+    gates = xi @ params["gates_w"].astype(xi.dtype) + params["gates_b"].astype(xi.dtype)
+    ig, fg = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    fg = jax.nn.log_sigmoid(fg)
+
+    if cache is None:
+        c0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        ig.transpose(1, 0, 2),
+        fg.transpose(1, 0, 2),
+    )
+    (cf, nf, mf), ys = jax.lax.scan(_mlstm_step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = down(params["down"], y)
+    new_cache = {"c": cf.astype(cfg.dtype), "n": nf.astype(cfg.dtype),
+                 "m": mf.astype(jnp.float32)}
+    return out, new_cache
+
+
+def mlstm_decode(params, cfg, x, cache, pos):
+    y, new_cache = mlstm_forward(params, cfg, x, cache)
+    return y, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    _, h, dk = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dk, dk), cfg.dtype),
+        "n": jnp.zeros((batch, h, dk), cfg.dtype),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+
+def _slstm_linears(cfg: ModelConfig):
+    d = cfg.d_model
+    # 4 gate pre-activations (z, i, f, o) from the input
+    inp = Linear(cfg.fact, d, 4 * d, site="ssm_proj", dtype=cfg.param_dtype)
+    return inp
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    keys = jax.random.split(key, 3)
+    inp = _slstm_linears(cfg)
+    return {
+        "inp": inp.init(keys[0]),
+        # block-diagonal recurrent weights: per head (4*dh, dh)
+        "rec": jax.random.normal(keys[1], (h, 4 * dh, dh), cfg.param_dtype)
+        * (1.0 / dh) ** 0.5,
+        "gate_b": jnp.concatenate([
+            jnp.zeros((2 * d,), cfg.param_dtype),           # z, i
+            jnp.full((d,), 3.0, cfg.param_dtype),           # f
+            jnp.zeros((d,), cfg.param_dtype),               # o
+        ]),
+        "out_norm": init_rms_norm(d, cfg.param_dtype),
+    }
+
+
+def _slstm_step(params, cfg, carry, wx_t):
+    """carry: (c, n, h, m) each (B, d) fp32; wx_t: (B, 4d) fp32."""
+    c, n, hprev, m = carry
+    b = c.shape[0]
+    nh, d = cfg.num_heads, cfg.d_model
+    dh = d // nh
+    hh = hprev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhj,hgj->bhg", hh, params["rec"].astype(jnp.float32))
+    pre = wx_t + rec.reshape(b, 4 * d) + params["gate_b"].astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c_new = f * c + i * zt
+    n_new = f * n + i
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  cache: dict | None = None) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    inp = _slstm_linears(cfg)
+    wx = inp(params["inp"], x).astype(jnp.float32)  # (B, S, 4d)
+    if cache is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+    else:
+        carry = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["h"].astype(jnp.float32), cache["m"])
+
+    def step(carry, wx_t):
+        new = _slstm_step(params, cfg, carry, wx_t)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    new_cache = {"c": carry[0].astype(cfg.dtype), "n": carry[1].astype(cfg.dtype),
+                 "h": carry[2].astype(cfg.dtype), "m": carry[3]}
+    return y, new_cache
+
+
+def slstm_decode(params, cfg, x, cache, pos):
+    return slstm_forward(params, cfg, x, cache)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), cfg.dtype),
+        "n": jnp.zeros((batch, d), cfg.dtype),
+        "h": jnp.zeros((batch, d), cfg.dtype),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }

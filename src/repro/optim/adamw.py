@@ -1,0 +1,89 @@
+"""AdamW + SGD-momentum (the paper's Table-3 optimizer), hand-rolled pure
+functions (no optax in this environment).  States are pytrees mirroring the
+params, so GSPMD shards them exactly like the parameters."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params, lr_scale=1.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    b1c = 1.0 - cfg.b1 ** c
+    b2c = 1.0 - cfg.b2 ** c
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        step = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * step
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-3
+    momentum: float = 0.9
+
+
+def sgd_init(params) -> dict:
+    return {"vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_update(cfg: SGDConfig, grads, state, params, lr_scale=1.0):
+    def upd(g, v, p):
+        v = cfg.momentum * v + g.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * v
+        return new_p.astype(p.dtype), v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["vel"])
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"vel": treedef.unflatten([o[1] for o in out])})
+
+
+def make_optimizer(name: str, **kw):
+    """Returns (init_fn, update_fn(grads, state, params, lr_scale))."""
+    if name == "adamw":
+        cfg = AdamWConfig(**kw)
+        return adamw_init, lambda g, s, p, lr=1.0: adamw_update(cfg, g, s, p, lr)
+    if name == "sgd":
+        cfg = SGDConfig(**kw)
+        return sgd_init, lambda g, s, p, lr=1.0: sgd_update(cfg, g, s, p, lr)
+    raise ValueError(name)

@@ -1,0 +1,24 @@
+"""LR schedules as pure step -> scale functions (multiplied onto base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)
+
+
+def warmup_cosine(step, warmup: int, total: int, final_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def make_schedule(name: str, **kw):
+    if name == "constant":
+        return constant
+    if name == "warmup_cosine":
+        return lambda s: warmup_cosine(s, **kw)
+    raise ValueError(name)

@@ -1,0 +1,82 @@
+"""Mesh context for intra-model sharding constraints.
+
+The model code is mesh-agnostic; launch code installs a mesh + axis roles
+here, and ``constrain`` becomes a no-op when no mesh is installed (single
+-device tests).  Logical axes: "dp" (batch), "tp" (model/tensor), None.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE: dict[str, Any] = {"mesh": None, "dp": (), "tp": None}
+
+
+def set_mesh(mesh, dp: tuple[str, ...], tp: str | None) -> None:
+    _STATE.update(mesh=mesh, dp=tuple(dp), tp=tp)
+
+
+def clear_mesh() -> None:
+    _STATE.update(mesh=None, dp=(), tp=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, dp: tuple[str, ...], tp: str | None):
+    old = dict(_STATE)
+    set_mesh(mesh, dp, tp)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def resolve(logical: tuple) -> P:
+    out = []
+    for a in logical:
+        if a == "dp":
+            out.append(_STATE["dp"] if _STATE["dp"] else None)
+        elif a == "tp":
+            out.append(_STATE["tp"])
+        elif a == "dptp":  # fully-flattened token axis (dp x tp)
+            axes = tuple(_STATE["dp"]) + ((_STATE["tp"],) if _STATE["tp"] else ())
+            out.append(axes if axes else None)
+        else:
+            out.append(a)
+    return P(*out)
+
+
+def axis_size(role: str) -> int:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return 1
+    if role == "dp":
+        n = 1
+        for a in _STATE["dp"]:
+            n *= mesh.shape[a]
+        return n
+    if role == "tp" and _STATE["tp"]:
+        return mesh.shape[_STATE["tp"]]
+    return 1
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint against the installed mesh; guards
+    divisibility (skips any axis that doesn't divide the dim)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = list(resolve(tuple(logical)))
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size == 0 or x.shape[i] % size != 0:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,264 @@
+"""Partition rules: param/optimizer/cache/batch PartitionSpecs per arch.
+
+Megatron-style TP over the "model" axis (QKV/gate/up column-parallel, out/
+down row-parallel), expert-parallel MoE (expert dim over "model"), vocab-
+sharded embedding + head, sequence-sharded KV caches for decode.  Butterfly/
+pixelfly factor weights are REPLICATED by design: at 98.5% compression they
+are tiny, and replicating them removes all weight collectives from the
+factorized layers (the TPU translation of the paper's "keep everything
+on-chip" — see DESIGN.md section 2).
+
+Divisibility is guarded: any dim that doesn't divide its mesh axis falls back
+to replication for that dim (GSPMD would pad, but padding distorts roofline
+numbers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _guard(spec: list, shape, mesh) -> P:
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if shape[i] % size == 0 and shape[i] >= size else None)
+    return P(*out)
+
+
+FSDP_THRESHOLD_BYTES = 6e9  # params+opt (12 B/param) per device over TP alone
+
+
+def _param_spec(path: str, shape, mesh, dp, fsdp: bool = False) -> P:
+    nd = len(shape)
+    fs = "data" if (fsdp and "data" in mesh.axis_names) else None
+
+    def pad_period(spec):
+        # params under "periods" carry a leading stacked-period dim
+        return ([None] + spec) if path.startswith("periods/") else spec
+
+    parts = path.split("/")
+    # --- butterfly / pixelfly / lowrank factor weights ---------------------
+    # At the paper's layer sizes these are tiny (98.5% compression) and
+    # replicating them removes weight collectives entirely.  At LLM scale
+    # (block 128 on d_ff ~ 50k) they are tens of GB, so they shard over
+    # their *block* dims: J (pairs) or S (stride) or b_out over model —
+    # all batch dims of the factor einsum, so the shards compute locally.
+    if "factors" in parts:
+        if "experts" in parts:  # batched over experts: shard E over model
+            spec = pad_period(["model"] + [None] * 16)
+            return _guard(spec[:nd], shape, mesh)
+        total = 1
+        for dim in shape:
+            total *= dim
+        if total * 12 <= 64 * 2**20:  # small factor: replicate (paper regime)
+            return P(*([None] * nd))
+        # Large factors: ZeRO-shard over DATA only, gathered per use.  Never
+        # shard over model: J/S differ per factor, so model-sharding them
+        # forces a full activation reshard between every factor (measured
+        # 10x collective blowup — EXPERIMENTS.md sec Perf).  Inside butterfly
+        # layers the tokens shard over dp x tp instead (see factorized.py).
+        dp_size = mesh.shape.get("data", 1)
+        spec = [None] * nd
+        j_dim, s_dim, bi_dim = nd - 6, nd - 4, nd - 2
+        if shape[j_dim] % dp_size == 0 and shape[j_dim] >= dp_size:
+            spec[j_dim] = "data"
+        elif shape[s_dim] % dp_size == 0 and shape[s_dim] >= dp_size:
+            spec[s_dim] = "data"
+        elif shape[bi_dim] % dp_size == 0:
+            spec[bi_dim] = "data"
+        return _guard(spec, shape, mesh)
+    if any(t in parts for t in ("blocks", "u", "v", "perm")):
+        if "experts" in parts:
+            spec = pad_period(["model"] + [None] * 16)
+            return _guard(spec[:nd], shape, mesh)
+        if "blocks" in parts and nd >= 4:  # pixelfly (P, nb, k, b, b)
+            spec = [None] * nd
+            spec[nd - 4] = "model"  # nb block-rows
+            if fs:
+                spec[nd - 2] = fs
+            return _guard(spec, shape, mesh)
+        return P(*([None] * nd))
+
+    # ------------------------------------------------ embedding / head ---
+    if path == "embed":
+        return _guard(["model", fs], shape, mesh)
+    if path.startswith("head/"):
+        if path.endswith("/w"):
+            return _guard([fs, "model"], shape, mesh)
+        if path.endswith("bias"):
+            return _guard(["model"], shape, mesh)
+        return P(*([None] * nd))
+
+    # ------------------------------------------------------- experts -----
+    if "/experts/" in path or "/router" in path:
+        if "/router" in path:
+            return P(*([None] * nd))
+        # (period, E, in, out) weights: expert-parallel over model,
+        # ZeRO/FSDP over data on the input dim when the model is big.
+        # (Tested dropping FSDP for experts on deepseek-moe: collective bytes
+        # unchanged, +11GB/device args — refuted, kept; EXPERIMENTS.md Perf.)
+        spec = pad_period(["model"] + [None] * 16)
+        spec = spec[:nd]
+        if fs and nd >= 4:
+            spec[-2] = fs
+        return _guard(spec, shape, mesh)
+
+    # --------------------------------------------- column-parallel (out) -
+    col = ("mixer/qkv/w", "ffn/gate/w", "ffn/up/w", "mixer/in_proj/w",
+           "mixer/up/w", "shared/gate/w", "shared/up/w", "mixer/inp/w")
+    if any(c in path for c in col):
+        spec = [None] * (nd - 1) + ["model"]  # shard the output dim
+        if nd >= 2:
+            spec[-2] = fs  # FSDP the input dim
+        return _guard(spec, shape, mesh)
+
+    # ------------------------------------------------ row-parallel (in) --
+    row = ("mixer/out/w", "ffn/down/w", "mixer/out_proj/w", "mixer/down/w",
+           "shared/down/w")
+    if any(c in path for c in row):
+        spec = [None] * nd
+        spec[-2] = "model"
+        spec[-1] = fs  # FSDP the output dim
+        return _guard(spec, shape, mesh)
+
+    # --------------------------------------------------------- biases ----
+    if path.endswith("/bias") and ("qkv" in path or "gate" in path
+                                   or "up" in path or "inp" in path):
+        spec = [None] * (nd - 1) + ["model"]
+        return _guard(spec, shape, mesh)
+
+    # ---------------------------------------------------------- mamba ----
+    if "conv_w" in path or "dt_proj" in path:
+        spec = [None] * (nd - 1) + ["model"]
+        return _guard(spec, shape, mesh)
+    if any(t in path for t in ("conv_b", "dt_bias", "d_skip")):
+        spec = [None] * (nd - 1) + ["model"]
+        return _guard(spec, shape, mesh)
+    if "a_log" in path or "x_proj" in path:
+        spec = [None] * nd
+        spec[-2] = "model"
+        return _guard(spec, shape, mesh)
+    if "gates_w" in path:
+        spec = [None] * nd
+        spec[-2] = "model"
+        return _guard(spec, shape, mesh)
+
+    # default: replicate (norms, small recurrent blocks, scalars)
+    return P(*([None] * nd))
+
+
+def needs_fsdp(cfg: ModelConfig, mesh) -> bool:
+    """True when params+opt (12 B/param f32 AdamW) over TP alone would not
+    leave room on a 16 GB chip — then weights also shard over 'data'."""
+    import numpy as np
+    shapes = jax.eval_shape(lambda: model_lib.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    tp = mesh.shape.get("model", 1)
+    return (12.0 * n) / tp > FSDP_THRESHOLD_BYTES
+
+
+def partition_params(cfg: ModelConfig, mesh, dp: tuple[str, ...],
+                     fsdp: bool | None = None):
+    """PartitionSpec pytree matching init_params(cfg)."""
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, mesh)
+    shapes = jax.eval_shape(lambda: model_lib.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [_param_spec(_path_str(p), leaf.shape, mesh, dp, fsdp)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def partition_opt(param_specs, opt_shapes):
+    """Optimizer state mirrors the parameter sharding; counters replicate.
+
+    Works structurally (recursively): any subtree matching the params
+    treedef gets the param specs; dict levels recurse (bf16_params nests
+    {master, inner{mu, nu, count}}); everything else replicates.
+    """
+    params_treedef = jax.tree.structure(param_specs)
+
+    def assign(sub):
+        if jax.tree.structure(sub) == params_treedef:
+            return param_specs
+        if isinstance(sub, dict):
+            return {k: assign(v) for k, v in sub.items()}
+        return jax.tree.map(lambda l: P(*([None] * len(l.shape))), sub)
+
+    return {k: assign(v) for k, v in opt_shapes.items()}
+
+
+def _cache_spec(path: str, shape, mesh, dp) -> P:
+    nd = len(shape)
+    dpa = tuple(dp) if len(dp) > 1 else dp[0]
+    if path.endswith("k") or path.endswith("v"):          # (P, B, T, kv, hd)
+        return _guard([None, dpa, "model", None, None][:nd], shape, mesh)
+    if path.endswith("/h") and nd == 4:                   # mamba (P,B,di,n)
+        return _guard([None, dpa, "model", None], shape, mesh)
+    if path.endswith("conv"):                             # (P,B,K-1,di)
+        return _guard([None, dpa, None, "model"], shape, mesh)
+    if path.endswith("/c") and nd == 5:                   # mlstm (P,B,H,dk,dv)
+        return _guard([None, dpa, None, "model", None], shape, mesh)
+    if path.endswith("/n") and nd == 4:
+        return _guard([None, dpa, None, "model"], shape, mesh)
+    # slstm (P,B,d) + mlstm m (P,B,H)
+    return _guard([None, dpa, "model"][:nd], shape, mesh)
+
+
+def partition_caches(cfg: ModelConfig, mesh, dp, batch: int, max_len: int):
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch, max_len))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [_cache_spec(_path_str(p), leaf.shape, mesh, dp)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ModelConfig, mesh, dp: tuple[str, ...]):
+    """(inputs, labels, positions) PartitionSpecs."""
+    dpa = tuple(dp) if len(dp) > 1 else dp[0]
+    if cfg.input_mode == "tokens":
+        inp = P(dpa, None)
+    else:
+        inp = P(dpa, None, None)
+    pos = P(dpa, None, None) if cfg.mrope else P(dpa, None)
+    return inp, P(dpa, None), pos
+
+
+def guard_spec(spec: P, shape, mesh) -> P:
+    """Public divisibility guard for ad-hoc input specs (e.g. batch=1)."""
+    return _guard(list(spec), shape, mesh)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

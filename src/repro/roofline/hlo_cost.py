@@ -1,0 +1,261 @@
+"""Trip-count-aware static cost model over post-partitioning HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+under-counts scanned-layer models by ~num_layers x (and grad-accumulation /
+chunked-attention scans on top).  This walker parses the HLO, multiplies
+loop-body costs by the trip count XLA records in
+``backend_config={"known_trip_count":{"n":...}}``, and accumulates:
+
+  * dot FLOPs        = 2 * prod(output dims) * prod(contracting dims)
+  * elementwise FLOPs (VPU traffic: add/mul/tanh/exp/...) = prod(out)
+  * collective operand bytes, by kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), operand shapes
+    resolved exactly from the instruction symbol table
+  * dot stream bytes = (lhs + rhs + out bytes) per dot — an HBM-traffic
+    proxy for matmul-dominated programs
+
+All numbers are per-device (the HLO is the per-device partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "tanh",
+    "exponential", "log", "rsqrt", "sqrt", "power", "negate", "abs",
+    "logistic", "cosine", "sine", "select", "compare", "and", "or", "xor",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*|pred|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+_TYPE_OP_RE = re.compile(
+    r"^(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-z][\w\-]*)\((?P<rest>.*)$", re.S)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%([\w.\-]+).*?body=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}|true_computation=%([\w.\-]+),\s*"
+    r"false_computation=%([\w.\-]+))")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(element count, bytes) of a (possibly tuple) HLO type string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    ew_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: Optional[dict] = None
+    coll_counts: Optional[dict] = None
+
+    def __post_init__(self):
+        self.coll_bytes = self.coll_bytes or {}
+        self.coll_counts = self.coll_counts or {}
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.dot_flops += other.dot_flops * times
+        self.ew_flops += other.ew_flops * times
+        self.dot_bytes += other.dot_bytes * times
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.ew_flops
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _split_operand_region(rest: str) -> tuple[str, str]:
+    """rest starts after the opening paren: find the balanced close."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_module(hlo: str) -> dict[str, list[Instr]]:
+    """computation name -> instruction list (ENTRY included under its name,
+    also aliased as '__entry__')."""
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    cur_name = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).strip()  # strip /*index=N*/ comments
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{$", line)
+        if header and "=" not in line.split("->")[0]:
+            cur_name = header.group(2)
+            cur = []
+            comps[cur_name] = cur
+            if header.group(1):
+                entry_name = cur_name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        name_part, _, rhs = line.partition(" = ")
+        name = name_part.replace("ROOT", "").strip().lstrip("%")
+        m = _TYPE_OP_RE.match(rhs.strip())
+        if not m:
+            continue
+        operand_region, attrs = _split_operand_region(m.group("rest"))
+        operands = re.findall(r"%([\w.\-]+)", operand_region)
+        cur.append(Instr(name, m.group("type"), m.group("op"),
+                         operands, attrs, line))
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(instr: Instr, table: dict[str, str]) -> tuple[float, float]:
+    out_dims = _shape_dims(instr.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    contract = 1
+    if cm and instr.operands:
+        lhs_type = table.get(instr.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    flops = 2.0 * out_n * contract
+    # stream-bytes proxy: lhs + rhs + out
+    _, out_b = _shape_elems_bytes(instr.type_str)
+    bytes_ = out_b
+    for op in instr.operands[:2]:
+        _, b = _shape_elems_bytes(table.get(op, ""))
+        bytes_ += b
+    return flops, bytes_
+
+
+def _trip_count(instr: Instr, comps, table) -> int:
+    m = _TRIP_RE.search(instr.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the condition computation
+    cb = _COND_BODY_RE.search(instr.attrs)
+    if cb:
+        cond = comps.get(cb.group(1), [])
+        for ci in cond:
+            if ci.opcode == "constant":
+                cm = re.search(r"constant\((\d+)\)", ci.line)
+                if cm:
+                    return int(cm.group(1))
+    return 1
+
+
+def computation_cost(name: str, comps: dict[str, list[Instr]],
+                     memo: dict[str, Cost]) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()  # cycle guard
+    cost = Cost()
+    instrs = comps.get(name, [])
+    table = {i.name: i.type_str for i in instrs}
+    for instr in instrs:
+        op = instr.opcode
+        base = op.replace("-start", "")
+        if op == "dot":
+            f, b = _dot_flops(instr, table)
+            cost.dot_flops += f
+            cost.dot_bytes += b
+        elif base in _COLLECTIVES and not op.endswith("-done"):
+            operand_bytes = 0
+            for o in instr.operands:
+                _, b = _shape_elems_bytes(table.get(o, ""))
+                operand_bytes += b
+            if not operand_bytes:  # operand shapes unknown: use output
+                _, operand_bytes = _shape_elems_bytes(instr.type_str)
+            cost.coll_bytes[base] = cost.coll_bytes.get(base, 0) + operand_bytes
+            cost.coll_counts[base] = cost.coll_counts.get(base, 0) + 1
+        elif op == "while":
+            cb = _COND_BODY_RE.search(instr.attrs)
+            trip = _trip_count(instr, comps, table)
+            if cb:
+                cost.add(computation_cost(cb.group(2), comps, memo), trip)
+                cost.add(computation_cost(cb.group(1), comps, memo), trip)
+        elif op == "conditional":
+            bm = _BRANCHES_RE.search(instr.attrs)
+            if bm:
+                if bm.group(1):
+                    branches = re.findall(r"%([\w.\-]+)", bm.group(1))
+                else:
+                    branches = [bm.group(2), bm.group(3)]
+                sub = [computation_cost(b, comps, memo) for b in branches]
+                if sub:
+                    best = max(sub, key=lambda c: c.flops)
+                    cost.add(best)
+        elif op in ("fusion", "call", "custom-call", "reduce", "map",
+                    "reduce-window", "scatter", "select-and-scatter", "sort"):
+            for cm in _CALLS_RE.finditer(instr.attrs):
+                cost.add(computation_cost(cm.group(1), comps, memo))
+        elif op in _ELEMENTWISE:
+            n, _ = _shape_elems_bytes(instr.type_str)
+            cost.ew_flops += n
+    memo[name] = cost
+    return cost
+
+
+def hlo_cost(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    memo: dict[str, Cost] = {}
+    return computation_cost("__entry__", comps, memo)

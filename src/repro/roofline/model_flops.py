@@ -1,0 +1,52 @@
+"""MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * tokens
+(inference) — the "useful compute" yardstick for the roofline ratio."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+def _leaf_count(shapes, predicate) -> int:
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = 0
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        w = predicate(pstr)
+        if w:
+            total += int(np.prod(leaf.shape)) * w
+    return int(total)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: embeds excluded (gather), routed experts
+    scaled by top_k/E (only top_k experts run per token)."""
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    frac = (cfg.top_k / cfg.num_experts) if cfg.num_experts else 1.0
+
+    def weight(path: str) -> float:
+        if path == "embed":
+            return 0.0
+        if "/experts/" in path:
+            return frac
+        return 1.0
+
+    return _leaf_count(shapes, weight)
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+    return _leaf_count(shapes, lambda p: 1.0)
+
+
+def model_flops(cfg: ModelConfig, batch: int, seq: int, kind: str) -> float:
+    n = active_param_count(cfg)
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    if kind == "train":
+        return 6.0 * n * tokens  # fwd 2ND + bwd 4ND
+    return 2.0 * n * tokens

@@ -1,0 +1,111 @@
+"""Fault-tolerant step loop: retry-with-restore, preemption checkpointing,
+straggler watchdog.  Transport failures are injected in tests via a hook —
+the policy code is identical to what a multi-host deployment runs."""
+from __future__ import annotations
+
+import logging
+import signal
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+log = logging.getLogger("repro.runtime")
+
+
+class StragglerWatchdog:
+    """Tracks step times; flags steps slower than ``threshold`` x median.
+
+    On a real pod this feeds the controller that re-slices data away from a
+    slow host (skip-ahead) — here it records decisions + stats.
+    """
+
+    def __init__(self, threshold: float = 3.0, window: int = 50):
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.window = window
+        self.flagged: list[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        if len(hist) >= 5:
+            med = float(np.median(hist))
+            if dt > self.threshold * med:
+                self.flagged.append(step)
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, dt, med)
+                return True
+        return False
+
+    def stats(self) -> dict:
+        if not self.times:
+            return {}
+        t = np.asarray(self.times)
+        return {"p50": float(np.percentile(t, 50)),
+                "p99": float(np.percentile(t, 99)),
+                "flagged": len(self.flagged)}
+
+
+class PreemptionHandler:
+    """SIGTERM -> request checkpoint-and-exit at the next step boundary."""
+
+    def __init__(self):
+        self.preempted = False
+        self._orig = None
+
+    def install(self):
+        def handler(signum, frame):
+            self.preempted = True
+            log.warning("preemption signal received; will checkpoint and exit")
+        self._orig = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self):
+        if self._orig is not None:
+            signal.signal(signal.SIGTERM, self._orig)
+
+
+def run_fault_tolerant(
+    step_fn: Callable[[int, Any], Any],
+    state: Any,
+    start_step: int,
+    num_steps: int,
+    save_fn: Callable[[int, Any], None],
+    restore_fn: Callable[[], tuple[int, Any]],
+    checkpoint_every: int = 50,
+    max_failures: int = 3,
+    watchdog: StragglerWatchdog | None = None,
+    preemption: PreemptionHandler | None = None,
+) -> tuple[int, Any]:
+    """Run ``num_steps`` steps with restore-on-failure.
+
+    step_fn(step, state) -> state.  Any exception triggers a restore from the
+    last checkpoint and a replay (data is step-indexed, so replay is exact).
+    """
+    failures = 0
+    step = start_step
+    end = start_step + num_steps
+    while step < end:
+        try:
+            t0 = time.monotonic()
+            state = step_fn(step, state)
+            dt = time.monotonic() - t0
+            if watchdog is not None:
+                watchdog.record(step, dt)
+            step += 1
+            if step % checkpoint_every == 0:
+                save_fn(step, state)
+            if preemption is not None and preemption.preempted:
+                save_fn(step, state)
+                log.warning("checkpointed at step %d after preemption", step)
+                return step, state
+        except Exception as e:  # noqa: BLE001 — the whole point
+            failures += 1
+            log.error("step %d failed (%s); failure %d/%d",
+                      step, e, failures, max_failures)
+            if failures > max_failures:
+                raise
+            step, state = restore_fn()
+            log.warning("restored to step %d; replaying", step)
+    return step, state

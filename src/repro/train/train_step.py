@@ -1,0 +1,173 @@
+"""jit-able train / prefill / decode step functions.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics) function:
+loss (+ MoE load-balance aux), optional microbatch gradient accumulation
+(lax.scan), global-norm clip, AdamW/SGD, LR schedule.  Sharding is applied by
+the caller (launch/) via in_shardings/out_shardings — the step itself is
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models import moe as moe_lib
+from repro.optim.adamw import make_optimizer
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedule import make_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatch: int = 0  # 0 = no accumulation; else per-microbatch size
+    schedule: str = "constant"
+    warmup: int = 100
+    total_steps: int = 1000
+    lb_loss_weight: float = 0.01  # MoE aux loss
+    # store params in bf16 with an f32 master copy in the optimizer state:
+    # gradients arrive in bf16, halving the DP grad-reduce and FSDP
+    # weight-gather wire bytes (see EXPERIMENTS.md section Perf)
+    bf16_params: bool = False
+
+
+def loss_fn(params, cfg: ModelConfig, tc: TrainConfig, inputs, labels,
+            positions=None):
+    ce = model_lib.lm_loss(params, cfg, inputs, labels, positions)
+    metrics = {"ce": ce}
+    # MoE aux loss on the first-layer activations is a cheap, standard proxy;
+    # full per-layer aux would need fwd instrumentation through the scan.
+    metrics["loss"] = ce
+    return ce, metrics
+
+
+def make_optimizer_for(tc: TrainConfig):
+    if tc.optimizer == "adamw":
+        return make_optimizer("adamw", lr=tc.lr, weight_decay=tc.weight_decay)
+    return make_optimizer("sgd", lr=tc.lr)
+
+
+def _cast_floats(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, key) -> dict:
+    params = model_lib.init_params(cfg, key)
+    opt_init, _ = make_optimizer_for(tc)
+    if tc.bf16_params:
+        opt = {"master": params, "inner": opt_init(params)}
+        params = _cast_floats(params, cfg.dtype)
+        return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    grad_shardings=None) -> Callable:
+    """grad_shardings: optional pytree of NamedSharding matching params.
+    Pinning the grad-accumulation carry to the parameter sharding keeps
+    per-microbatch gradients reduce-scattered (FSDP) instead of letting XLA
+    materialize full replicas + all-reduce them each microbatch."""
+    _, opt_update = make_optimizer_for(tc)
+
+    def _pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+    if tc.schedule == "warmup_cosine":
+        sched = make_schedule("warmup_cosine", warmup=tc.warmup,
+                              total=tc.total_steps)
+    else:
+        sched = make_schedule("constant")
+
+    grad_fn = jax.value_and_grad(
+        lambda p, inp, lab, pos: loss_fn(p, cfg, tc, inp, lab, pos),
+        has_aux=True)
+
+    def compute_grads(params, inputs, labels, positions):
+        if not tc.microbatch:
+            (loss, metrics), grads = grad_fn(params, inputs, labels, positions)
+            return loss, metrics, _pin(grads)
+        # gradient accumulation: scan over microbatches
+        gb = inputs.shape[0]
+        assert gb % tc.microbatch == 0, (gb, tc.microbatch)
+        n_micro = gb // tc.microbatch
+
+        def split(x):
+            return x.reshape(n_micro, tc.microbatch, *x.shape[1:]) \
+                if x is not None else None
+
+        mb = (split(inputs), split(labels), split(positions))
+
+        # bf16_params: accumulate in bf16 so the cross-data grad reduction
+        # stays bf16 on the wire (XLA otherwise converts to f32 *before* the
+        # all-reduce to feed the f32 accumulator — doubling wire bytes).
+        # f32 master + per-microbatch clip keep the update numerically sane.
+        acc_dtype = jnp.bfloat16 if tc.bf16_params else jnp.float32
+
+        def body(acc, xs):
+            inp, lab, pos = xs
+            (loss, metrics), grads = grad_fn(params, inp, lab, pos)
+            acc_g, acc_l = acc
+            acc_g = _pin(jax.tree.map(lambda a, g: a + g.astype(acc_dtype),
+                                      acc_g, _pin(grads)))
+            return (acc_g, acc_l + loss), metrics
+
+        zero_g = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params))
+        if positions is None:
+            mb = (mb[0], mb[1], None)
+            (acc_g, acc_l), metrics = jax.lax.scan(
+                lambda a, xs: body(a, (xs[0], xs[1], None)), (zero_g, 0.0),
+                (mb[0], mb[1]))
+        else:
+            (acc_g, acc_l), metrics = jax.lax.scan(body, (zero_g, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / n_micro, acc_g)
+        loss = acc_l / n_micro
+        return loss, jax.tree.map(lambda m: m[-1], metrics), grads
+
+    def train_step(state, inputs, labels, positions=None):
+        params = state["params"]
+        loss, metrics, grads = compute_grads(params, inputs, labels, positions)
+        grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        lr_scale = sched(state["step"])
+        if tc.bf16_params:
+            master, inner = state["opt"]["master"], state["opt"]["inner"]
+            new_master, new_inner = opt_update(grads, inner, master, lr_scale)
+            new_params = _pin(_cast_floats(new_master, cfg.dtype))
+            new_opt = {"master": new_master, "inner": new_inner}
+        else:
+            new_params, new_opt = opt_update(grads, state["opt"], params,
+                                             lr_scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, grad_norm=gnorm, lr_scale=lr_scale, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill(params, inputs, positions=None):
+        logits, caches = model_lib.forward(params, cfg, inputs, positions,
+                                           return_caches=True)
+        return logits[:, -1:], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params, inputs, caches, pos):
+        return model_lib.decode_step(params, cfg, inputs, caches, pos)
+    return decode

@@ -1,0 +1,97 @@
+"""Tests for the paper's Table-4 baseline methods + the Linear registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CirculantSpec,
+    FactorizationConfig,
+    FastfoodSpec,
+    Linear,
+    LowRankSpec,
+    fwht,
+)
+
+SPECS = [
+    LowRankSpec(64, 48, rank=4, bias=False),
+    CirculantSpec(64, 48, bias=False),
+    FastfoodSpec(64, 48, bias=False),
+    LowRankSpec(100, 100, rank=8, bias=True),
+    CirculantSpec(100, 100, bias=True),
+    FastfoodSpec(100, 100, bias=True),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: type(s).__name__ + str(s.in_features))
+def test_dense_equivalent_matches(spec):
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, spec.in_features))
+    w = spec.dense_equivalent(params)
+    y = spec.apply(params, x)
+    ref = x @ w
+    if getattr(spec, "bias", False):
+        ref = ref + params["bias"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=3e-4, atol=3e-5)
+
+
+def test_fwht_is_hadamard():
+    n = 16
+    h = np.asarray(fwht(jnp.eye(n)))
+    # Hadamard: H H^T = n I, entries +-1
+    assert set(np.unique(h)) == {-1.0, 1.0}
+    np.testing.assert_allclose(h @ h.T, n * np.eye(n), atol=1e-5)
+
+
+def test_compression_ordering():
+    """Param counts: circulant < fastfood < butterfly(b=1) < lowrank(r) < pixelfly < dense,
+    mirroring the paper's Table 4 N_params column ordering by method family."""
+    from repro.core import ButterflySpec, PixelflySpec
+    n = 1024
+    dense = n * n
+    assert CirculantSpec(n, n, bias=False).param_count() < FastfoodSpec(n, n, bias=False).param_count()
+    assert FastfoodSpec(n, n, bias=False).param_count() < ButterflySpec(n, n, 1, bias=False).param_count()
+    assert ButterflySpec(n, n, 1, bias=False).param_count() < dense
+    assert PixelflySpec(n, n, 32, 16, bias=False).param_count() < dense
+
+
+@pytest.mark.parametrize("kind", ["dense", "butterfly", "pixelfly", "lowrank", "circulant", "fastfood"])
+def test_registry_all_kinds(kind):
+    fc = FactorizationConfig(kind=kind, block_size=8, rank=4, sites=("mlp",))
+    lin = Linear(fc, 64, 32, site="mlp")
+    params = lin.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    y = lin(params, x)
+    assert y.shape == (3, 32)
+    assert not jnp.isnan(y).any()
+
+
+def test_registry_site_gating():
+    fc = FactorizationConfig(kind="butterfly", block_size=8, sites=("mlp",))
+    assert fc.kind_for_site("mlp") == "butterfly"
+    assert fc.kind_for_site("attn_qkv") == "dense"
+
+
+def test_batched_expert_linear():
+    """MoE-style: leading expert dim on params, matching leading dim on x."""
+    fc = FactorizationConfig(kind="butterfly", block_size=8, sites=("expert",))
+    lin = Linear(fc, 32, 32, site="expert", batch_dims=(4,))
+    params = lin.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 32))
+    y = lin(params, x)
+    assert y.shape == (4, 6, 32)
+    # different experts give different outputs
+    assert not np.allclose(np.asarray(y[0]), np.asarray(y[1]))
+
+
+def test_jit_and_scan_compatible():
+    fc = FactorizationConfig(kind="butterfly", block_size=4, sites=("mlp",))
+    lin = Linear(fc, 16, 16, site="mlp")
+    params = lin.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def f(p, x):
+        return lin(p, x)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    np.testing.assert_allclose(np.asarray(f(params, x)), np.asarray(lin(params, x)), rtol=1e-5)

@@ -1,0 +1,103 @@
+"""Unit tests for the butterfly factorization core (paper section 2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ButterflySpec,
+    apply_butterfly,
+    factor_strides,
+    fft_twiddles,
+)
+from repro.core.utils import bit_reversal_permutation, padded_dim
+
+
+def test_fft_equivalence():
+    """The butterfly with Cooley-Tukey twiddles IS the DFT (paper eq. 1 vs 2)."""
+    for n in (4, 8, 16, 64, 256):
+        x = jax.random.normal(jax.random.PRNGKey(n), (3, n)).astype(jnp.complex64)
+        factors = fft_twiddles(n)
+        y = apply_butterfly(factors, x, block_size=1, permute="bitrev")
+        np.testing.assert_allclose(np.asarray(y), np.fft.fft(np.asarray(x)), rtol=2e-4, atol=2e-4)
+
+
+def test_bit_reversal_involution():
+    for n in (2, 8, 64):
+        p = bit_reversal_permutation(n)
+        assert (p[p] == np.arange(n)).all()
+
+
+@pytest.mark.parametrize("n,b", [(8, 1), (64, 1), (64, 8), (256, 32), (512, 128)])
+def test_dense_equivalent_matches_apply(n, b):
+    spec = ButterflySpec(n, n, block_size=b, bias=False)
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, n))
+    w = spec.dense_equivalent(params)
+    np.testing.assert_allclose(
+        np.asarray(spec.apply(params, x)), np.asarray(x @ w), rtol=2e-4, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("m,n,b", [(10, 7, 1), (100, 40, 8), (3072, 343, 32)])
+def test_rectangular_shapes(m, n, b):
+    spec = ButterflySpec(m, n, block_size=b, bias=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, m))
+    y = spec.apply(params, x)
+    assert y.shape == (2, 3, n)
+    assert not jnp.isnan(y).any()
+
+
+def test_identity_init_is_identity():
+    spec = ButterflySpec(64, 64, block_size=8, bias=False)
+    params = spec.init(jax.random.PRNGKey(0), init="identity")
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    np.testing.assert_allclose(np.asarray(spec.apply(params, x)), np.asarray(x), atol=1e-6)
+
+
+def test_param_count_and_compression():
+    # paper headline: ~98.5% compression on layers of this scale
+    spec = ButterflySpec(4096, 4096, block_size=1, bias=False)
+    assert spec.param_count() == 2 * 4096 * 12
+    assert spec.compression_ratio() > 0.985
+    # block variant trades compression for MXU alignment but stays small
+    spec_b = ButterflySpec(4096, 4096, block_size=128, bias=False)
+    assert spec_b.param_count() < 0.35 * spec_b.dense_param_count()
+    # at production widths (8192) the block variant compresses harder
+    spec_big = ButterflySpec(8192, 8192, block_size=128, bias=False)
+    assert spec_big.param_count() < 0.2 * spec_big.dense_param_count()
+
+
+def test_factor_strides_cover_all_bits():
+    assert factor_strides(16) == [1, 2, 4, 8]
+
+
+def test_padded_dim():
+    assert padded_dim(4096, 128) == 4096
+    assert padded_dim(49152, 128) == 65536  # d_ff of qwen1.5-110b pads to 2^16
+    assert padded_dim(7, 1) == 8
+    assert padded_dim(5, 8) == 8
+
+
+def test_gradients_flow_through_all_factors():
+    spec = ButterflySpec(32, 32, block_size=4, bias=False)
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+
+    def loss(p):
+        return jnp.sum(spec.apply(p, x) ** 2)
+
+    g = jax.grad(loss)(params)
+    for gf in g["factors"]:
+        assert float(jnp.abs(gf).max()) > 0.0
+
+
+def test_variance_preservation():
+    """variance_scaling init keeps activation scale ~1 through the product."""
+    spec = ButterflySpec(1024, 1024, block_size=16, bias=False)
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 1024))
+    y = spec.apply(params, x)
+    ratio = float(jnp.std(y) / jnp.std(x))
+    assert 0.5 < ratio < 2.0, ratio

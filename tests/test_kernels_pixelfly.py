@@ -1,0 +1,56 @@
+"""Pallas pixelfly block-sparse kernel vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pixelfly import PixelflySpec
+from repro.kernels.pixelfly import pixelfly_bsmm
+from repro.kernels.pixelfly.ops import bsmm, pixelfly_linear
+from repro.kernels.pixelfly.ref import pixelfly_bsmm_ref
+
+SHAPES = [
+    (8, 32, 8),     # nb=4, k=3
+    (16, 64, 8),    # nb=8, k=4
+    (8, 256, 32),   # nb=8
+    (32, 512, 64),  # nb=8
+    (16, 1024, 128),
+]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,n,b", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsmm_matches_ref(m, n, b, dtype):
+    nb = n // b
+    k = 1 + (nb.bit_length() - 1)
+    w = (jax.random.normal(jax.random.PRNGKey(0), (nb, k, b, b)) * 0.2).astype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, n)).astype(dtype)
+    got = pixelfly_bsmm(x, w, block_size=b, batch_tile=min(8, m), interpret=True)
+    want = pixelfly_bsmm_ref(x, w, block_size=b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_bsmm_wrapper_padding():
+    n, b = 64, 8
+    nb, k = 8, 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (nb, k, b, b)) * 0.2
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, n))
+    got = bsmm(x, w, block_size=b, interpret=True, batch_tile=8)
+    want = pixelfly_bsmm_ref(x, w, block_size=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("m_in,n_out,rank", [(100, 80, 4), (64, 64, 0), (60, 200, 8)])
+def test_pixelfly_linear_kernel_vs_spec_apply(m_in, n_out, rank):
+    spec = PixelflySpec(m_in, n_out, block_size=8, rank=rank, bias=True)
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, m_in))
+    got = pixelfly_linear(spec, params, x)
+    want = spec.apply(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ButterflySpec, PixelflySpec, butterfly_support_cols
+from repro.core.utils import bit_reversal_permutation, ilog2, next_pow2, padded_dim
+from repro.data.synthetic import lm_batch
+from repro.models.layers import apply_rope
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@given(st.integers(min_value=1, max_value=10**6))
+@settings(**SETTINGS)
+def test_next_pow2_properties(x):
+    p = next_pow2(x)
+    assert p >= x and p & (p - 1) == 0
+    assert p < 2 * x or x == 1
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.sampled_from([1, 2, 8, 32, 128]))
+@settings(**SETTINGS)
+def test_padded_dim_properties(features, block):
+    n = padded_dim(features, block)
+    assert n >= features
+    assert n % block == 0
+    nb = n // block
+    assert nb & (nb - 1) == 0  # power-of-two block count
+
+
+@given(st.sampled_from([2, 4, 8, 16, 64, 256]))
+@settings(**SETTINGS)
+def test_bit_reversal_is_involution(n):
+    p = bit_reversal_permutation(n)
+    assert (p[p] == np.arange(n)).all()
+    assert sorted(p) == list(range(n))  # a true permutation
+
+
+@given(st.sampled_from([(16, 1), (16, 4), (64, 8), (128, 16)]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**SETTINGS)
+def test_butterfly_linearity(shape, seed):
+    """The butterfly layer is a LINEAR map: f(ax + by) == a f(x) + b f(y)."""
+    n, b = shape
+    spec = ButterflySpec(n, n, block_size=b, bias=False)
+    params = spec.init(jax.random.PRNGKey(seed % 1000))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed % 7919))
+    x = jax.random.normal(k1, (3, n))
+    y = jax.random.normal(k2, (3, n))
+    lhs = spec.apply(params, 2.5 * x - 1.5 * y)
+    rhs = 2.5 * spec.apply(params, x) - 1.5 * spec.apply(params, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.sampled_from([4, 8, 16, 32, 64]))
+@settings(**SETTINGS)
+def test_pixelfly_support_row_count(nb):
+    """Every block-row has exactly 1 + log2(nb) contributing block-cols,
+    all distinct."""
+    cols = butterfly_support_cols(nb)
+    for r in range(nb):
+        assert len(set(cols[r].tolist())) == 1 + ilog2(nb)
+        assert all(0 <= c < nb for c in cols[r])
+
+
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=0, max_value=100))
+@settings(**SETTINGS)
+def test_compression_grows_with_n(doublings, seed):
+    """Butterfly compression ratio is monotone in layer size (b=1)."""
+    n1 = 64 * next_pow2(max(doublings, 2))
+    n0 = n1 // 2
+    s0 = ButterflySpec(n0, n0, 1, bias=False)
+    s1 = ButterflySpec(n1, n1, 1, bias=False)
+    assert s1.compression_ratio() > s0.compression_ratio()
+
+
+@given(st.integers(min_value=0, max_value=50),
+       st.integers(min_value=1, max_value=12))
+@settings(**SETTINGS)
+def test_rope_relative_shift_invariance(base, delta):
+    """<R(p)q, R(p+d)k> depends only on d, not p."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot(p):
+        rq = apply_rope(q, jnp.array([[p]]), 1e4)
+        rk = apply_rope(k, jnp.array([[p + delta]]), 1e4)
+        return float(jnp.sum(rq * rk))
+
+    assert abs(dot(0) - dot(base)) < 1e-3
+
+
+@given(st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=0, max_value=10**6))
+@settings(**SETTINGS)
+def test_lm_batches_differ_across_steps(s1, s2):
+    a1, _ = lm_batch(s1, 2, 16, 1000, seed=5)
+    a2, _ = lm_batch(s2, 2, 16, 1000, seed=5)
+    if s1 == s2:
+        np.testing.assert_array_equal(a1, a2)
+    else:
+        assert not np.array_equal(a1, a2)
+    assert a1.min() >= 0 and a1.max() < 1000
+
+
+@given(st.sampled_from([(32, 4), (64, 8)]),
+       st.integers(min_value=0, max_value=1000))
+@settings(**SETTINGS)
+def test_pixelfly_equals_dense_equivalent(shape, seed):
+    n, b = shape
+    spec = PixelflySpec(n, n, block_size=b, rank=2, bias=False)
+    params = spec.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n))
+    w = spec.dense_equivalent(params)
+    np.testing.assert_allclose(np.asarray(spec.apply(params, x)),
+                               np.asarray(x @ w), rtol=2e-3, atol=2e-4)
