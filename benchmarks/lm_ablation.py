@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import emit, section
 from repro.configs import get_config, reduced
-from repro.core.factorized import FactorizationConfig
+from repro.core.policy import FactorizationPolicy, Rule
 from repro.data.synthetic import lm_batch
 from repro.models import param_count
 from repro.train.train_step import TrainConfig, init_train_state, make_train_step
@@ -29,8 +29,8 @@ def run(steps: int = 80, batch: int = 8, seq: int = 64) -> None:
     base = reduced(get_config("butterfly-lm-100m"))
     results = {}
     for kind in KINDS:
-        fact = FactorizationConfig(
-            kind=kind, block_size=8, rank=16,
+        fact = FactorizationPolicy.uniform(
+            Rule(kind=kind, block_size=8, rank=16),
             sites=("mlp", "attn_qkv", "attn_out"))
         cfg = dataclasses.replace(base, name=f"lm-{kind}", fact=fact)
         tc = TrainConfig(lr=3e-3, schedule="warmup_cosine",

@@ -18,13 +18,13 @@ import numpy as np
 from benchmarks.common import emit, section
 from repro.configs.shl_cifar10 import IN_FEATURES, METHODS, NUM_CLASSES, SHLConfig
 from repro.core import make_spec
-from repro.core.factorized import FactorizationConfig
+from repro.core.policy import Rule
 from repro.data.synthetic import cifar10_like
 from repro.optim.adamw import make_optimizer
 
 
 def build_shl(method: str, shl: SHLConfig):
-    fc_kwargs = {
+    rule = Rule(**{
         "dense": dict(kind="dense"),
         "butterfly": dict(kind="butterfly", block_size=shl.butterfly_block),
         "pixelfly": dict(kind="pixelfly", block_size=shl.block_size,
@@ -32,10 +32,9 @@ def build_shl(method: str, shl: SHLConfig):
         "lowrank": dict(kind="lowrank", rank=shl.rank),
         "circulant": dict(kind="circulant"),
         "fastfood": dict(kind="fastfood"),
-    }[method]
-    fc = FactorizationConfig(sites=("mlp",), **fc_kwargs)
-    hidden_spec = make_spec(fc, IN_FEATURES, shl.hidden, site="mlp", bias=True)
-    out_spec = make_spec(FactorizationConfig(kind="dense"), shl.hidden,
+    }[method])
+    hidden_spec = make_spec(rule, IN_FEATURES, shl.hidden, site="mlp", bias=True)
+    out_spec = make_spec(Rule(kind="dense"), shl.hidden,
                          NUM_CLASSES, site="other", bias=True)
 
     def init(key):

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.core import (
     ButterflySpec,
-    FactorizationConfig,
+    FactorizationPolicy,
+    Rule,
     apply_butterfly,
     fft_twiddles,
 )
@@ -47,15 +48,19 @@ want = fused_butterfly_apply_ref(xb, factors, block_size=b)
 print("kernel == oracle:",
       np.allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5))
 
-print("\n=== 4. butterfly inside a full architecture ===")
+print("\n=== 4. mixed per-site factorization inside a full architecture ===")
 from repro.configs import get_config, reduced
 from repro.models import forward, init_params
 
 cfg = reduced(get_config("phi4-mini-3.8b"))
-cfg = cfg.with_fact(FactorizationConfig(
-    kind="butterfly", block_size=8, sites=("mlp", "attn_qkv", "attn_out")))
+# the paper's Table-4 regime as one policy: pixelfly MLPs (dense-processor
+# winner), butterfly attention, dense head
+cfg = cfg.with_fact(FactorizationPolicy(overrides={
+    "mlp": Rule(kind="pixelfly", block_size=8, rank=8),
+    "attn_*": Rule(kind="butterfly", block_size=8),
+}))
 params = init_params(cfg, jax.random.PRNGKey(0))
 tok = jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0, cfg.vocab_size)
 logits = forward(params, cfg, tok)
-print(f"{cfg.name}: butterfly MLP+attention, logits {logits.shape}, "
+print(f"{cfg.name}: pixelfly MLP + butterfly attention, logits {logits.shape}, "
       f"finite={bool(jnp.isfinite(logits.astype(jnp.float32)).all())}")

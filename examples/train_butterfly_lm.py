@@ -37,7 +37,7 @@ def main():
     if not args.full:
         cfg = reduced(cfg)
     print(f"config {cfg.name}: {param_count(cfg):,} params "
-          f"(butterfly sites: {cfg.fact.sites})")
+          f"(factorized sites: {cfg.fact.factorized_sites})")
 
     tc = TrainConfig(lr=3e-3, schedule="warmup_cosine",
                      warmup=max(args.steps // 10, 5), total_steps=args.steps)

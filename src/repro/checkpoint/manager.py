@@ -5,6 +5,12 @@ Writes go to ``step_X.tmp`` then os.rename -> atomic visibility; a crash
 mid-save never corrupts the latest checkpoint.  Each process saves only the
 shards it owns (``process_index`` suffix); single-process here, but the
 format and code path are the multi-host ones.
+
+The factorization policy that shaped the params is persisted in the
+manifest (``factorization_policy``) and validated on restore — loading
+butterfly factors into a model built with a different per-site policy is a
+silent-corruption class of bug this catches at the manifest level, before
+any array is read.
 """
 from __future__ import annotations
 
@@ -21,6 +27,34 @@ import numpy as np
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
+
+
+def _policy_dict(policy) -> dict | None:
+    """Normalize a policy-like (FactorizationPolicy, Rule, legacy shim, or
+    already-serialized dict) for the manifest; None passes through (policy
+    tracking is opt-in)."""
+    if policy is None or isinstance(policy, dict):
+        return policy
+    from repro.core.factorized import as_policy
+    return as_policy(policy).to_dict()
+
+
+def _signature(policy) -> dict | None:
+    """Per-site resolved structural signature (see
+    FactorizationPolicy.structural_signature) of a policy-like or a
+    manifest policy dict.  Comparing signatures — not raw dicts — makes
+    validation blind to override spelling (glob vs literal, declaration
+    order) and to compute-path-only flags like ``use_kernel``, while still
+    catching any difference that changes the parameter tree."""
+    if policy is None:
+        return None
+    if isinstance(policy, dict):
+        from repro.core.policy import FactorizationPolicy
+        policy = FactorizationPolicy.from_dict(policy)
+    else:
+        from repro.core.factorized import as_policy
+        policy = as_policy(policy)
+    return policy.structural_signature()
 
 
 class CheckpointManager:
@@ -49,9 +83,12 @@ class CheckpointManager:
         return s[-1] if s else None
 
     # ------------------------------------------------------------ save --
-    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             policy: Any = None) -> None:
         """Atomic save.  blocking=False runs the disk write on a thread
-        (async checkpointing: the step loop keeps going)."""
+        (async checkpointing: the step loop keeps going).  ``policy`` (a
+        FactorizationPolicy or its dict) is recorded in the manifest so
+        restore can validate structural compatibility."""
         leaves, treedef = _flatten(tree)
         # snapshot to host memory NOW so async writes see consistent data
         host_leaves = [np.asarray(x) for x in leaves]
@@ -64,6 +101,9 @@ class CheckpointManager:
             "shapes": [list(x.shape) for x in host_leaves],
             "dtypes": [str(x.dtype) for x in host_leaves],
         }
+        pd = _policy_dict(policy)
+        if pd is not None:
+            meta["factorization_policy"] = pd
 
         def write():
             tmp = self._step_dir(step) + ".tmp"
@@ -98,10 +138,14 @@ class CheckpointManager:
 
     # --------------------------------------------------------- restore --
     def restore(self, example_tree: Any, step: int | None = None,
-                shardings: Any = None) -> tuple[int, Any]:
+                shardings: Any = None, policy: Any = None) -> tuple[int, Any]:
         """Restore into the structure of ``example_tree``.  ``shardings`` (a
         matching pytree or a callable shape->sharding) re-places arrays — this
-        is the elastic-resharding entry point (any new mesh works)."""
+        is the elastic-resharding entry point (any new mesh works).
+
+        ``policy``: the factorization policy the restoring model was built
+        with; if the checkpoint manifest recorded one and they differ, the
+        restore is refused (structurally incompatible parameters)."""
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -109,6 +153,22 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             meta = json.load(f)
+        want = _signature(policy)
+        saved = meta.get("factorization_policy")
+        if want is not None and saved is not None:
+            try:
+                saved_sig = _signature(saved)
+            except Exception as e:
+                raise ValueError(
+                    f"checkpoint step {step} recorded a factorization policy "
+                    f"this process cannot interpret ({e}) — a plugin kind "
+                    f"missing its register_factorization call, or version "
+                    f"skew?  saved policy: {saved}") from e
+            if want != saved_sig:
+                raise ValueError(
+                    f"factorization policy mismatch: checkpoint step {step} "
+                    f"was saved with {saved}, model expects "
+                    f"{_policy_dict(policy)}")
         leaves, treedef = _flatten(example_tree)
         if len(leaves) != meta["num_leaves"]:
             raise ValueError(

@@ -6,7 +6,8 @@ from typing import Any
 
 import jax.numpy as jnp
 
-from repro.core.factorized import DENSE, FactorizationConfig
+from repro.core.factorized import as_policy
+from repro.core.policy import DENSE_POLICY, FactorizationPolicy, Rule
 
 # layer slot = (mixer, ffn); mixer in MIXERS, ffn in FFNS
 MIXERS = ("attn", "mamba", "mlstm", "slstm")
@@ -50,8 +51,9 @@ class ModelConfig:
     input_mode: str = "tokens"  # tokens | embeddings (modality-frontend stub)
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
-    # paper technique
-    fact: FactorizationConfig = DENSE
+    # paper technique: per-site factorization policy (accepts a policy, a
+    # Rule, or the deprecated FactorizationConfig shim — normalized below)
+    fact: FactorizationPolicy = DENSE_POLICY
     # numerics
     dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.float32
@@ -60,6 +62,8 @@ class ModelConfig:
     z_loss: float = 1e-4
 
     def __post_init__(self):
+        if not isinstance(self.fact, FactorizationPolicy):
+            object.__setattr__(self, "fact", as_policy(self.fact))
         if self.num_layers % len(self.pattern) != 0:
             raise ValueError(
                 f"{self.name}: num_layers={self.num_layers} not a multiple of "
@@ -98,8 +102,37 @@ class ModelConfig:
         """Can this arch serve a 500k-token context (no quadratic-only mixer)?"""
         return any(m in ("mamba", "mlstm", "slstm") for m, _ in self.pattern)
 
-    def with_fact(self, fact: FactorizationConfig) -> "ModelConfig":
-        return dataclasses.replace(self, fact=fact)
+    def with_fact(self, fact) -> "ModelConfig":
+        """Swap the factorization policy (policy, Rule, or legacy shim)."""
+        return dataclasses.replace(self, fact=as_policy(fact))
+
+
+def recommended_policy(cfg: ModelConfig, block: int = 128,
+                       rank: int = 16) -> FactorizationPolicy:
+    """Family-appropriate mixed policy, derived from the layer pattern:
+    pixelfly where a dense processor wins (MLP / expert weights), butterfly
+    for attention and SSM projections, dense head."""
+    mixers = {m for m, _ in cfg.pattern}
+    ffns = {f for _, f in cfg.pattern}
+    overrides: dict[str, Rule] = {}
+    if "dense" in ffns and cfg.d_ff:
+        overrides["mlp"] = Rule(kind="pixelfly", block_size=block, rank=rank)
+    if "moe" in ffns:
+        overrides["expert"] = Rule(kind="pixelfly", block_size=block, rank=rank)
+    if "attn" in mixers:
+        overrides["attn_*"] = Rule(kind="butterfly", block_size=block)
+    if mixers & {"mamba", "mlstm", "slstm"}:
+        overrides["ssm_proj"] = Rule(kind="butterfly", block_size=block)
+    return FactorizationPolicy(overrides=overrides)
+
+
+def factorized_variant(cfg: ModelConfig, block: int = 128,
+                       rank: int = 16) -> ModelConfig:
+    """The config's compressed twin (``<name>-fact``) under the recommended
+    per-site policy — paper-style baseline comparisons in one call."""
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-fact",
+        fact=recommended_policy(cfg, block=block, rank=rank))
 
 
 @dataclasses.dataclass(frozen=True)

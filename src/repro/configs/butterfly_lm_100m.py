@@ -4,7 +4,7 @@ variant).  Used by examples/train_butterfly_lm.py."""
 import dataclasses
 
 from repro.configs.base import ModelConfig
-from repro.core.factorized import FactorizationConfig
+from repro.core.policy import DENSE_POLICY, FactorizationPolicy, Rule
 
 CONFIG = ModelConfig(
     name="butterfly-lm-100m",
@@ -19,12 +19,20 @@ CONFIG = ModelConfig(
     # block 16: at d_model=768 the padded butterfly dim is 4096, so larger
     # blocks would cost more params than dense (2*N*b*log2(N/b) vs in*out).
     # Production archs (d_model >= 4096) use block 128 (MXU-native).
-    fact=FactorizationConfig(
-        kind="butterfly", block_size=16,
+    fact=FactorizationPolicy.uniform(
+        Rule(kind="butterfly", block_size=16),
         sites=("mlp", "attn_qkv", "attn_out"),
     ),
 )
 
 # dense twin for paper-style baseline comparisons
 DENSE_CONFIG = dataclasses.replace(
-    CONFIG, name="dense-lm-100m", fact=FactorizationConfig(kind="dense"))
+    CONFIG, name="dense-lm-100m", fact=DENSE_POLICY)
+
+# mixed-structure twin (the paper's Table-4 regime as one model): pixelfly
+# MLPs (dense-processor winner), butterfly attention, dense head
+MIXED_CONFIG = dataclasses.replace(
+    CONFIG, name="mixed-lm-100m", fact=FactorizationPolicy(overrides={
+        "mlp": Rule(kind="pixelfly", block_size=16, rank=16),
+        "attn_*": Rule(kind="butterfly", block_size=16),
+    }))

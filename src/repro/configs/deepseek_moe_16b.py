@@ -1,6 +1,10 @@
 """deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained experts.
 [arXiv:2401.06066; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="deepseek-moe-16b",
@@ -16,3 +20,7 @@ CONFIG = ModelConfig(
     num_shared_experts=2,
     pattern=(("attn", "moe"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=64)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=64)

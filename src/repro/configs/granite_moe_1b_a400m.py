@@ -1,6 +1,10 @@
 """granite-moe-1b-a400m [moe] — 32 experts top-8, GQA.
 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="granite-moe-1b-a400m",
@@ -15,3 +19,7 @@ CONFIG = ModelConfig(
     top_k=8,
     pattern=(("attn", "moe"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=64)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=64)

@@ -1,6 +1,10 @@
 """jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e
 top-2 on every other layer.  [arXiv:2403.19887; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="jamba-1.5-large-398b",
@@ -22,3 +26,7 @@ CONFIG = ModelConfig(
     ),
     mamba_d_state=16,
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

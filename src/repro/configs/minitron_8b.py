@@ -1,5 +1,9 @@
 """minitron-8b [dense] — pruned nemotron.  [arXiv:2407.14679; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="minitron-8b",
@@ -12,3 +16,7 @@ CONFIG = ModelConfig(
     vocab_size=256000,
     pattern=(("attn", "dense"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

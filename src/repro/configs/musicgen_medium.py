@@ -1,7 +1,11 @@
 """musicgen-medium [audio] — decoder-only over EnCodec tokens.  Backbone
 only; the EnCodec frontend is a stub (input_specs provides frame
 embeddings).  [arXiv:2306.05284; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="musicgen-medium",
@@ -15,3 +19,7 @@ CONFIG = ModelConfig(
     input_mode="embeddings",
     pattern=(("attn", "dense"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

@@ -1,5 +1,9 @@
 """qwen1.5-110b [dense] — QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="qwen1.5-110b",
@@ -13,3 +17,7 @@ CONFIG = ModelConfig(
     qkv_bias=True,
     pattern=(("attn", "dense"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

@@ -1,7 +1,11 @@
 """qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution.  Backbone only; the
 vision frontend is a stub (input_specs provides patch embeddings).
 [arXiv:2409.12191; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="qwen2-vl-72b",
@@ -16,3 +20,7 @@ CONFIG = ModelConfig(
     input_mode="embeddings",
     pattern=(("attn", "dense"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

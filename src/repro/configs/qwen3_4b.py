@@ -1,5 +1,9 @@
 """qwen3-4b [dense] — qk_norm, GQA, head_dim 128.  [hf:Qwen/Qwen3-8B; hf]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="qwen3-4b",
@@ -14,3 +18,7 @@ CONFIG = ModelConfig(
     qk_norm=True,
     pattern=(("attn", "dense"),),
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=128)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=128)

@@ -1,6 +1,10 @@
 """xlstm-350m [ssm] — alternating sLSTM + mLSTM blocks, no separate FFN
 (blocks carry their own up/down projections).  [arXiv:2405.04517; unverified]"""
-from repro.configs.base import ModelConfig
+from repro.configs.base import (
+    ModelConfig,
+    factorized_variant,
+    recommended_policy,
+)
 
 CONFIG = ModelConfig(
     name="xlstm-350m",
@@ -14,3 +18,7 @@ CONFIG = ModelConfig(
     pattern=(("mlstm", "none"), ("slstm", "none")),
     xlstm_expand=2,
 )
+
+# recommended mixed per-site policy for this family + compressed twin
+FACT_POLICY = recommended_policy(CONFIG, block=64)
+FACTORIZED_CONFIG = factorized_variant(CONFIG, block=64)

@@ -15,13 +15,38 @@ from repro.core.butterfly import (
     fft_twiddles,
     init_factors,
 )
-from repro.core.factorized import DENSE, KINDS, SITES, FactorizationConfig, Linear, make_spec
+from repro.core.factorized import (
+    DENSE,
+    KINDS,
+    FactorizationConfig,
+    Linear,
+    as_policy,
+    make_spec,
+)
 from repro.core.pixelfly import PixelflySpec, apply_flat_butterfly, butterfly_support_cols
+from repro.core.policy import (
+    DENSE_POLICY,
+    DENSE_RULE,
+    SITES,
+    FactorizationPolicy,
+    Rule,
+)
+from repro.core.registry import (
+    FactorizationEntry,
+    FactorizationSpec,
+    available_kinds,
+    get_factorization,
+    register_factorization,
+    register_kernel,
+)
 
 __all__ = [
     "ButterflySpec", "PixelflySpec", "DenseSpec", "LowRankSpec", "CirculantSpec",
-    "FastfoodSpec", "FactorizationConfig", "Linear", "make_spec", "DENSE",
-    "KINDS", "SITES", "apply_butterfly", "apply_factor", "factor_shape",
+    "FastfoodSpec", "FactorizationConfig", "FactorizationPolicy", "Rule",
+    "Linear", "make_spec", "as_policy", "DENSE", "DENSE_POLICY", "DENSE_RULE",
+    "KINDS", "SITES", "FactorizationEntry", "FactorizationSpec",
+    "available_kinds", "get_factorization", "register_factorization",
+    "register_kernel", "apply_butterfly", "apply_factor", "factor_shape",
     "factor_strides", "fft_twiddles", "init_factors", "apply_flat_butterfly",
     "butterfly_support_cols", "fwht",
 ]

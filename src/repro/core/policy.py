@@ -1,0 +1,254 @@
+"""Per-site factorization policy: WHICH structure, WHERE.
+
+The paper's Table 4 shows the winning structure is per-layer-site —
+butterfly beats pixelfly on the IPU, pixelfly wins on dense processors,
+low-rank wins only at extreme compression — so the policy API expresses
+"pixelfly MLPs + butterfly attention + dense head" directly::
+
+    FactorizationPolicy(
+        default=Rule(kind="dense"),
+        overrides={
+            "mlp": Rule(kind="pixelfly", block_size=32, rank=8),
+            "attn_*": Rule(kind="butterfly", block_size=16),
+        })
+
+``resolve(site)`` looks up an exact site match first, then glob patterns
+(``fnmatch``, declaration order), then the default.  Policies serialize to
+plain JSON dicts (``to_dict``/``from_dict``) so checkpoints can persist and
+validate them, and ``from_budget`` picks block sizes to fit a parameter
+budget — the paper's memory-fitting story as a constructor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Iterable, Mapping
+
+from repro.core import registry
+
+# call-sites a model can tag; the policy decides which get factorized
+SITES = ("attn_qkv", "attn_out", "mlp", "expert", "head", "ssm_proj", "other")
+
+# block-size ladder from_budget walks down (MXU-native first)
+_BLOCK_LADDER = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """How to factorize one call-site.
+
+    kind: a registered factorization kind. block_size: butterfly/pixelfly
+    block (1 = paper-faithful 2x2 twiddles; 128 = TPU/MXU-native).
+    rank: pixelfly/lowrank rank. permute: butterfly block permutation.
+    use_kernel: route through the registered Pallas kernel backend instead
+    of the jnp reference path.
+    """
+
+    kind: str = "dense"
+    block_size: int = 128
+    rank: int = 16
+    permute: str = "none"
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if not registry.is_registered(self.kind):
+            raise ValueError(
+                f"kind must be a registered factorization, one of "
+                f"{registry.available_kinds()}; got {self.kind!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Rule":
+        # ignore fields a newer version may have added (forward compat);
+        # an unregistered kind still raises in __post_init__
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+DENSE_RULE = Rule(kind="dense")
+
+
+def _as_rule(r) -> Rule:
+    if isinstance(r, Rule):
+        return r
+    if isinstance(r, Mapping):
+        return Rule.from_dict(r)
+    raise TypeError(f"expected Rule or mapping, got {type(r).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationPolicy:
+    """A default Rule plus per-site (or glob-pattern) overrides.
+
+    ``overrides`` accepts a mapping at construction but is stored as a
+    tuple of (pattern, Rule) pairs so the policy stays hashable — it lives
+    inside the frozen ``ModelConfig``.
+    """
+
+    default: Rule = DENSE_RULE
+    overrides: Any = ()
+
+    def __post_init__(self):
+        if isinstance(self.overrides, Mapping):
+            pairs = tuple((str(k), _as_rule(v)) for k, v in self.overrides.items())
+        else:
+            pairs = tuple((str(k), _as_rule(v)) for k, v in self.overrides)
+        seen = set()
+        for pattern, _ in pairs:
+            # glob patterns match at resolve time; literal names must be
+            # real sites or a typo silently resolves everything to default
+            if not any(c in pattern for c in "*?[") and pattern not in SITES:
+                raise ValueError(
+                    f"unknown site {pattern!r}; valid: {SITES} "
+                    f"(or a glob pattern)")
+            # duplicates would be collapsed by to_dict (dict keys), changing
+            # which rule wins across a JSON round-trip — refuse up front
+            if pattern in seen:
+                raise ValueError(f"duplicate override pattern {pattern!r}")
+            seen.add(pattern)
+        object.__setattr__(self, "overrides", pairs)
+
+    # ------------------------------------------------------------ lookup --
+    def resolve(self, site: str) -> Rule:
+        """Rule for a call-site: exact match, then globs in order, then default."""
+        for pattern, rule in self.overrides:
+            if pattern == site:
+                return rule
+        for pattern, rule in self.overrides:
+            if fnmatch.fnmatchcase(site, pattern):
+                return rule
+        return self.default
+
+    def kind_for_site(self, site: str) -> str:
+        return self.resolve(site).kind
+
+    @property
+    def factorized_sites(self) -> tuple[str, ...]:
+        """Site patterns whose resolved kind differs from dense."""
+        return tuple(p for p, r in self.overrides if r.kind != "dense") + (
+            () if self.default.kind == "dense" else ("*",))
+
+    # -------------------------------------------------------- constructors --
+    @classmethod
+    def uniform(cls, rule: Rule, sites: Iterable[str]) -> "FactorizationPolicy":
+        """One rule at the listed sites, dense everywhere else — the legacy
+        ``FactorizationConfig`` semantics as a policy."""
+        return cls(default=DENSE_RULE, overrides={s: rule for s in sites})
+
+    @classmethod
+    def from_budget(
+        cls,
+        param_budget: int,
+        sites: Mapping[str, tuple[int, int]],
+        use_kernel: bool = False,
+    ) -> "FactorizationPolicy":
+        """Fit ``sites`` ({site: (in_features, out_features)}) under a total
+        parameter budget by converting the most expensive sites to butterfly,
+        walking the block-size ladder down until the budget holds.
+
+        Greedy and deterministic: sites are converted largest-dense-cost
+        first.  Per site, the LARGEST block size whose saving alone clears
+        the remaining deficit is kept (bigger blocks = more MXU-friendly,
+        fewer factors); if no block clears it, the max-saving block (the
+        smallest, since butterfly params shrink with b) is taken and the
+        walk continues with the next site.  Raises if even all-butterfly at
+        block 1 cannot fit the budget.
+        """
+        bfly = registry.get_factorization("butterfly")
+
+        def dense_cost(n_in: int, n_out: int) -> int:
+            return n_in * n_out
+
+        def bfly_cost(n_in: int, n_out: int, block: int) -> int:
+            rule = Rule(kind="butterfly", block_size=block)
+            return bfly.make_spec(rule, n_in, n_out, False, None).param_count()
+
+        costs = {s: dense_cost(*dims) for s, dims in sites.items()}
+        total = sum(costs.values())
+        if total <= param_budget:
+            return cls(default=DENSE_RULE)
+
+        overrides: dict[str, Rule] = {}
+        for site in sorted(sites, key=lambda s: costs[s], reverse=True):
+            n_in, n_out = sites[site]
+            over = total - param_budget
+            chosen = None
+            for block in _BLOCK_LADDER:
+                c = bfly_cost(n_in, n_out, block)
+                saving = costs[site] - c
+                if saving <= 0:
+                    continue
+                chosen = (block, c)
+                if saving >= over:
+                    break  # largest block that alone clears the deficit
+            if chosen is None:
+                continue  # site too small for butterfly to help
+            block, c = chosen
+            overrides[site] = Rule(kind="butterfly", block_size=block,
+                                   use_kernel=use_kernel)
+            total = total - costs[site] + c
+            if total <= param_budget:
+                break
+        if total > param_budget:
+            raise ValueError(
+                f"cannot fit sites under param_budget={param_budget}: "
+                f"best achievable is {total} (all-butterfly, block 1)")
+        return cls(default=DENSE_RULE, overrides=overrides)
+
+    # --------------------------------------------------------- structure --
+    def structural_signature(self) -> dict:
+        """{site: resolved rule projected onto its kind's structural fields}.
+
+        Each kind declares which Rule fields shape its parameter tree via
+        ``register_factorization(..., structural_fields=...)``; undeclared
+        kinds conservatively count every knob.  Two policies with equal
+        signatures build identical parameter trees (same kind and
+        shape-determining hyperparameters at every site), regardless of how
+        the overrides are spelled — glob vs literal, declaration order, or
+        compute-path flags like ``use_kernel``.  This is what checkpoint
+        restore validates against.
+
+        The comparison is conservative: it uses the rule's NOMINAL
+        block_size, while spec factories shrink blocks to fit small layers
+        — so two nominally different policies that happen to shrink to the
+        same effective blocks compare unequal (a refused restore that
+        would have worked, never a corrupted one)."""
+        sig = {}
+        for site in SITES:
+            r = self.resolve(site)
+            fields = registry.get_factorization(r.kind).structural_fields
+            if fields is None:  # undeclared: assume every knob is structural
+                fields = ("block_size", "rank", "permute")
+            sig[site] = {"kind": r.kind,
+                         **{f: getattr(r, f) for f in fields}}
+        return sig
+
+    # --------------------------------------------------------- serialization --
+    def to_dict(self) -> dict:
+        return {
+            "default": self.default.to_dict(),
+            "overrides": {p: r.to_dict() for p, r in self.overrides},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FactorizationPolicy":
+        return cls(default=Rule.from_dict(d.get("default", {})),
+                   overrides=d.get("overrides", {}))
+
+
+DENSE_POLICY = FactorizationPolicy()
+
+# the sites the launch drivers' --fact flag factorizes uniformly (the
+# places LM parameter memory actually goes; head/embeddings stay dense)
+CLASSIC_SITES = ("mlp", "attn_qkv", "attn_out", "expert")
+
+
+def uniform_policy(kind: str, block_size: int = 32, rank: int = 16,
+                   use_kernel: bool = False) -> FactorizationPolicy:
+    """One kind at the classic sites — the --fact CLI flag as a policy."""
+    return FactorizationPolicy.uniform(
+        Rule(kind=kind, block_size=block_size, rank=rank,
+             use_kernel=use_kernel),
+        sites=CLASSIC_SITES)

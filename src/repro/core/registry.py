@@ -1,0 +1,196 @@
+"""Pluggable factorization registry.
+
+Every weight-factorization method the framework can put behind a linear
+layer is a *registry entry*: a ``spec_factory`` that builds a
+:class:`FactorizationSpec` for concrete layer dimensions, plus an optional
+accelerator kernel backend (Pallas on TPU, interpret mode on CPU) attached
+via :func:`register_kernel`.  ``Linear`` dispatches through the registry —
+there is no ``isinstance`` chain to extend when a new method (or a new
+backend for an existing method) is added; PopSparse-style per-backend
+dispatch (arXiv 2303.16999) becomes a one-line registration.
+
+The six built-in kinds (dense, butterfly, pixelfly, lowrank, circulant,
+fastfood — the paper's Table-4 set) are registered at import time.
+Downstream code registers new kinds with::
+
+    register_factorization("mymethod", my_spec_factory)
+    register_kernel("mymethod", my_pallas_apply, supports=lambda spec: ...)
+
+``spec_factory(rule, in_features, out_features, bias, dtype)`` receives the
+per-site :class:`repro.core.policy.Rule` (duck-typed: only ``block_size``,
+``rank`` and ``permute`` are read) and returns a spec object satisfying the
+:class:`FactorizationSpec` protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.baselines import CirculantSpec, DenseSpec, FastfoodSpec, LowRankSpec
+from repro.core.butterfly import ButterflySpec
+from repro.core.pixelfly import PixelflySpec
+
+
+@runtime_checkable
+class FactorizationSpec(Protocol):
+    """What a factorization spec must provide to serve a linear layer."""
+
+    def init(self, key: jax.Array) -> dict: ...
+
+    def apply(self, params: dict, x: jax.Array) -> jax.Array: ...
+
+    def param_count(self) -> int: ...
+
+    def dense_param_count(self) -> int: ...
+
+
+SpecFactory = Callable[..., FactorizationSpec]
+KernelApply = Callable[[Any, dict, jax.Array], jax.Array]
+KernelSupports = Callable[[Any], bool]
+
+
+@dataclasses.dataclass
+class FactorizationEntry:
+    """One registered factorization kind (mutable: kernels attach later)."""
+
+    kind: str
+    spec_factory: SpecFactory
+    kernel_apply: KernelApply | None = None
+    kernel_supports: KernelSupports | None = None
+    # distributed schedule hint: factor weights are small (data-sharded or
+    # replicated), so tokens shard over BOTH mesh axes and features stay
+    # full — true for multi-factor structured kinds (butterfly, pixelfly)
+    shard_tokens: bool = False
+    # which Rule fields shape this kind's parameter tree (checkpoint
+    # restore validates only these); None = conservatively all of them
+    structural_fields: tuple[str, ...] | None = None
+
+    def make_spec(self, rule, in_features: int, out_features: int,
+                  bias: bool, dtype: Any) -> FactorizationSpec:
+        return self.spec_factory(rule, in_features, out_features, bias, dtype)
+
+    def apply(self, spec, params: dict, x: jax.Array,
+              use_kernel: bool = False) -> jax.Array:
+        """Apply the spec, routing through the kernel backend when requested
+        and the backend declares support for this spec."""
+        if use_kernel and self.kernel_apply is not None:
+            if self.kernel_supports is None or self.kernel_supports(spec):
+                return self.kernel_apply(spec, params, x)
+        return spec.apply(params, x)
+
+
+_REGISTRY: dict[str, FactorizationEntry] = {}
+
+
+def register_factorization(
+    kind: str,
+    spec_factory: SpecFactory,
+    kernel_apply: KernelApply | None = None,
+    kernel_supports: KernelSupports | None = None,
+    shard_tokens: bool = False,
+    structural_fields: tuple[str, ...] | None = None,
+    override: bool = False,
+) -> FactorizationEntry:
+    """Register a factorization kind.  Duplicate kinds are rejected unless
+    ``override=True`` (tests and notebooks re-registering on reload)."""
+    if kind in _REGISTRY and not override:
+        raise ValueError(
+            f"factorization kind {kind!r} already registered; pass "
+            f"override=True to replace it")
+    entry = FactorizationEntry(kind, spec_factory, kernel_apply, kernel_supports,
+                               shard_tokens, structural_fields)
+    _REGISTRY[kind] = entry
+    return entry
+
+
+def register_kernel(
+    kind: str,
+    kernel_apply: KernelApply,
+    supports: KernelSupports | None = None,
+) -> FactorizationEntry:
+    """Attach (or replace) an accelerator kernel backend on an existing kind.
+
+    This is how the Pallas butterfly/pixelfly ops plug in — the core layer
+    never imports kernel modules, kernels import the registry."""
+    entry = get_factorization(kind)
+    entry.kernel_apply = kernel_apply
+    entry.kernel_supports = supports
+    return entry
+
+
+def get_factorization(kind: str) -> FactorizationEntry:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown factorization kind {kind!r}; registered: "
+            f"{available_kinds()}") from None
+
+
+def available_kinds() -> tuple[str, ...]:
+    """Registered kinds, in registration order (built-ins first)."""
+    return tuple(_REGISTRY)
+
+
+def is_registered(kind: str) -> bool:
+    return kind in _REGISTRY
+
+
+# --------------------------------------------------------------------------
+# Built-in kinds (the paper's Table-4 method set).
+# --------------------------------------------------------------------------
+
+
+def _shrink_block(block_size: int, in_features: int, out_features: int) -> int:
+    """Block size can't exceed the padded dim; shrink for small layers."""
+    b = block_size
+    while b > 1 and b * 2 > max(in_features, out_features):
+        b //= 2
+    return b
+
+
+def _dense_factory(rule, n_in, n_out, bias, dtype):
+    return DenseSpec(n_in, n_out, bias, dtype)
+
+
+def _butterfly_factory(rule, n_in, n_out, bias, dtype):
+    b = _shrink_block(rule.block_size, n_in, n_out)
+    return ButterflySpec(n_in, n_out, b, bias, rule.permute, dtype)
+
+
+def _pixelfly_factory(rule, n_in, n_out, bias, dtype):
+    b = _shrink_block(rule.block_size, n_in, n_out)
+    return PixelflySpec(n_in, n_out, b, rule.rank, bias, dtype)
+
+
+def _lowrank_factory(rule, n_in, n_out, bias, dtype):
+    return LowRankSpec(n_in, n_out, rule.rank, bias, dtype)
+
+
+def _circulant_factory(rule, n_in, n_out, bias, dtype):
+    return CirculantSpec(n_in, n_out, bias, dtype)
+
+
+def _fastfood_factory(rule, n_in, n_out, bias, dtype):
+    return FastfoodSpec(n_in, n_out, bias, dtype)
+
+
+register_factorization("dense", _dense_factory, structural_fields=())
+register_factorization("butterfly", _butterfly_factory, shard_tokens=True,
+                       structural_fields=("block_size", "permute"))
+register_factorization("pixelfly", _pixelfly_factory, shard_tokens=True,
+                       structural_fields=("block_size", "rank"))
+register_factorization("lowrank", _lowrank_factory,
+                       structural_fields=("rank",))
+register_factorization("circulant", _circulant_factory, structural_fields=())
+register_factorization("fastfood", _fastfood_factory, structural_fields=())
+
+
+def ensure_kernels_registered() -> None:
+    """Import the kernels package so its backends attach to the registry.
+
+    Called lazily on the first kernel-routed apply — keeps ``repro.core``
+    importable without pulling jax.experimental.pallas."""
+    import repro.kernels  # noqa: F401  (registration side effect)

@@ -1,3 +1,48 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel backends, attached to the factorization registry.
+
+Importing this package registers the fused butterfly and block-sparse
+pixelfly kernels as the accelerator backends for their kinds — the core
+layer (``repro.core.factorized.Linear``) never imports kernel modules; it
+calls ``registry.ensure_kernels_registered()`` which imports us.  Blocks
+below the MXU-worthwhile threshold fall back to the jnp reference path via
+the ``supports`` predicate.
+
+The raw pallas_calls have no JVP rule, so each backend is wrapped in a
+custom VJP: kernel forward, reference-``spec.apply`` backward.  The two
+paths agree within kernel tolerance (asserted by the kernel test suite),
+so training with ``use_kernel`` rules is exact up to that tolerance
+instead of crashing in ``jax.grad``.
+"""
+import jax
+
+from repro.core.registry import register_kernel
+from repro.kernels.butterfly.ops import butterfly_linear
+from repro.kernels.pixelfly.ops import pixelfly_linear
+
+# below this block size the Pallas kernels lose to the jnp einsum path
+MIN_KERNEL_BLOCK = 8
+
+
+def _differentiable(kernel_fn):
+    """Kernel forward + reference backward (the spec's jnp apply)."""
+    def apply(spec, params, x):
+        @jax.custom_vjp
+        def f(params, x):
+            return kernel_fn(spec, params, x)
+
+        def fwd(params, x):
+            return f(params, x), (params, x)
+
+        def bwd(res, g):
+            _, vjp = jax.vjp(spec.apply, *res)
+            return vjp(g)
+
+        f.defvjp(fwd, bwd)
+        return f(params, x)
+    return apply
+
+
+register_kernel("butterfly", _differentiable(butterfly_linear),
+                supports=lambda spec: spec.block_size >= MIN_KERNEL_BLOCK)
+register_kernel("pixelfly", _differentiable(pixelfly_linear),
+                supports=lambda spec: spec.block_size >= MIN_KERNEL_BLOCK)

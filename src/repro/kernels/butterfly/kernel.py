@@ -27,6 +27,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.utils import ilog2
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def pack_factors(factors, num_blocks: int, block_size: int) -> jax.Array:
     """Stack per-stride factors (J,2,2,S,b,b) into (L, nb, 2, b, b)."""
@@ -104,7 +107,7 @@ def fused_butterfly_apply(
         out_specs=pl.BlockSpec((batch_tile, n), lambda i, l: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((batch_tile, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -157,7 +160,7 @@ def butterfly_factor_apply(
             (batch_tile, 1, 2, 1, block_size), lambda i, jj, t: (i, jj, 0, t, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((m, j, 2, s, block_size), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,8 +1,10 @@
 """jit'd public wrappers around the butterfly Pallas kernels.
 
 On CPU (this container) the kernels run with ``interpret=True``; on TPU they
-compile natively.  ``butterfly_linear`` is what ``repro.core.Linear`` calls
-when ``FactorizationConfig.use_kernel`` is set.
+compile natively.  ``butterfly_linear`` is registered as the "butterfly"
+kernel backend in the factorization registry (see repro/kernels/__init__.py);
+``repro.core.Linear`` routes through it when the site's Rule sets
+``use_kernel``.
 """
 from __future__ import annotations
 
@@ -20,11 +22,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pick_batch_tile(m: int, n: int, dtype_bytes: int = 4) -> int:
-    """Pick TM so that 2 activation tiles + one packed factor fit ~12MB VMEM."""
+def _pick_batch_tile(m: int, n: int, block_size: int,
+                     dtype_bytes: int = 4) -> int:
+    """Pick TM so the resident working set fits ~12MB VMEM: the activation
+    tiles (input + f32 scratch + output, each (TM, N)) PLUS the per-factor
+    packed weight slab ((nb, 2, b, b) = 2*N*b elements) that the grid
+    pipeline streams in alongside them."""
     budget = 12 * 2**20
+    factor_bytes = 2 * n * block_size * dtype_bytes
     for tm in (512, 256, 128, 64, 32, 16, 8):
-        if 2 * tm * n * dtype_bytes <= budget:
+        if 3 * tm * n * dtype_bytes + factor_bytes <= budget:
             return tm
     return 8
 
@@ -49,7 +56,7 @@ def fused_apply(
     lead = x.shape[:-1]
     m = int(np.prod(lead)) if lead else 1
     xf = x.reshape(m, n)
-    tm = batch_tile or _pick_batch_tile(m, n)
+    tm = batch_tile or _pick_batch_tile(m, n, block_size)
     tm = min(tm, max(8, m))
     pad = (-m) % tm
     if pad:

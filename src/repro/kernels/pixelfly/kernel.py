@@ -23,6 +23,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.utils import ilog2
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _col_index(o, j):
     """Input block-col for output block-row o, support slot j (traced ints)."""
@@ -90,7 +93,7 @@ def pixelfly_bsmm(
         ),
         out_shape=jax.ShapeDtypeStruct((m, nb, block_size), x.dtype),
         scratch_shapes=[pltpu.VMEM((batch_tile, block_size), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

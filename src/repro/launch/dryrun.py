@@ -154,16 +154,20 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, microbatch=None):
 def apply_fact(cfg: ModelConfig, fact: str, block: int = 32) -> ModelConfig:
     """Apply the paper's factorization to a config (--fact butterfly etc.).
 
+    ``--fact mixed`` uses the per-site policy the paper's Table-4 ablation
+    points at: pixelfly MLPs/experts, butterfly attention, dense head.
+
     Default block 32: the compression/MXU-efficiency compromise — b=128 is
     fully MXU-aligned but only ~2.7x compression at d_ff~50k; b=32 gives
     ~9x compression and ~9x fewer FLOPs at quarter-tile MXU efficiency
     (the paper's IPU-vs-GPU granularity trade, relived on TPU)."""
     if not fact or fact == "dense":
         return cfg
-    from repro.core.factorized import FactorizationConfig
-    return cfg.with_fact(FactorizationConfig(
-        kind=fact, block_size=block,
-        sites=("mlp", "attn_qkv", "attn_out", "expert")))
+    from repro.core.policy import uniform_policy
+    if fact == "mixed":
+        from repro.configs.base import recommended_policy
+        return cfg.with_fact(recommended_policy(cfg, block=block))
+    return cfg.with_fact(uniform_policy(fact, block_size=block))
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -230,7 +234,9 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--fact", default="",
-                    help="apply the paper's factorization: butterfly|pixelfly")
+                    help="apply the paper's factorization: any registered "
+                         "kind (butterfly|pixelfly|...) or 'mixed' for the "
+                         "per-site policy")
     ap.add_argument("--bf16-params", action="store_true",
                     help="bf16 params + f32 master (halves grad-AR/FSDP-AG)")
     args = ap.parse_args()

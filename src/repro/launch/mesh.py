@@ -5,6 +5,16 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh grew axis_types (jax.sharding.AxisType) after 0.4.x;
+    pass it when available, fall back to the plain call otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips.
 
@@ -13,8 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
@@ -24,6 +33,4 @@ def dp_axes(mesh) -> tuple[str, ...]:
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for in-process multi-device tests (host platform devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.policy import uniform_policy
 from repro.models import decode_step, forward, init_caches, init_params
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
@@ -50,11 +51,18 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--fact", default="",
+                    help="serve with a uniform factorization kind at the "
+                         "classic sites (butterfly|pixelfly|...)")
+    ap.add_argument("--fact-block", type=int, default=32)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
+    if args.fact and args.fact != "dense":
+        cfg = cfg.with_fact(uniform_policy(args.fact,
+                                           block_size=args.fact_block))
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{cfg.name} takes frontend embeddings; use "
                          "examples/serve_decode.py for the stub flow")

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import logging
 import os
 import time
@@ -26,6 +27,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, reduced
+from repro.core.policy import FactorizationPolicy, uniform_policy
 from repro.data.synthetic import embeddings_batch, lm_batch
 from repro.runtime.fault_tolerance import (
     PreemptionHandler,
@@ -49,6 +51,17 @@ def make_batch_fn(cfg, batch, seq, seed=0):
     return fn
 
 
+def resolve_policy(args) -> FactorizationPolicy | None:
+    """--policy-json (a FactorizationPolicy.to_dict file) wins over --fact
+    (uniform kind at the classic sites); None keeps the config's policy."""
+    if args.policy_json:
+        with open(args.policy_json) as f:
+            return FactorizationPolicy.from_dict(json.load(f))
+    if args.fact:
+        return uniform_policy(args.fact, block_size=args.fact_block)
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="butterfly-lm-100m")
@@ -62,11 +75,21 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fact", default="",
+                    help="uniform factorization kind at the classic sites "
+                         "(butterfly|pixelfly|...)")
+    ap.add_argument("--fact-block", type=int, default=32)
+    ap.add_argument("--policy-json", default="",
+                    help="path to a FactorizationPolicy JSON (per-site rules;"
+                         " overrides --fact)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
+    policy = resolve_policy(args)
+    if policy is not None:
+        cfg = cfg.with_fact(policy)
     tc = TrainConfig(lr=args.lr, microbatch=args.microbatch,
                      schedule="warmup_cosine", warmup=max(args.steps // 10, 5),
                      total_steps=args.steps)
@@ -80,7 +103,7 @@ def main():
 
     start = 0
     if args.resume and mgr.latest_step() is not None:
-        start, state = mgr.restore(state)
+        start, state = mgr.restore(state, policy=cfg.fact)
         log.info("resumed from step %d", start)
 
     losses = []
@@ -96,10 +119,19 @@ def main():
         return state
 
     t0 = time.time()
+    def restore_or_restart():
+        # a failure before the first checkpoint restarts fresh instead of
+        # masking the original error with FileNotFoundError
+        if mgr.latest_step() is None:
+            log.warning("no checkpoint yet; restarting from step %d", start)
+            return start, init_train_state(cfg, tc, jax.random.PRNGKey(0))
+        return mgr.restore(state, policy=cfg.fact)
+
     final_step, state = run_fault_tolerant(
         one_step, state, start, args.steps,
-        save_fn=lambda s, st: mgr.save(s, st, blocking=False),
-        restore_fn=lambda: mgr.restore(state),
+        save_fn=lambda s, st: mgr.save(s, st, blocking=False,
+                                       policy=cfg.fact),
+        restore_fn=restore_or_restart,
         checkpoint_every=args.ckpt_every,
         watchdog=watchdog, preemption=preemption)
     mgr.wait()
@@ -109,7 +141,7 @@ def main():
              losses[0] if losses else float("nan"),
              np.mean(losses[-5:]) if losses else float("nan"))
     log.info("step-time stats: %s", watchdog.stats())
-    mgr.save(final_step, state)
+    mgr.save(final_step, state, policy=cfg.fact)
     preemption.uninstall()
 
 

@@ -1,11 +1,16 @@
-"""SwiGLU MLP — every matmul goes through the factorization registry."""
+"""SwiGLU MLP — every matmul goes through the factorization registry.
+
+The per-site policy decides the structure: ``cfg.fact.resolve("mlp")``
+(or "expert" when called from the MoE path) picks dense, butterfly,
+pixelfly, or any registered kind for these three projections.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.factorized import FactorizationConfig, Linear
+from repro.core.factorized import Linear
 from repro.parallel import context as pctx
 
 

@@ -3,8 +3,9 @@
 ``cfg.pattern`` is a period of (mixer, ffn) slots; the layer stack is
 ``num_periods`` repetitions, scanned with stacked parameters so the HLO holds
 ONE period body regardless of depth (essential for 80-layer dry-run compiles).
-Every linear goes through the factorization registry — the paper's butterfly
-/pixelfly compression is a config flag away for any architecture.
+Every linear goes through the factorization registry with a per-site policy
+(``cfg.fact``) — the paper's butterfly/pixelfly compression, mixed per
+call-site, is a config flag away for any architecture.
 """
 from __future__ import annotations
 

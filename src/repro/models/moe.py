@@ -3,9 +3,10 @@
 Dispatch is GShard-style but never materializes the (T, E, C) one-hot:
 positions-in-expert come from a cumsum over the (T, E) assignment mask and
 tokens are scattered into the (E, C, d) expert buffer.  Expert FFNs are
-*batched factorized linears* — with ``fact.kind='butterfly'`` and 'expert' in
-``fact.sites``, every expert holds butterfly factors instead of dense (the
-paper's compression applied where LLM memory actually goes: expert weights).
+*batched factorized linears* — an "expert" rule in the factorization policy
+(e.g. ``overrides={"expert": Rule(kind="butterfly")}``) makes every expert
+hold butterfly factors instead of dense (the paper's compression applied
+where LLM memory actually goes: expert weights).
 
 A dense "oracle" path (compute all experts, mask by gates) is used for unit
 tests; with generous capacity both paths agree exactly.

@@ -186,6 +186,8 @@ class Roofline:
 def analyze_compiled(compiled) -> Roofline:
     from repro.roofline.hlo_cost import hlo_cost
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     cost = hlo_cost(hlo)
     mem = memory_summary(compiled)

@@ -6,10 +6,11 @@ import pytest
 
 from repro.core import (
     CirculantSpec,
-    FactorizationConfig,
+    FactorizationPolicy,
     FastfoodSpec,
     Linear,
     LowRankSpec,
+    Rule,
     fwht,
 )
 
@@ -57,8 +58,8 @@ def test_compression_ordering():
 
 @pytest.mark.parametrize("kind", ["dense", "butterfly", "pixelfly", "lowrank", "circulant", "fastfood"])
 def test_registry_all_kinds(kind):
-    fc = FactorizationConfig(kind=kind, block_size=8, rank=4, sites=("mlp",))
-    lin = Linear(fc, 64, 32, site="mlp")
+    rule = Rule(kind=kind, block_size=8, rank=4)
+    lin = Linear(rule, 64, 32, site="mlp")
     params = lin.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
     y = lin(params, x)
@@ -67,15 +68,17 @@ def test_registry_all_kinds(kind):
 
 
 def test_registry_site_gating():
-    fc = FactorizationConfig(kind="butterfly", block_size=8, sites=("mlp",))
-    assert fc.kind_for_site("mlp") == "butterfly"
-    assert fc.kind_for_site("attn_qkv") == "dense"
+    pol = FactorizationPolicy.uniform(
+        Rule(kind="butterfly", block_size=8), sites=("mlp",))
+    assert pol.kind_for_site("mlp") == "butterfly"
+    assert pol.kind_for_site("attn_qkv") == "dense"
 
 
 def test_batched_expert_linear():
     """MoE-style: leading expert dim on params, matching leading dim on x."""
-    fc = FactorizationConfig(kind="butterfly", block_size=8, sites=("expert",))
-    lin = Linear(fc, 32, 32, site="expert", batch_dims=(4,))
+    pol = FactorizationPolicy.uniform(
+        Rule(kind="butterfly", block_size=8), sites=("expert",))
+    lin = Linear(pol, 32, 32, site="expert", batch_dims=(4,))
     params = lin.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 6, 32))
     y = lin(params, x)
@@ -85,8 +88,7 @@ def test_batched_expert_linear():
 
 
 def test_jit_and_scan_compatible():
-    fc = FactorizationConfig(kind="butterfly", block_size=4, sites=("mlp",))
-    lin = Linear(fc, 16, 16, site="mlp")
+    lin = Linear(Rule(kind="butterfly", block_size=4), 16, 16, site="mlp")
     params = lin.init(jax.random.PRNGKey(0))
 
     @jax.jit

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, get_config, reduced
-from repro.core.factorized import FactorizationConfig
+from repro.core.policy import FactorizationPolicy, Rule
 from repro.models import forward, init_params, lm_loss
 
 # one representative per family to keep CPU time sane
@@ -24,8 +24,8 @@ FAMILY_REPS = [
 @pytest.mark.parametrize("kind", ["butterfly", "pixelfly"])
 def test_factorized_forward_and_grad(arch, kind):
     cfg = reduced(get_config(arch), periods=1)
-    fact = FactorizationConfig(
-        kind=kind, block_size=8, rank=4,
+    fact = FactorizationPolicy.uniform(
+        Rule(kind=kind, block_size=8, rank=4),
         sites=("mlp", "attn_qkv", "attn_out", "expert", "ssm_proj"))
     cfg = dataclasses.replace(cfg, fact=fact)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -51,7 +51,7 @@ def test_factorization_reduces_params_at_scale():
     from repro.models import param_count
     for arch in ("qwen3-4b", "granite-moe-1b-a400m"):
         cfg = get_config(arch)
-        bcfg = dataclasses.replace(cfg, fact=FactorizationConfig(
-            kind="butterfly", block_size=32,
+        bcfg = dataclasses.replace(cfg, fact=FactorizationPolicy.uniform(
+            Rule(kind="butterfly", block_size=32),
             sites=("mlp", "attn_qkv", "attn_out", "expert")))
         assert param_count(bcfg) < param_count(cfg), arch

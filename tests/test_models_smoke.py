@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, reduced
+from repro.core.policy import DENSE_POLICY
 from repro.models import decode_step, forward, init_caches, init_params, lm_loss
 
 
@@ -72,7 +73,7 @@ def test_butterfly_lm_config_compresses():
     from repro.models import param_count
     cfg = get_config("butterfly-lm-100m")
     dense_cfg = dataclasses.replace(
-        cfg, fact=dataclasses.replace(cfg.fact, kind="dense"))
+        cfg, fact=DENSE_POLICY)
     n_bfly, n_dense = param_count(cfg), param_count(dense_cfg)
     assert n_bfly < 0.7 * n_dense, (n_bfly, n_dense)
 

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ButterflySpec, PixelflySpec, butterfly_support_cols
 from repro.core.utils import bit_reversal_permutation, ilog2, next_pow2, padded_dim
