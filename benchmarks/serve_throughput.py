@@ -1,0 +1,101 @@
+"""Serving throughput: seed token-by-token path vs the batched engine.
+
+Rows (trajectory JSONs track these):
+  serve/prefill/seed      — prompt pushed through ``decode_step`` one token
+                            at a time (P dispatches), the pre-engine path
+  serve/prefill/engine    — ONE ``forward(return_caches)`` dispatch
+  serve/decode/engine     — steady-state slot decode tok/s
+  serve/e2e/engine        — whole Engine.run over a request batch
+
+The acceptance bar is engine prefill >= 3x seed prefill tokens/sec on a
+reduced config; ``main`` exits nonzero if that regresses.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, emit, section
+from repro.configs import get_config, reduced
+from repro.models import decode_step, init_caches, init_params
+from repro.models import prefill as model_prefill
+from repro.serving import Engine, make_requests
+
+
+def _seed_prefill(params, cfg, prompts, max_len):
+    """The pre-engine prefill: one decode_step dispatch per prompt token."""
+    b, p = prompts.shape
+    caches = init_caches(cfg, b, max_len)
+    step = jax.jit(lambda pr, tok, c, pos: decode_step(pr, cfg, tok, c, pos))
+    # compile once outside the timed region (both paths are timed warm)
+    step(params, prompts[:, 0:1], caches, jnp.zeros((b,), jnp.int32))
+
+    def run():
+        c = caches
+        logits = None
+        for t in range(p):
+            logits, c = step(params, prompts[:, t:t + 1], c,
+                             jnp.full((b,), t, jnp.int32))
+        return logits
+
+    return run
+
+
+def run(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
+        max_new: int = 16) -> dict:
+    section(f"serve throughput: {arch} reduced, B={batch}, P={prompt_len}")
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, prompt_len)), jnp.int32)
+    max_len = prompt_len + max_new
+    ntok = batch * prompt_len
+
+    t_seed = bench(_seed_prefill(params, cfg, prompts, max_len))
+    seed_tps = ntok / t_seed
+    emit(f"serve/prefill/seed/{arch}", t_seed, f"tok_per_s={seed_tps:.1f}")
+
+    pf = jax.jit(lambda pr, toks: model_prefill(pr, cfg, toks, max_len))
+    t_eng = bench(lambda: pf(params, prompts))
+    eng_tps = ntok / t_eng
+    emit(f"serve/prefill/engine/{arch}", t_eng,
+         f"tok_per_s={eng_tps:.1f};speedup_vs_seed={eng_tps / seed_tps:.2f}")
+
+    # steady-state decode + end-to-end through the engine API
+    engine = Engine(params, cfg, max_len=max_len, num_slots=batch)
+    reqs = make_requests([np.asarray(prompts[i]) for i in range(batch)],
+                         max_new=max_new)
+    engine.run(reqs)  # warm compile
+    engine2 = Engine(params, cfg, max_len=max_len, num_slots=batch)
+    t0 = bench(lambda: engine2.run(reqs), reps=3, warmup=1)
+    st = engine2.stats
+    emit(f"serve/decode/engine/{arch}", 0.0, f"tok_per_s={st.decode_tps:.1f}")
+    emit(f"serve/e2e/engine/{arch}", t0,
+         f"tok_per_s={batch * max_new / t0:.1f}")
+    return {"seed_prefill_tps": seed_tps, "engine_prefill_tps": eng_tps,
+            "speedup": eng_tps / seed_tps}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fail (exit 1) if engine prefill is below this "
+                         "multiple of the seed path")
+    args = ap.parse_args()
+    r = run(args.arch, args.batch, args.prompt_len, args.max_new)
+    print(f"\nprefill speedup: {r['speedup']:.2f}x "
+          f"(bar: {args.min_speedup:.1f}x)")
+    if r["speedup"] < args.min_speedup:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

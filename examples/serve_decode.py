@@ -1,8 +1,14 @@
-"""Batched serving example: prefill + greedy decode with KV/state caches,
-including a recurrent (xLSTM) arch where the 'KV cache' is O(1) state —
-the long_500k serving story at toy scale.
+"""Batched serving example on the continuous-batching engine, including a
+recurrent (xLSTM) arch where the 'KV cache' is O(1) state — the long_500k
+serving story at toy scale.
+
+Token archs go through ``repro.serving.Engine`` (batched prefill + slot
+decode + per-request sampling).  [vlm]/[audio] archs take frontend
+embeddings, which the engine does not serve; for those this example keeps
+the minimal manual decode loop over the frontend stub.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-4b
+      PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
 """
 import argparse
 import time
@@ -13,6 +19,60 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import decode_step, init_caches, init_params
+from repro.serving import Engine, SamplingParams, make_requests
+
+
+def serve_tokens(cfg, params, args) -> None:
+    rng = np.random.default_rng(1)
+    # mixed prompt lengths: the engine right-pads attention stacks into one
+    # ragged dispatch and groups recurrent stacks by exact length
+    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                        size=args.batch)
+    requests = make_requests(
+        [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens],
+        max_new=args.max_new,
+        sampling=SamplingParams(temperature=args.temperature))
+    engine = Engine(params, cfg, max_len=int(lens.max()) + args.max_new,
+                    num_slots=min(args.batch, 4))
+    print(f"{cfg.name}: {engine.num_slots} slots, cache footprint "
+          f"{engine.cache.nbytes()/1e6:.2f} MB "
+          f"({'O(1) recurrent state' if cfg.sub_quadratic else 'KV cache'})")
+    outputs = engine.run(requests)
+    st = engine.stats
+    gen = sum(len(o.tokens) for o in outputs)
+    print(f"generated {gen} tokens: prefill {st.prefill_tps:.1f} tok/s "
+          f"({st.prefill_dispatches} dispatches), "
+          f"decode {st.decode_tps:.1f} tok/s on CPU")
+    print("sample:", list(outputs[0].tokens)[:12])
+
+
+def serve_embeddings(cfg, params, args) -> None:
+    """Frontend-stub flow: the modality frontend hands the LM embeddings, so
+    prefill/decode feed (B, 1, d) vectors through ``decode_step`` directly."""
+    b, p = args.batch, args.prompt_len
+    max_len = p + args.max_new
+    caches = init_caches(cfg, b, max_len)
+    step = jax.jit(lambda pr, t, c, pos: decode_step(pr, cfg, t, c, pos))
+    emb = jax.random.normal(jax.random.PRNGKey(1), (b, p, cfg.d_model),
+                            cfg.dtype)
+    t0 = time.time()
+    for t in range(p):
+        logits, caches = step(params, emb[:, t:t + 1], caches,
+                              jnp.full((b,), t, jnp.int32))
+    toks = []
+    tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
+    for i in range(args.max_new):
+        toks.append(np.asarray(tok)[:, 0])
+        e = jax.random.normal(jax.random.PRNGKey(100 + i),
+                              (b, 1, cfg.d_model), cfg.dtype)
+        logits, caches = step(params, e, caches,
+                              jnp.full((b,), p + i, jnp.int32))
+        tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(toks, 1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({gen.size/dt:.1f} tok/s on CPU)")
+    print("sample:", gen[0][:12])
 
 
 def main():
@@ -22,56 +82,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=20)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     params = init_params(cfg, jax.random.PRNGKey(0))
-    b, p = args.batch, args.prompt_len
-    max_len = p + args.max_new
-    caches = init_caches(cfg, b, max_len)
-
-    cache_bytes = sum(x.size * x.dtype.itemsize
-                      for x in jax.tree.leaves(caches))
-    print(f"{cfg.name}: cache footprint {cache_bytes/1e6:.2f} MB "
-          f"for max_len={max_len} "
-          f"({'O(1) recurrent state' if cfg.sub_quadratic else 'KV cache'})")
-
-    step = jax.jit(lambda pr, t, c, pos: decode_step(pr, cfg, t, c, pos))
-
     if cfg.input_mode == "tokens":
-        prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
-                                    cfg.vocab_size)
-        feed = lambda t: prompt[:, t:t + 1]
-    else:  # [vlm]/[audio]: frontend stub provides embeddings
-        emb = jax.random.normal(jax.random.PRNGKey(1), (b, p, cfg.d_model),
-                                cfg.dtype)
-        feed = lambda t: emb[:, t:t + 1]
-
-    t0 = time.time()
-    logits = None
-    for t in range(p):  # prefill through the decode path
-        logits, caches = step(params, feed(t), caches,
-                              jnp.full((b,), t, jnp.int32))
-    toks = []
-    tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
-    for i in range(args.max_new):
-        toks.append(np.asarray(tok)[:, 0])
-        if cfg.input_mode == "tokens":
-            logits, caches = step(params, tok, caches,
-                                  jnp.full((b,), p + i, jnp.int32))
-        else:
-            # audio/vlm decode feeds the embedding of the sampled token; the
-            # frontend stub uses a random fixed embedding table
-            e = jax.random.normal(jax.random.PRNGKey(100 + i),
-                                  (b, 1, cfg.d_model), cfg.dtype)
-            logits, caches = step(params, e, caches,
-                                  jnp.full((b,), p + i, jnp.int32))
-        tok = jnp.argmax(logits[..., : cfg.vocab_size], -1).astype(jnp.int32)
-    dt = time.time() - t0
-    gen = np.stack(toks, 1)
-    print(f"generated {gen.shape} tokens in {dt:.2f}s "
-          f"({gen.size/dt:.1f} tok/s on CPU)")
-    print("sample:", gen[0][:12])
+        serve_tokens(cfg, params, args)
+    else:
+        serve_embeddings(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -1,82 +1,124 @@
-"""Serving driver: batched prefill + decode loop with KV/state caches.
+"""Serving CLI: a thin shell over the continuous-batching ``Engine``.
 
-CPU container: runs reduced configs for real.  The cache layouts and step
-functions are identical to the decode dry-run cells.
+CPU container: runs reduced configs for real.  Requests are admitted into
+fixed decode slots under a KV token budget, prefill is ONE batched forward
+per prompt-length group (not a per-token decode loop), and sampling
+(greedy / temperature / top-k) is per-request.  The old token-by-token
+prefill path survives as ``repro.serving.reference.token_by_token_greedy``
+— the parity oracle the engine is tested against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import logging
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.policy import uniform_policy
-from repro.models import decode_step, forward, init_caches, init_params
+from repro.core.policy import FactorizationPolicy, uniform_policy
+from repro.models import init_params
+from repro.serving import Engine, SamplingParams, make_requests
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 log = logging.getLogger("repro.serve")
 
 
-def greedy_decode(params, cfg, prompts: jax.Array, max_new: int,
-                  max_len: int):
-    """prompts: (B, P) int32.  Returns (B, max_new) generated tokens."""
-    b, p = prompts.shape
-    caches = init_caches(cfg, b, max_len)
-    step = jax.jit(lambda pr, tok, c, pos: decode_step(pr, cfg, tok, c, pos))
-
-    # prefill token-by-token through the decode path (exactly the serving
-    # code path; a batched prefill exists via model.forward(return_caches))
-    logits = None
-    for t in range(p):
-        logits, caches = step(params, prompts[:, t:t + 1], caches,
-                              jnp.full((b,), t, jnp.int32))
-    out = []
-    tok = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
-    for i in range(max_new):
-        out.append(tok)
-        logits, caches = step(params, tok, caches,
-                              jnp.full((b,), p + i, jnp.int32))
-        tok = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+def resolve_policy(args) -> FactorizationPolicy | None:
+    """--policy-json (a FactorizationPolicy.to_dict file) wins over --fact
+    (uniform kind at the classic sites); None keeps the config's policy."""
+    if args.policy_json:
+        with open(args.policy_json) as f:
+            return FactorizationPolicy.from_dict(json.load(f))
+    if args.fact and args.fact != "dense":
+        return uniform_policy(args.fact, block_size=args.fact_block)
+    return None
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--reduce", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to serve")
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths in [prompt_len/2, prompt_len]")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (0 = min(batch, 8), or derived from "
+                         "--memory-budget-mb when given)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="KV token budget (0 = slot-bound only)")
+    ap.add_argument("--memory-budget-mb", type=float, default=0.0,
+                    help="derive slots + token budget from a device memory "
+                         "budget (params priced under the active policy)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fact", default="",
                     help="serve with a uniform factorization kind at the "
                          "classic sites (butterfly|pixelfly|...)")
     ap.add_argument("--fact-block", type=int, default=32)
+    ap.add_argument("--policy-json", default="",
+                    help="path to a FactorizationPolicy JSON (wins over --fact)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
-    if args.fact and args.fact != "dense":
-        cfg = cfg.with_fact(uniform_policy(args.fact,
-                                           block_size=args.fact_block))
+    policy = resolve_policy(args)
+    if policy is not None:
+        cfg = cfg.with_fact(policy)
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{cfg.name} takes frontend embeddings; use "
                          "examples/serve_decode.py for the stub flow")
+
     params = init_params(cfg, jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    toks = greedy_decode(params, cfg, prompts, args.max_new,
-                         args.prompt_len + args.max_new)
-    dt = time.time() - t0
-    log.info("generated %s tokens in %.2fs (%.1f tok/s)",
-             toks.shape, dt, toks.size / dt)
-    log.info("sample: %s", np.asarray(toks[0][:12]))
+    rng = np.random.default_rng(args.seed)
+    if args.ragged:
+        lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                            size=args.batch)
+    else:
+        lens = np.full(args.batch, args.prompt_len)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
+    requests = make_requests(
+        [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens],
+        max_new=args.max_new, sampling=sampling)
+
+    max_len = int(lens.max()) + args.max_new
+    if args.memory_budget_mb:  # derived sizing; explicit flags conflict
+        if args.slots or args.token_budget:
+            raise SystemExit("--memory-budget-mb derives slots and token "
+                             "budget; drop --slots/--token-budget")
+        engine = Engine(params, cfg, max_len=max_len,
+                        memory_budget_bytes=int(args.memory_budget_mb * 1e6))
+    else:
+        engine = Engine(params, cfg, max_len=max_len,
+                        num_slots=(args.slots or min(args.batch, 8)),
+                        token_budget=args.token_budget or None)
+    log.info("engine: %d slots, token budget %s, cache %.2f MB",
+             engine.num_slots, engine.scheduler.token_budget,
+             engine.cache.nbytes() / 1e6)
+
+    outputs = engine.run(requests)
+    st = engine.stats
+    total = sum(len(o.tokens) for o in outputs)
+    log.info("generated %d tokens over %d requests", total, len(outputs))
+    log.info("prefill: %d tokens in %d dispatches, %.1f tok/s",
+             st.prefill_tokens, st.prefill_dispatches, st.prefill_tps)
+    log.info("decode: %d tokens in %d steps, %.1f tok/s",
+             st.decode_tokens, st.decode_steps, st.decode_tps)
+    lat = [o.latency for o in outputs]
+    ttft = [o.time_to_first_token for o in outputs]
+    log.info("latency s: mean %.3f p50 %.3f max %.3f | ttft mean %.3f",
+             float(np.mean(lat)), float(np.median(lat)), float(np.max(lat)),
+             float(np.mean(ttft)))
+    log.info("sample %s: %s", outputs[0].request_id,
+             list(outputs[0].tokens)[:12])
 
 
 if __name__ == "__main__":

@@ -6,4 +6,5 @@ from repro.models.model import (
     init_params,
     lm_loss,
     param_count,
+    prefill,
 )

@@ -203,6 +203,55 @@ def decode_step(params: dict, cfg: ModelConfig, inputs: jax.Array,
     return logits, new_caches
 
 
+def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
+            lengths: jax.Array | None = None):
+    """Single-dispatch batched prefill: ONE full-sequence forward that returns
+    logits plus decode-ready caches shaped exactly like
+    ``init_caches(cfg, B, max_len)``.
+
+    inputs: (B, S) tokens or (B, S, d) embeddings with S <= max_len.
+    lengths: (B,) true prompt lengths for right-padded ragged batches
+    (default: every row is full length S).  Attention K/V are zero-padded to
+    ``max_len`` and zeroed beyond each row's true length — decode's additive
+    one-hot cache writes require untouched positions to be exactly zero.
+
+    Ragged lengths (any row shorter than S) are only exact for pure-attention
+    patterns: recurrent mixers (mamba/xlstm) fold right-pad tokens into their
+    O(1) state, so callers must batch those by equal length instead.
+    """
+    b, s = inputs.shape[:2]
+    if s > max_len:
+        raise ValueError(f"prompt length {s} exceeds max_len {max_len}")
+    ragged = lengths is not None
+    if ragged and any(m != "attn" for m, _ in cfg.pattern):
+        raise ValueError(
+            f"{cfg.name}: ragged prefill needs a pure-attention pattern; "
+            "recurrent state would absorb pad tokens — group by length instead")
+    logits, caches = forward(params, cfg, inputs, return_caches=True)
+    valid = None
+    if ragged:
+        valid = (jnp.arange(s)[None, :] < lengths[:, None])  # (B, S)
+
+    fixed = []
+    for i, (m, _) in enumerate(cfg.pattern):
+        c = caches[i]
+        if m == "attn":
+            k, v = c["k"], c["v"]  # (P, B, S, hkv, hd)
+            if valid is not None:
+                mask = valid[None, :, :, None, None].astype(k.dtype)
+                k, v = k * mask, v * mask
+            pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            c = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        elif m == "mamba" and c["conv"].shape[2] < cfg.mamba_dconv - 1:
+            # prompts shorter than the conv window leave a short tail;
+            # left-pad with zeros = the init (nothing-seen) window state
+            short = cfg.mamba_dconv - 1 - c["conv"].shape[2]
+            c = {**c, "conv": jnp.pad(
+                c["conv"], [(0, 0), (0, 0), (short, 0), (0, 0)])}
+        fixed.append(c)
+    return logits, tuple(fixed)
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     """Decode caches for the whole stack, stacked over periods."""
     def one_period():

@@ -1,0 +1,40 @@
+"""Continuous-batching serving: request lifecycle, scheduler, slot cache,
+budget planning, and the engine that ties them to the model stack."""
+from repro.serving.budget import (
+    cache_bytes_per_token,
+    param_bytes,
+    plan_engine,
+    slot_state_bytes,
+)
+from repro.serving.cache import SlotCache
+from repro.serving.engine import Engine, EngineStats
+from repro.serving.reference import token_by_token_greedy
+from repro.serving.request import (
+    FinishReason,
+    Request,
+    RequestOutput,
+    SamplingParams,
+    Sequence,
+    SequenceState,
+    make_requests,
+)
+from repro.serving.scheduler import Scheduler
+
+__all__ = [
+    "Engine",
+    "EngineStats",
+    "FinishReason",
+    "Request",
+    "RequestOutput",
+    "SamplingParams",
+    "Scheduler",
+    "Sequence",
+    "SequenceState",
+    "SlotCache",
+    "cache_bytes_per_token",
+    "make_requests",
+    "param_bytes",
+    "plan_engine",
+    "slot_state_bytes",
+    "token_by_token_greedy",
+]

@@ -1,0 +1,83 @@
+"""Size the engine from a device memory budget + the factorization policy.
+
+The paper's point is that butterfly/pixelfly factorization frees parameter
+memory on a memory-constrained accelerator; serving is where that freed
+memory goes to work — every byte the policy saves on weights becomes KV
+cache, i.e. more concurrent decode slots.  ``plan_engine`` makes that
+trade explicit: param bytes come from the policy-aware spec accounting
+(``init_params`` under ``cfg.fact`` via ``jax.eval_shape`` — no params are
+materialized), cache bytes come from the real ``init_caches`` layouts, and
+what is left over is divided into slots and a KV token budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import init_caches, init_params
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * jax.numpy.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    """Model parameter footprint under ``cfg.fact`` (policy-aware: factorized
+    sites count their factor params, not the dense matmul they replace)."""
+    shapes = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.PRNGKey(0))
+    return _tree_bytes(shapes)
+
+
+def cache_bytes_per_token(cfg: ModelConfig) -> int:
+    """Per-slot cache bytes that grow with sequence length (attention K/V);
+    0 for purely recurrent stacks.  Derived from the real cache layouts."""
+    one = _tree_bytes(jax.eval_shape(lambda: init_caches(cfg, 1, 1)))
+    two = _tree_bytes(jax.eval_shape(lambda: init_caches(cfg, 1, 2)))
+    return two - one
+
+
+def slot_state_bytes(cfg: ModelConfig) -> int:
+    """Per-slot cache bytes independent of length (recurrent state, conv
+    tails, stabilizers)."""
+    one = _tree_bytes(jax.eval_shape(lambda: init_caches(cfg, 1, 1)))
+    return one - cache_bytes_per_token(cfg)
+
+
+def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
+                mean_seq_tokens: int | None = None,
+                max_slots: int = 256) -> tuple[int, int | None]:
+    """(num_slots, token_budget) that fit ``memory_bytes``.
+
+    Slots are sized for ``mean_seq_tokens`` occupancy (default max_len / 2):
+    continuous batching overcommits slots relative to the worst case, and
+    the scheduler's token budget — the actual bytes available divided by
+    per-token bytes — is what keeps worst-case admissions honest.  Returns
+    ``token_budget=None`` (unlimited) for recurrent stacks whose per-slot
+    state is O(1).
+    """
+    mean = mean_seq_tokens or max(1, max_len // 2)
+    avail = memory_bytes - param_bytes(cfg)
+    if avail <= 0:
+        raise ValueError(
+            f"{cfg.name}: params alone ({param_bytes(cfg)} B) exceed the "
+            f"memory budget ({memory_bytes} B); try a tighter factorization "
+            "policy (FactorizationPolicy.from_budget)")
+    per_tok = cache_bytes_per_token(cfg)
+    fixed = slot_state_bytes(cfg)
+    # floor: one slot's fixed state + the smallest admissible request
+    # (prompt 1 + max_new 1 = 2 reserved tokens)
+    if avail < fixed + 2 * per_tok:
+        raise ValueError(
+            f"{cfg.name}: {avail} B left after params cannot hold even one "
+            f"minimal sequence ({fixed + 2 * per_tok} B)")
+    per_slot = fixed + per_tok * mean
+    slots = int(avail // per_slot) if per_slot else max_slots
+    slots = max(1, min(slots, max_slots))
+    if per_tok == 0:
+        return slots, None
+    tokens = int((avail - slots * fixed) // per_tok)
+    return slots, min(tokens, slots * max_len)

@@ -1,0 +1,78 @@
+"""Slot-indexed ragged KV/state cache for continuous batching.
+
+Reuses the exact layouts of ``models.init_caches``: every leaf is stacked
+``(num_periods, num_slots, ...)``, so slot s of the engine IS batch row s of
+the decode step — admitting a sequence writes one batch row, retiring it
+restores that row to its init value.  ``insert`` takes decode-ready caches
+produced by ``models.prefill`` (same structure, any batch size) and copies
+one or more rows into slots in a single gather/scatter; ``evict`` resets a
+slot from a kept blank template (NOT zeros: mLSTM/sLSTM stabilizer state
+inits to -1e30, so a zero reset would corrupt a reused slot).
+"""
+from __future__ import annotations
+
+from typing import Sequence as TypingSequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_caches
+
+
+class SlotCache:
+    """Decode caches for ``num_slots`` fixed slots of length ``max_len``."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.data = init_caches(cfg, num_slots, max_len)
+        # blank single-slot template used to restore evicted slots
+        self._blank = init_caches(cfg, 1, max_len)
+
+    # ----------------------------------------------------------- insert --
+    def insert(self, slots: TypingSequence[int], caches,
+               rows: TypingSequence[int] | None = None) -> None:
+        """Copy batch rows of ``caches`` (shaped like init_caches(cfg, B,
+        max_len), e.g. from models.prefill) into ``slots``.  ``rows``
+        defaults to 0..len(slots)-1."""
+        if rows is None:
+            rows = list(range(len(slots)))
+        if len(rows) != len(slots):
+            raise ValueError(f"{len(slots)} slots vs {len(rows)} rows")
+        self._check_slots(slots)
+        s_idx = jnp.asarray(list(slots), jnp.int32)
+        r_idx = jnp.asarray(list(rows), jnp.int32)
+        self.data = jax.tree.map(
+            lambda dst, src: dst.at[:, s_idx].set(
+                jnp.take(src, r_idx, axis=1).astype(dst.dtype)),
+            self.data, caches)
+
+    # ------------------------------------------------------------ evict --
+    def evict(self, slots: TypingSequence[int]) -> None:
+        """Restore ``slots`` to their init state so they can be reused
+        bit-exactly by the next insert."""
+        self._check_slots(slots)
+        s_idx = jnp.asarray(list(slots), jnp.int32)
+        self.data = jax.tree.map(
+            lambda dst, blank: dst.at[:, s_idx].set(
+                jnp.broadcast_to(blank[:, 0:1],
+                                 blank.shape[:1] + (len(slots),)
+                                 + blank.shape[2:])),
+            self.data, self._blank)
+
+    # ------------------------------------------------------------ views --
+    def slot_view(self, slot: int):
+        """One slot's caches as a batch-of-1 pytree (test/debug helper)."""
+        return jax.tree.map(lambda x: x[:, slot:slot + 1], self.data)
+
+    def nbytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
+
+    def _check_slots(self, slots: TypingSequence[int]) -> None:
+        bad = [s for s in slots if not 0 <= int(s) < self.num_slots]
+        if bad:
+            raise IndexError(f"slots {bad} out of range [0, {self.num_slots})")
+        if len(set(int(s) for s in slots)) != len(slots):
+            raise ValueError(f"duplicate slots in {list(slots)}")

@@ -1,0 +1,271 @@
+"""Continuous-batching serving engine: batched prefill + fixed-slot decode.
+
+One ``Engine`` owns the compiled step functions, a :class:`SlotCache`, and
+a :class:`Scheduler`.  ``run(requests)`` drives the lifecycle:
+
+  admit (FIFO, budget-checked) -> batched prefill (ONE ``forward`` dispatch
+  per prompt-length group; one ragged padded dispatch for pure-attention
+  stacks) -> insert caches into free slots -> step ALL slots through
+  ``decode_step`` each iteration -> retire finished sequences and reuse
+  their slots for the next admissions.
+
+The decode step is compiled once for ``(num_slots, 1)`` and never
+recompiled as requests come and go — idle slots ride along and their rows
+are fully overwritten at the next insert.  Sampling (greedy / temperature /
+top-k) is vectorized per slot inside the same jit, with per-request seeds
+folded with the sequence position so any request replays deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.serving.budget import plan_engine
+from repro.serving.cache import SlotCache
+from repro.serving.request import Request, RequestOutput, Sequence
+from repro.serving.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Cumulative throughput counters (wall clock, block_until_ready'd)."""
+
+    prefill_tokens: int = 0
+    prefill_time: float = 0.0
+    prefill_dispatches: int = 0
+    decode_tokens: int = 0
+    decode_time: float = 0.0
+    decode_steps: int = 0
+
+    @property
+    def prefill_tps(self) -> float:
+        return self.prefill_tokens / self.prefill_time if self.prefill_time else 0.0
+
+    @property
+    def decode_tps(self) -> float:
+        return self.decode_tokens / self.decode_time if self.decode_time else 0.0
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, x - 1).bit_length()
+
+
+def _make_sampler(cfg: ModelConfig):
+    """(logits (N, padded_vocab), temps, top_k, seeds, positions) -> (N,) int32.
+
+    Vocab-pad logits are sliced away exactly once, here.  temperature 0 is
+    greedy argmax; otherwise softmax sampling at that temperature, optionally
+    truncated to the top-k logits.  The PRNG key for a token at sequence
+    index i is fold_in(PRNGKey(seed), i) — independent of batching/slots.
+    """
+    v = cfg.vocab_size
+
+    def sample(logits, temps, top_k, seeds, positions):
+        lg = logits[..., :v].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        srt = jnp.sort(lg, axis=-1)  # ascending; kth-largest sits at v - k
+        kidx = jnp.clip(v - top_k, 0, v - 1)
+        kth = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
+        cut = (top_k[:, None] > 0) & (lg < kth)
+        scaled = jnp.where(cut, -jnp.inf, lg) / jnp.maximum(temps, 1e-6)[:, None]
+        keys = jax.vmap(
+            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+        )(seeds, positions)
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+        return jnp.where(temps > 0, drawn, greedy)
+
+    return sample
+
+
+class Engine:
+    """Continuous-batching engine over fixed decode slots.
+
+    num_slots/token_budget can be given directly, or derived from a device
+    ``memory_budget_bytes`` via :func:`repro.serving.budget.plan_engine`
+    (params priced under the active FactorizationPolicy; leftover memory
+    becomes KV).  ``eos_id`` optionally stops sequences early.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int,
+                 num_slots: int | None = None,
+                 token_budget: int | None = None,
+                 memory_budget_bytes: int | None = None,
+                 eos_id: int | None = None):
+        if cfg.input_mode != "tokens":
+            raise ValueError(
+                f"{cfg.name} takes frontend embeddings; the engine serves "
+                "token models (see examples/serve_decode.py for the stub flow)")
+        if memory_budget_bytes is not None:
+            if num_slots is not None or token_budget is not None:
+                raise ValueError(
+                    "pass either memory_budget_bytes (slots/budget derived) "
+                    "or explicit num_slots/token_budget, not both")
+            num_slots, token_budget = plan_engine(cfg, memory_budget_bytes,
+                                                  max_len)
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_slots = num_slots or 4
+        self.eos_id = eos_id
+        self.cache = SlotCache(cfg, self.num_slots, max_len)
+        self.scheduler = Scheduler(self.num_slots, token_budget)
+        self.stats = EngineStats()
+        self._attn_only = all(m == "attn" for m, _ in cfg.pattern)
+        self._sample = _make_sampler(cfg)
+
+        # per-slot host state fed to the jitted step each iteration
+        ns = self.num_slots
+        self._tok = np.zeros((ns, 1), np.int32)
+        self._pos = np.zeros((ns,), np.int32)
+        self._temps = np.zeros((ns,), np.float32)
+        self._topk = np.zeros((ns,), np.int32)
+        self._seeds = np.zeros((ns,), np.uint32)
+
+        def step_fn(params, data, tok, pos, temps, topk, seeds):
+            logits, data = decode_step(params, cfg, tok, data, pos)
+            nxt = self._sample(logits[:, 0], temps, topk, seeds, pos + 1)
+            return nxt, data
+
+        def prefill_fn(params, prompts, lengths, temps, topk, seeds,
+                       ragged: bool):
+            logits, caches = prefill(params, cfg, prompts, max_len,
+                                     lengths if ragged else None)
+            last = jnp.take_along_axis(
+                logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+            first = self._sample(last, temps, topk, seeds, lengths)
+            return first, caches
+
+        self._step = jax.jit(step_fn)
+        self._prefill = jax.jit(prefill_fn, static_argnames=("ragged",))
+
+    # ---------------------------------------------------------- lifecycle --
+    def run(self, requests: list[Request]) -> list[RequestOutput]:
+        """Serve ``requests`` to completion; returns outputs in request order."""
+        seqs = [Sequence(r) for r in requests]
+        budget = self.scheduler.token_budget
+        # validate the whole batch BEFORE enqueuing anything: a mid-add_all
+        # rejection would leave ghost sequences in the queue that eat slots
+        # on the next run and whose outputs nobody collects
+        for s in seqs:
+            if s.reserved_tokens > self.max_len:
+                raise ValueError(
+                    f"{s.request_id}: prompt+max_new = {s.reserved_tokens} "
+                    f"exceeds engine max_len = {self.max_len}")
+            if budget is not None and s.reserved_tokens > budget:
+                raise ValueError(
+                    f"{s.request_id}: prompt+max_new = {s.reserved_tokens} "
+                    f"exceeds the token budget {budget}")
+        self.scheduler.add_all(seqs)
+        while self.scheduler.has_work:
+            admitted = self.scheduler.admit()
+            if admitted:
+                self._prefill_admitted(admitted)
+                self._retire_finished()
+                continue  # retiring may have unblocked the queue head
+            active = list(self.scheduler.active.values())
+            if not active:
+                raise RuntimeError(
+                    "scheduler stalled: waiting requests but nothing active")
+            self._decode_once(active)
+            self._retire_finished()
+        return [s.to_output() for s in seqs]
+
+    # ------------------------------------------------------------ prefill --
+    def _prefill_admitted(self, admitted: list[Sequence]) -> None:
+        """Batched prefill: pure-attention stacks take mixed lengths in one
+        right-padded dispatch; recurrent stacks are grouped by exact length
+        (pad tokens would pollute O(1) state) — still one dispatch per group,
+        never per token."""
+        lengths = {s.prompt_len for s in admitted}
+        if self._attn_only or len(lengths) == 1:
+            groups = [admitted]
+        else:
+            by_len: dict[int, list[Sequence]] = {}
+            for s in admitted:
+                by_len.setdefault(s.prompt_len, []).append(s)
+            groups = list(by_len.values())
+        for group in groups:
+            self._prefill_group(group)
+
+    def _prefill_group(self, group: list[Sequence]) -> None:
+        width = max(s.prompt_len for s in group)
+        rows = len(group)
+        if self._attn_only:
+            # bucket (rows, width) to powers of two so a long-lived engine
+            # compiles O(log slots * log max_len) prefill variants, not one
+            # per admission shape; dummy rows/columns are masked out by the
+            # ragged lengths and never inserted into the cache
+            width = min(_next_pow2(width), self.max_len)
+            rows = min(_next_pow2(rows), self.num_slots)
+        prompts = np.zeros((rows, width), np.int32)
+        lens = np.ones((rows,), np.int32)  # dummy rows: length-1 stub
+        temps = np.zeros((rows,), np.float32)
+        topk = np.zeros((rows,), np.int32)
+        seeds = np.zeros((rows,), np.uint32)
+        for j, s in enumerate(group):
+            prompts[j, : s.prompt_len] = s.request.prompt
+            lens[j] = s.prompt_len
+            temps[j] = s.request.sampling.temperature
+            topk[j] = s.request.sampling.top_k
+            seeds[j] = s.request.sampling.seed
+        ragged = bool((lens != width).any())
+
+        t0 = time.perf_counter()
+        first, caches = self._prefill(self.params, jnp.asarray(prompts),
+                                      jnp.asarray(lens), jnp.asarray(temps),
+                                      jnp.asarray(topk), jnp.asarray(seeds),
+                                      ragged=ragged)
+        jax.block_until_ready((first, caches))
+        slots = [s.slot for s in group]
+        self.cache.insert(slots, caches)
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += int(lens[: len(group)].sum())
+        self.stats.prefill_dispatches += 1
+
+        first = np.asarray(first)
+        for j, s in enumerate(group):
+            s.append_token(int(first[j]), self.eos_id)
+            slot = s.slot
+            self._tok[slot, 0] = first[j]
+            self._pos[slot] = s.prompt_len
+            self._temps[slot] = temps[j]
+            self._topk[slot] = topk[j]
+            self._seeds[slot] = seeds[j]
+
+    # ------------------------------------------------------------- decode --
+    def _decode_once(self, active: list[Sequence]) -> None:
+        t0 = time.perf_counter()
+        nxt, self.cache.data = self._step(
+            self.params, self.cache.data, jnp.asarray(self._tok),
+            jnp.asarray(self._pos), jnp.asarray(self._temps),
+            jnp.asarray(self._topk), jnp.asarray(self._seeds))
+        nxt = np.asarray(nxt)
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(active)
+        for s in active:
+            slot = s.slot
+            s.append_token(int(nxt[slot]), self.eos_id)
+            self._tok[slot, 0] = nxt[slot]
+            self._pos[slot] += 1
+
+    # ------------------------------------------------------------- retire --
+    def _retire_finished(self) -> None:
+        done = [s for s in self.scheduler.active.values() if s.done]
+        if not done:
+            return
+        self.cache.evict([s.slot for s in done])
+        for s in done:
+            slot = s.slot
+            self.scheduler.retire(s)
+            self._tok[slot, 0] = 0
+            self._pos[slot] = 0
+            self._temps[slot] = 0.0
+            self._topk[slot] = 0
+            self._seeds[slot] = 0

@@ -1,0 +1,146 @@
+"""Request/Sequence lifecycle for the serving engine.
+
+A ``Request`` is what a client submits: prompt tokens, a generation budget,
+and sampling parameters.  The engine wraps it in a ``Sequence`` that tracks
+scheduler state (WAITING -> RUNNING -> FINISHED), the decode slot it
+occupies, the tokens generated so far, and wall-clock timestamps for
+latency accounting.  ``RequestOutput`` is the finished, client-facing view.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Sequence as TypingSequence
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How to turn logits into a token.
+
+    temperature: 0 = greedy argmax; > 0 = softmax sampling at that
+    temperature.  top_k: 0 = full vocabulary; > 0 restricts sampling to the
+    k highest-logit tokens.  seed: per-request PRNG seed (decode steps fold
+    in the position, so regenerating a request is deterministic).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: prompt tokens + budget + sampling."""
+
+    request_id: str
+    prompt: tuple[int, ...]
+    max_new: int
+    sampling: SamplingParams = GREEDY
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
+        if not self.prompt:
+            raise ValueError(f"{self.request_id}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"{self.request_id}: max_new must be >= 1")
+
+
+class SequenceState(enum.Enum):
+    WAITING = "waiting"    # queued, no slot
+    RUNNING = "running"    # admitted into a decode slot
+    FINISHED = "finished"  # retired; slot released
+
+
+class FinishReason(enum.Enum):
+    LENGTH = "length"  # hit max_new
+    EOS = "eos"        # sampled the engine's eos token
+
+
+class Sequence:
+    """A request moving through the engine: slot, generated tokens, timings."""
+
+    def __init__(self, request: Request, clock=time.monotonic):
+        self.request = request
+        self.state = SequenceState.WAITING
+        self.slot: int | None = None
+        self.tokens: list[int] = []
+        self.finish_reason: FinishReason | None = None
+        self._clock = clock
+        self.t_arrival = clock()
+        self.t_admitted: float | None = None
+        self.t_first_token: float | None = None
+        self.t_finished: float | None = None
+
+    def now(self) -> float:
+        return self._clock()
+
+    # ------------------------------------------------------------ views --
+    @property
+    def request_id(self) -> str:
+        return self.request.request_id
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def reserved_tokens(self) -> int:
+        """Worst-case KV footprint this sequence can reach (prompt + budget);
+        the scheduler reserves this against the token budget at admission."""
+        return self.prompt_len + self.request.max_new
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    # ---------------------------------------------------------- updates --
+    def append_token(self, token: int, eos_id: int | None = None) -> None:
+        if self.t_first_token is None:
+            self.t_first_token = self._clock()
+        self.tokens.append(int(token))
+        if eos_id is not None and int(token) == eos_id:
+            self.finish_reason = FinishReason.EOS
+        elif len(self.tokens) >= self.request.max_new:
+            self.finish_reason = FinishReason.LENGTH
+
+    def to_output(self) -> "RequestOutput":
+        return RequestOutput(
+            request_id=self.request_id,
+            prompt=self.request.prompt,
+            tokens=tuple(self.tokens),
+            finish_reason=self.finish_reason,
+            queue_time=(self.t_admitted or 0.0) - self.t_arrival,
+            time_to_first_token=(self.t_first_token or 0.0) - self.t_arrival,
+            latency=(self.t_finished or 0.0) - self.t_arrival,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Finished request: generated tokens + latency breakdown (seconds)."""
+
+    request_id: str
+    prompt: tuple[int, ...]
+    tokens: tuple[int, ...]
+    finish_reason: FinishReason | None
+    queue_time: float
+    time_to_first_token: float
+    latency: float
+
+
+def make_requests(prompts: TypingSequence[TypingSequence[int]], max_new: int,
+                  sampling: SamplingParams = GREEDY) -> list[Request]:
+    """Batch-of-prompts convenience used by the CLI and benchmarks."""
+    return [Request(request_id=f"req-{i}", prompt=tuple(p), max_new=max_new,
+                    sampling=sampling)
+            for i, p in enumerate(prompts)]

@@ -1,0 +1,98 @@
+"""Continuous-batching scheduler: fixed decode slots + a KV token budget.
+
+The decode step is compiled once for a fixed slot count, so scheduling is
+the art of keeping those slots full (PopSparse's lesson: structured
+sparsity pays off only when the compute units stay fed).  Admission is
+strict FIFO from a waiting queue: the head request is admitted as soon as
+a slot is free AND reserving its worst-case token footprint
+(prompt + max_new) fits the budget; the queue never skips the head, which
+is what makes fairness and eventual admission provable.
+
+Invariants (property-tested in tests/test_serving_scheduler.py):
+  * no slot is ever assigned to two live sequences,
+  * sum of reserved tokens over active sequences never exceeds the budget,
+  * every added sequence is eventually admitted and retired,
+  * admission order equals arrival order (FIFO).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable
+
+from repro.serving.request import Sequence, SequenceState
+
+
+class Scheduler:
+    """Admit/retire sequences into ``num_slots`` decode slots under a token
+    budget.  ``token_budget=None`` disables the budget (recurrent archs whose
+    per-sequence state is O(1))."""
+
+    def __init__(self, num_slots: int, token_budget: int | None = None):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        self.num_slots = num_slots
+        self.token_budget = token_budget
+        self.waiting: deque[Sequence] = deque()
+        self.active: dict[int, Sequence] = {}  # slot -> sequence
+        # stack of free slots; reversed so pop() hands out slot 0 first
+        self._free: list[int] = list(range(num_slots))[::-1]
+        self.reserved_tokens = 0
+
+    # ------------------------------------------------------------ intake --
+    def add(self, seq: Sequence) -> None:
+        """Queue a sequence.  Rejects up front anything that could never be
+        admitted (it would deadlock the strict-FIFO queue)."""
+        need = seq.reserved_tokens
+        if self.token_budget is not None and need > self.token_budget:
+            raise ValueError(
+                f"{seq.request_id}: needs {need} tokens but the budget is "
+                f"{self.token_budget}; it would never be admitted")
+        seq.state = SequenceState.WAITING
+        self.waiting.append(seq)
+
+    def add_all(self, seqs: Iterable[Sequence]) -> None:
+        for s in seqs:
+            self.add(s)
+
+    # --------------------------------------------------------- admission --
+    def admit(self) -> list[Sequence]:
+        """Admit from the head of the queue while a slot is free and the
+        budget holds.  Returns the newly admitted sequences (they still need
+        a prefill before they can decode)."""
+        admitted = []
+        while self.waiting and self._free:
+            need = self.waiting[0].reserved_tokens
+            if (self.token_budget is not None
+                    and self.reserved_tokens + need > self.token_budget):
+                break  # strict FIFO: never admit past a blocked head
+            seq = self.waiting.popleft()
+            slot = self._free.pop()
+            seq.slot = slot
+            seq.state = SequenceState.RUNNING
+            seq.t_admitted = seq.now()
+            self.active[slot] = seq
+            self.reserved_tokens += need
+            admitted.append(seq)
+        return admitted
+
+    # -------------------------------------------------------- retirement --
+    def retire(self, seq: Sequence) -> None:
+        if self.active.get(seq.slot) is not seq:
+            raise ValueError(f"{seq.request_id} is not active in slot {seq.slot}")
+        del self.active[seq.slot]
+        self._free.append(seq.slot)
+        self.reserved_tokens -= seq.reserved_tokens
+        seq.slot = None
+        seq.state = SequenceState.FINISHED
+        seq.t_finished = seq.now()
+
+    # ------------------------------------------------------------- views --
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)

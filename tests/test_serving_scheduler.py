@@ -1,0 +1,160 @@
+"""Property tests for the continuous-batching scheduler.
+
+Pure-Python (no jax).  The invariant checker ``_drain`` asserts the
+scheduler's contract over any request set / retirement interleaving:
+  * no slot is ever double-assigned,
+  * the reserved-token budget is never exceeded,
+  * every added request is eventually admitted and retired,
+  * admission order is strict FIFO (never skips the head).
+
+Hypothesis drives it with random shapes when available (CI installs
+requirements-dev.txt); a seeded-random fallback keeps the same invariants
+exercised where hypothesis is absent.
+"""
+import random
+
+import pytest
+
+from repro.serving.request import Request, Sequence, SequenceState
+from repro.serving.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+
+def _seq(i: int, prompt_len: int, max_new: int) -> Sequence:
+    return Sequence(Request(f"r{i}", tuple(range(1, prompt_len + 1)), max_new))
+
+
+def _drain(shapes, num_slots, budget_slack, pick_retirees):
+    """Run the scheduler to completion, asserting every invariant along the
+    way.  ``pick_retirees(active_sorted) -> non-empty subset`` injects the
+    (random) retirement interleaving."""
+    seqs = [_seq(i, p, m) for i, (p, m) in enumerate(shapes)]
+    # budget always >= the largest single request, else add() rejects it
+    budget = max(s.reserved_tokens for s in seqs) + budget_slack
+    sched = Scheduler(num_slots, token_budget=budget)
+    sched.add_all(seqs)
+
+    admitted_order = []
+    retired = set()
+    for _ in range(10 * len(seqs) + 10):  # bounded: fail instead of hanging
+        newly = sched.admit()
+        admitted_order.extend(s.request_id for s in newly)
+
+        # invariant: active slots are unique, in range, and self-consistent
+        slots = [s.slot for s in sched.active.values()]
+        assert len(slots) == len(set(slots))
+        assert all(0 <= s < num_slots for s in slots)
+        assert all(sched.active[s.slot] is s for s in sched.active.values())
+
+        # invariant: reserved tokens never exceed the budget
+        assert sum(s.reserved_tokens for s in sched.active.values()) <= budget
+        assert sched.reserved_tokens == sum(
+            s.reserved_tokens for s in sched.active.values())
+
+        if not sched.has_work:
+            break
+        # progress is guaranteed: something must always be active
+        assert sched.active, "waiting requests but nothing active (deadlock)"
+        active = sorted(sched.active.values(), key=lambda s: s.request_id)
+        for s in pick_retirees(active):
+            sched.retire(s)
+            retired.add(s.request_id)
+
+    # every request was admitted and retired, exactly once each
+    assert not sched.has_work
+    assert retired == {s.request_id for s in seqs}
+    assert len(admitted_order) == len(seqs)
+    # FIFO fairness: admission order equals arrival order
+    assert admitted_order == [s.request_id for s in seqs]
+    assert all(s.state is SequenceState.FINISHED for s in seqs)
+
+
+if HAVE_HYPOTHESIS:
+    request_shapes = st.lists(
+        st.tuples(st.integers(1, 20), st.integers(1, 20)),
+        min_size=1, max_size=30)
+
+    @given(shapes=request_shapes, num_slots=st.integers(1, 8),
+           budget_slack=st.integers(0, 60), data=st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_scheduler_invariants_hypothesis(shapes, num_slots, budget_slack,
+                                             data):
+        def pick(active):
+            return data.draw(st.lists(
+                st.sampled_from(active), min_size=1, max_size=len(active),
+                unique=True))
+
+        _drain(shapes, num_slots, budget_slack, pick)
+
+    @given(shapes=request_shapes, num_slots=st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_scheduler_no_budget_is_slot_bound(shapes, num_slots):
+        """token_budget=None: admission is limited by slots alone."""
+        seqs = [_seq(i, p, m) for i, (p, m) in enumerate(shapes)]
+        sched = Scheduler(num_slots, token_budget=None)
+        sched.add_all(seqs)
+        newly = sched.admit()
+        assert len(newly) == min(num_slots, len(seqs))
+        assert sched.free_slots == num_slots - len(newly)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_scheduler_invariants_seeded(trial):
+    """Seeded-random version of the invariant drain: always runs, even where
+    hypothesis (a dev-only dep) is absent."""
+    rng = random.Random(trial)
+    shapes = [(rng.randint(1, 20), rng.randint(1, 20))
+              for _ in range(rng.randint(1, 30))]
+    num_slots = rng.randint(1, 8)
+
+    def pick(active):
+        return rng.sample(active, rng.randint(1, len(active)))
+
+    _drain(shapes, num_slots, rng.randint(0, 60), pick)
+
+
+def test_head_blocked_by_budget_is_never_skipped():
+    """A big head request must not be overtaken by a small later one."""
+    sched = Scheduler(num_slots=4, token_budget=20)
+    big, small = _seq(0, 10, 8), _seq(1, 1, 1)
+    filler = _seq(2, 5, 5)  # occupies 10 of 20 tokens
+    sched.add_all([filler, big, small])
+    assert [s.request_id for s in sched.admit()] == ["r2"]
+    # head (r0, needs 18) does not fit beside r2 (10/20 used): nothing new,
+    # and r1 (needs 2, would fit) must wait behind it
+    assert sched.admit() == []
+    assert small.state is SequenceState.WAITING
+    sched.retire(filler)
+    assert [s.request_id for s in sched.admit()] == ["r0", "r1"]
+
+
+def test_add_rejects_request_that_can_never_fit():
+    sched = Scheduler(num_slots=2, token_budget=10)
+    with pytest.raises(ValueError, match="never be admitted"):
+        sched.add(_seq(0, 8, 8))
+
+
+def test_retire_frees_slot_and_budget_for_reuse():
+    sched = Scheduler(num_slots=1, token_budget=12)
+    a, b = _seq(0, 5, 5), _seq(1, 6, 6)
+    sched.add_all([a, b])
+    assert sched.admit() == [a]
+    assert sched.admit() == []  # no slot free
+    sched.retire(a)
+    assert sched.reserved_tokens == 0
+    assert sched.admit() == [b]
+    assert a.slot is None
+    assert b.slot == 0  # b reuses a's slot
+
+
+def test_retire_rejects_non_active_sequence():
+    sched = Scheduler(num_slots=1)
+    a = _seq(0, 2, 2)
+    sched.add(a)
+    with pytest.raises(ValueError):
+        sched.retire(a)  # still waiting, not active
