@@ -6,6 +6,8 @@ Rows (trajectory JSONs track these):
   serve/prefill/engine    — ONE ``forward(return_caches)`` dispatch
   serve/decode/engine     — steady-state slot decode tok/s
   serve/e2e/engine        — whole Engine.run over a request batch
+  serve/e2e/mesh          — same batch through a --dp x --tp mesh engine
+                            (asserts decode compiled exactly once)
 
 The acceptance bar is engine prefill >= 3x seed prefill tokens/sec on a
 reduced config; ``main`` exits nonzero if that regresses.
@@ -20,6 +22,7 @@ import numpy as np
 
 from benchmarks.common import bench, emit, section
 from repro.configs import get_config, reduced
+from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
 from repro.models import prefill as model_prefill
 from repro.serving import Engine, make_requests
@@ -45,7 +48,7 @@ def _seed_prefill(params, cfg, prompts, max_len):
 
 
 def run(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
-        max_new: int = 16) -> dict:
+        max_new: int = 16, dp: int = 1, tp: int = 1) -> dict:
     section(f"serve throughput: {arch} reduced, B={batch}, P={prompt_len}")
     cfg = reduced(get_config(arch))
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -76,6 +79,22 @@ def run(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
     emit(f"serve/decode/engine/{arch}", 0.0, f"tok_per_s={st.decode_tps:.1f}")
     emit(f"serve/e2e/engine/{arch}", t0,
          f"tok_per_s={batch * max_new / t0:.1f}")
+
+    if dp * tp > 1:  # --mesh mode: one SPMD decode dispatch across dp x tp
+        mesh = make_serving_mesh(dp, tp)
+        mesh_engine = Engine(params, cfg, max_len=max_len, num_slots=batch,
+                             mesh=mesh)
+        mesh_engine.run(reqs)  # warm compile
+        t_mesh = bench(lambda: mesh_engine.run(reqs), reps=3, warmup=0)
+        compiles = mesh_engine.decode_compile_count()
+        if compiles is not None and compiles != 1:
+            raise SystemExit(
+                f"mesh decode recompiled across admissions: {compiles} "
+                "compilations (expected 1)")
+        emit(f"serve/e2e/mesh/{arch}", t_mesh,
+             f"tok_per_s={batch * max_new / t_mesh:.1f};dp={dp};tp={tp};"
+             f"decode_compiles={compiles}")
+
     return {"seed_prefill_tps": seed_tps, "engine_prefill_tps": eng_tps,
             "speedup": eng_tps / seed_tps}
 
@@ -86,11 +105,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="with --tp: also run the mesh engine (needs "
+                         "dp*tp devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
+    ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--min-speedup", type=float, default=3.0,
                     help="fail (exit 1) if engine prefill is below this "
                          "multiple of the seed path")
     args = ap.parse_args()
-    r = run(args.arch, args.batch, args.prompt_len, args.max_new)
+    r = run(args.arch, args.batch, args.prompt_len, args.max_new,
+            args.dp, args.tp)
     print(f"\nprefill speedup: {r['speedup']:.2f}x "
           f"(bar: {args.min_speedup:.1f}x)")
     if r["speedup"] < args.min_speedup:

@@ -9,6 +9,10 @@ the minimal manual decode loop over the frontend stub.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-4b
       PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
+
+Mesh serving (decode sharded over a data x model mesh — DESIGN.md sec 9):
+      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/serve_decode.py --dp 2 --tp 2
 """
 import argparse
 import time
@@ -18,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
 from repro.serving import Engine, SamplingParams, make_requests
 
@@ -32,8 +37,9 @@ def serve_tokens(cfg, params, args) -> None:
         [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens],
         max_new=args.max_new,
         sampling=SamplingParams(temperature=args.temperature))
+    mesh = make_serving_mesh(args.dp, args.tp) if args.dp * args.tp > 1 else None
     engine = Engine(params, cfg, max_len=int(lens.max()) + args.max_new,
-                    num_slots=min(args.batch, 4))
+                    num_slots=min(args.batch, 4), mesh=mesh)
     print(f"{cfg.name}: {engine.num_slots} slots, cache footprint "
           f"{engine.cache.nbytes()/1e6:.2f} MB "
           f"({'O(1) recurrent state' if cfg.sub_quadratic else 'KV cache'})")
@@ -83,6 +89,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=20)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (token archs only)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis (token archs only)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))

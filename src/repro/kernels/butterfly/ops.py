@@ -57,7 +57,9 @@ def fused_apply(
     m = int(np.prod(lead)) if lead else 1
     xf = x.reshape(m, n)
     tm = batch_tile or _pick_batch_tile(m, n, block_size)
-    tm = min(tm, max(8, m))
+    # decode fast path: inputs narrower than a tile (M = num_slots, e.g. 4)
+    # take a single exact tile instead of padding up to 8 — no wasted rows
+    tm = min(tm, max(1, m))
     pad = (-m) % tm
     if pad:
         xf = jnp.pad(xf, ((0, pad), (0, 0)))

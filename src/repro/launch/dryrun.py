@@ -85,7 +85,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, microbatch=None):
     """Returns (jitted_fn, example_args) for one cell, shardings applied."""
     dp = dp_axes(mesh)
     dpa = dp if len(dp) > 1 else dp[0]
-    param_specs = partition_params(cfg, mesh, dp)
+    param_specs = partition_params(cfg, mesh)
     inp_spec, lab_spec, pos_spec = batch_specs(cfg, mesh, dp)
     # guard against non-divisible global batch (e.g. long_500k has B=1)
     _inp, _lab, _pos = input_specs(cfg, shape)

@@ -34,3 +34,27 @@ def dp_axes(mesh) -> tuple[str, ...]:
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for in-process multi-device tests (host platform devices)."""
     return make_mesh_compat((data, model), ("data", "model"))
+
+
+def make_serving_mesh(dp: int, tp: int):
+    """(dp, tp) -> Mesh("data", "model") for the serving engine; validates
+    the device count up front so --dp/--tp failures are actionable."""
+    need = dp * tp
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"mesh dp={dp} x tp={tp} needs {need} devices but only {have} "
+            "are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    return make_mesh_compat((dp, tp), ("data", "model"))
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-free mesh stand-in (``.shape``/``.axis_names`` only) for
+    spec-level planning, e.g. per-device serving budgets on a login host.
+    jax changed the AbstractMesh constructor across versions; support both."""
+    am = jax.sharding.AbstractMesh
+    try:
+        return am(tuple(shape), tuple(axes))          # >= 0.5 style
+    except TypeError:
+        return am(tuple(zip(axes, shape)))            # 0.4.x shape_tuple

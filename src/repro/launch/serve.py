@@ -6,6 +6,10 @@ per prompt-length group (not a per-token decode loop), and sampling
 (greedy / temperature / top-k) is per-request.  The old token-by-token
 prefill path survives as ``repro.serving.reference.token_by_token_greedy``
 — the parity oracle the engine is tested against.
+
+``--dp/--tp`` serve across a (data, model) mesh: decode becomes one SPMD
+dispatch per step (DESIGN.md section 9).  On CPU, host devices are
+simulated with XLA_FLAGS=--xla_force_host_platform_device_count=N.
 """
 from __future__ import annotations
 
@@ -18,8 +22,10 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.policy import FactorizationPolicy, uniform_policy
+from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params
 from repro.serving import Engine, SamplingParams, make_requests
+from repro.serving.budget import plan_engine_report
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
 log = logging.getLogger("repro.serve")
@@ -53,7 +59,12 @@ def main():
                     help="KV token budget (0 = slot-bound only)")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
-                         "budget (params priced under the active policy)")
+                         "budget (params priced under the active policy; "
+                         "PER-DEVICE when --dp/--tp give a mesh)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (decode slots shard here)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis (heads/features shard)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
@@ -90,19 +101,38 @@ def main():
         max_new=args.max_new, sampling=sampling)
 
     max_len = int(lens.max()) + args.max_new
+    mesh = None
+    if args.dp * args.tp > 1:
+        try:
+            mesh = make_serving_mesh(args.dp, args.tp)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        log.info("mesh: dp=%d x tp=%d over %d devices",
+                 args.dp, args.tp, args.dp * args.tp)
     if args.memory_budget_mb:  # derived sizing; explicit flags conflict
         if args.slots or args.token_budget:
             raise SystemExit("--memory-budget-mb derives slots and token "
                              "budget; drop --slots/--token-budget")
+        budget = int(args.memory_budget_mb * 1e6)
+        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh)
+        log.info("plan (per device): params %.2f MB, kv %.2f MB, "
+                 "%d slots x %d shards -> %d total, token budget %s",
+                 plan.param_bytes_per_device / 1e6,
+                 plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
+                 plan.dp_size, plan.num_slots, plan.token_budget)
+        # hand the engine the plan we just logged (num_slots is already a
+        # dp multiple) instead of re-deriving it from the budget
         engine = Engine(params, cfg, max_len=max_len,
-                        memory_budget_bytes=int(args.memory_budget_mb * 1e6))
+                        num_slots=plan.num_slots,
+                        token_budget=plan.token_budget, mesh=mesh)
     else:
         engine = Engine(params, cfg, max_len=max_len,
                         num_slots=(args.slots or min(args.batch, 8)),
-                        token_budget=args.token_budget or None)
-    log.info("engine: %d slots, token budget %s, cache %.2f MB",
+                        token_budget=args.token_budget or None, mesh=mesh)
+    log.info("engine: %d slots, token budget %s, cache %.2f MB%s",
              engine.num_slots, engine.scheduler.token_budget,
-             engine.cache.nbytes() / 1e6)
+             engine.cache.nbytes() / 1e6,
+             " (sharded over the mesh)" if mesh is not None else "")
 
     outputs = engine.run(requests)
     st = engine.stats

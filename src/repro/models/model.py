@@ -188,12 +188,16 @@ def decode_step(params: dict, cfg: ModelConfig, inputs: jax.Array,
     Returns (logits (B, 1, padded_vocab), new caches)."""
     params = cast_params(params, cfg.dtype)
     x = _embed_inputs(params, cfg, inputs)
+    # decode is batch(=slot)-parallel over "dp"; S = 1, so no sequence
+    # sharding — heads split over "tp" inside the mixers (attention.py)
+    x = pctx.constrain(x, "dp", None, None)
 
     def period_body(x, inp):
         pp, pcaches = inp
         new = []
         for i, (m, f) in enumerate(cfg.pattern):
             x, nc = _slot_decode(pp[f"slot{i}"], cfg, m, f, x, pcaches[i], pos)
+            x = pctx.constrain(x, "dp", None, None)
             new.append(nc)
         return x, tuple(new)
 
@@ -241,7 +245,13 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
                 mask = valid[None, :, :, None, None].astype(k.dtype)
                 k, v = k * mask, v * mask
             pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
-            c = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            # decode-ready layout: batch(=slot) over "dp", sequence over
+            # "tp" — matches partition_caches, so a mesh engine's cache
+            # insert needs no reshard
+            c = {"k": pctx.constrain(jnp.pad(k, pad), None, "dp", "tp",
+                                     None, None),
+                 "v": pctx.constrain(jnp.pad(v, pad), None, "dp", "tp",
+                                     None, None)}
         elif m == "mamba" and c["conv"].shape[2] < cfg.mamba_dconv - 1:
             # prompts shorter than the conv window leave a short tail;
             # left-pad with zeros = the init (nothing-seen) window state

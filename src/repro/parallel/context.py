@@ -48,6 +48,26 @@ def resolve(logical: tuple) -> P:
     return P(*out)
 
 
+def current_mesh():
+    """The installed mesh, or None (single-device paths)."""
+    return _STATE["mesh"]
+
+
+def axes_product(mesh, axes) -> int:
+    """Total size of a set of mesh axes (1 for the empty set / no mesh).
+
+    Works with both concrete ``Mesh`` and ``AbstractMesh`` (only ``.shape``
+    is consulted), so spec-level planning can run without real devices.
+    """
+    if mesh is None:
+        return 1
+    n = 1
+    for a in axes:
+        if a is not None:
+            n *= mesh.shape[a]
+    return n
+
+
 def axis_size(role: str) -> int:
     mesh = _STATE["mesh"]
     if mesh is None:

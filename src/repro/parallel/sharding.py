@@ -54,7 +54,7 @@ def _guard(spec: list, shape, mesh) -> P:
 FSDP_THRESHOLD_BYTES = 6e9  # params+opt (12 B/param) per device over TP alone
 
 
-def _param_spec(path: str, shape, mesh, dp, fsdp: bool = False) -> P:
+def _param_spec(path: str, shape, mesh, fsdp: bool = False) -> P:
     nd = len(shape)
     fs = "data" if (fsdp and "data" in mesh.axis_names) else None
 
@@ -184,15 +184,20 @@ def needs_fsdp(cfg: ModelConfig, mesh) -> bool:
     return (12.0 * n) / tp > FSDP_THRESHOLD_BYTES
 
 
-def partition_params(cfg: ModelConfig, mesh, dp: tuple[str, ...],
-                     fsdp: bool | None = None):
-    """PartitionSpec pytree matching init_params(cfg)."""
+def partition_params(cfg: ModelConfig, mesh, fsdp: bool | None = None):
+    """PartitionSpec pytree matching init_params(cfg).
+
+    Weight placement is fully determined by the mesh + the per-param rules
+    (TP over "model"; the optional FSDP/ZeRO dimension is always the "data"
+    axis) — there is no per-call data-parallel choice, which is why this
+    takes no ``dp`` argument (batch specs do; see :func:`batch_specs`).
+    """
     if fsdp is None:
         fsdp = needs_fsdp(cfg, mesh)
     shapes = jax.eval_shape(lambda: model_lib.init_params(
         cfg, jax.random.PRNGKey(0)))
     flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
-    specs = [_param_spec(_path_str(p), leaf.shape, mesh, dp, fsdp)
+    specs = [_param_spec(_path_str(p), leaf.shape, mesh, fsdp)
              for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 

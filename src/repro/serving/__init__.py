@@ -1,9 +1,11 @@
 """Continuous-batching serving: request lifecycle, scheduler, slot cache,
 budget planning, and the engine that ties them to the model stack."""
 from repro.serving.budget import (
+    EnginePlan,
     cache_bytes_per_token,
     param_bytes,
     plan_engine,
+    plan_engine_report,
     slot_state_bytes,
 )
 from repro.serving.cache import SlotCache
@@ -22,6 +24,7 @@ from repro.serving.scheduler import Scheduler
 
 __all__ = [
     "Engine",
+    "EnginePlan",
     "EngineStats",
     "FinishReason",
     "Request",
@@ -35,6 +38,7 @@ __all__ = [
     "make_requests",
     "param_bytes",
     "plan_engine",
+    "plan_engine_report",
     "slot_state_bytes",
     "token_by_token_greedy",
 ]

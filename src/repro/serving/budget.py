@@ -8,15 +8,25 @@ trade explicit: param bytes come from the policy-aware spec accounting
 (``init_params`` under ``cfg.fact`` via ``jax.eval_shape`` — no params are
 materialized), cache bytes come from the real ``init_caches`` layouts, and
 what is left over is divided into slots and a KV token budget.
+
+With a mesh, ``memory_bytes`` is a PER-DEVICE budget: params are priced at
+their sharded (TP / optional FSDP) per-device footprint, caches at their
+sharded footprint (slot axis over "data", heads/features over "model"),
+and the leftover per-device HBM buys ``slots_per_device`` on every data
+shard — total slots = slots_per_device x dp.  Planning only consults
+``mesh.shape``, so an ``AbstractMesh`` (no real devices) works too.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 
 import jax
 
 from repro.configs.base import ModelConfig
 from repro.models import init_caches, init_params
+from repro.parallel.context import axes_product
 
 
 def _tree_bytes(tree) -> int:
@@ -24,12 +34,42 @@ def _tree_bytes(tree) -> int:
                for x in jax.tree.leaves(tree))
 
 
-def param_bytes(cfg: ModelConfig) -> int:
+def _spec_shard_factor(spec, mesh) -> int:
+    """How many ways a PartitionSpec splits an array over ``mesh``."""
+    factor = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        factor *= axes_product(mesh, axes)
+    return factor
+
+
+def _spec_leaves(specs):
+    return jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _sharded_tree_bytes(shapes, specs, mesh) -> int:
+    """Per-device bytes of a pytree under PartitionSpecs.  Specs produced by
+    the partition rules are divisibility-guarded, so the division is exact."""
+    return sum(
+        (leaf.size * jax.numpy.dtype(leaf.dtype).itemsize)
+        // _spec_shard_factor(spec, mesh)
+        for leaf, spec in zip(jax.tree.leaves(shapes), _spec_leaves(specs)))
+
+
+def param_bytes(cfg: ModelConfig, mesh=None, fsdp: bool | None = None) -> int:
     """Model parameter footprint under ``cfg.fact`` (policy-aware: factorized
-    sites count their factor params, not the dense matmul they replace)."""
+    sites count their factor params, not the dense matmul they replace).
+    With a mesh: the PER-DEVICE footprint under the TP/FSDP partition rules."""
     shapes = jax.eval_shape(functools.partial(init_params, cfg),
                             jax.random.PRNGKey(0))
-    return _tree_bytes(shapes)
+    if mesh is None:
+        return _tree_bytes(shapes)
+    from repro.parallel.sharding import partition_params
+    specs = partition_params(cfg, mesh, fsdp=fsdp)
+    return _sharded_tree_bytes(shapes, specs, mesh)
 
 
 def cache_bytes_per_token(cfg: ModelConfig) -> int:
@@ -47,37 +87,110 @@ def slot_state_bytes(cfg: ModelConfig) -> int:
     return one - cache_bytes_per_token(cfg)
 
 
-def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
-                mean_seq_tokens: int | None = None,
-                max_slots: int = 256) -> tuple[int, int | None]:
-    """(num_slots, token_budget) that fit ``memory_bytes``.
+def _local_slot_bytes(cfg: ModelConfig, mesh, dp, max_len: int) -> tuple[int, int]:
+    """(per_token, fixed) PER-DEVICE bytes for ONE slot under the cache
+    partition rules: one slot per data shard (batch = dp size, slot axis
+    sharded over "data"), sequence/heads over "model".  Shard factors are
+    taken from the specs at the REAL serving shape (batch=dp, T=max_len) —
+    computing them at length 1/2 would mis-guard the sequence axis.  Ceil
+    division keeps the plan conservative when a factor doesn't divide."""
+    from repro.parallel.sharding import partition_caches
+    dp_size = axes_product(mesh, dp)
+    one = jax.tree.leaves(jax.eval_shape(
+        lambda: init_caches(cfg, dp_size, 1)))
+    two = jax.tree.leaves(jax.eval_shape(
+        lambda: init_caches(cfg, dp_size, 2)))
+    specs = _spec_leaves(partition_caches(cfg, mesh, dp, dp_size, max_len))
+    per_tok = fixed = 0
+    for l1, l2, spec in zip(one, two, specs):
+        factor = _spec_shard_factor(spec, mesh)
+        itemsize = jax.numpy.dtype(l1.dtype).itemsize
+        b1, b2 = l1.size * itemsize, l2.size * itemsize
+        per_tok += math.ceil((b2 - b1) / factor)
+        fixed += math.ceil(max(0, 2 * b1 - b2) / factor)
+    # b1/b2 cover dp_size slots (one per data shard); the data factor is
+    # already inside ``factor``, so per_tok/fixed are per-slot-per-device
+    return per_tok, fixed
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Budget breakdown behind a ``plan_engine`` answer.  All ``*_bytes``
+    fields are per-device; slots/tokens are mesh-wide totals."""
+
+    num_slots: int
+    token_budget: int | None
+    dp_size: int
+    slots_per_device: int
+    param_bytes_per_device: int
+    kv_bytes_per_device: int          # leftover after params, per device
+    per_token_bytes_per_device: int   # one slot's K/V growth, per device
+    slot_state_bytes_per_device: int
+
+
+def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
+                       mean_seq_tokens: int | None = None,
+                       max_slots: int = 256,
+                       mesh=None, dp: tuple[str, ...] = ("data",),
+                       fsdp: bool | None = None) -> EnginePlan:
+    """Full per-device budget breakdown; ``plan_engine`` is the tuple view.
 
     Slots are sized for ``mean_seq_tokens`` occupancy (default max_len / 2):
     continuous batching overcommits slots relative to the worst case, and
     the scheduler's token budget — the actual bytes available divided by
-    per-token bytes — is what keeps worst-case admissions honest.  Returns
-    ``token_budget=None`` (unlimited) for recurrent stacks whose per-slot
-    state is O(1).
+    per-token bytes — is what keeps worst-case admissions honest.  NOTE:
+    ``SlotCache`` is dense (every slot preallocated at ``max_len``), so
+    the overcommit is physical; on hardware where the budget is the real
+    HBM, pass ``mean_seq_tokens=max_len`` for a fully-preallocatable plan
+    (a paged cache that makes the token budget the physical bound is on
+    the ROADMAP).  The
+    token budget is ``None`` (unlimited) for recurrent stacks whose
+    per-slot state is O(1).  With a mesh the budget is per-device and the
+    returned slot/token counts are mesh-wide (slots_per_device x dp); the
+    scheduler enforces the total, relying on the slot axis being evenly
+    sharded over "data".
     """
     mean = mean_seq_tokens or max(1, max_len // 2)
-    avail = memory_bytes - param_bytes(cfg)
+    dp_size = axes_product(mesh, dp) if mesh is not None else 1
+    pb = param_bytes(cfg, mesh=mesh, fsdp=fsdp)
+    avail = memory_bytes - pb
     if avail <= 0:
         raise ValueError(
-            f"{cfg.name}: params alone ({param_bytes(cfg)} B) exceed the "
-            f"memory budget ({memory_bytes} B); try a tighter factorization "
+            f"{cfg.name}: params alone ({pb} B"
+            f"{'/device' if mesh is not None else ''}) exceed the memory "
+            f"budget ({memory_bytes} B); try a tighter factorization "
             "policy (FactorizationPolicy.from_budget)")
-    per_tok = cache_bytes_per_token(cfg)
-    fixed = slot_state_bytes(cfg)
+    if mesh is None:
+        per_tok = cache_bytes_per_token(cfg)
+        fixed = slot_state_bytes(cfg)
+    else:
+        per_tok, fixed = _local_slot_bytes(cfg, mesh, dp, max_len)
     # floor: one slot's fixed state + the smallest admissible request
     # (prompt 1 + max_new 1 = 2 reserved tokens)
     if avail < fixed + 2 * per_tok:
         raise ValueError(
             f"{cfg.name}: {avail} B left after params cannot hold even one "
-            f"minimal sequence ({fixed + 2 * per_tok} B)")
+            f"minimal sequence ({fixed + 2 * per_tok} B) on each device")
     per_slot = fixed + per_tok * mean
-    slots = int(avail // per_slot) if per_slot else max_slots
-    slots = max(1, min(slots, max_slots))
+    cap = max(1, max_slots // dp_size)
+    local_slots = int(avail // per_slot) if per_slot else cap
+    local_slots = max(1, min(local_slots, cap))
+    slots = local_slots * dp_size
     if per_tok == 0:
-        return slots, None
-    tokens = int((avail - slots * fixed) // per_tok)
-    return slots, min(tokens, slots * max_len)
+        return EnginePlan(slots, None, dp_size, local_slots, pb, avail,
+                          per_tok, fixed)
+    tokens = dp_size * int((avail - local_slots * fixed) // per_tok)
+    return EnginePlan(slots, min(tokens, slots * max_len), dp_size,
+                      local_slots, pb, avail, per_tok, fixed)
+
+
+def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
+                mean_seq_tokens: int | None = None,
+                max_slots: int = 256,
+                mesh=None, dp: tuple[str, ...] = ("data",),
+                fsdp: bool | None = None) -> tuple[int, int | None]:
+    """(num_slots, token_budget) that fit ``memory_bytes`` (per device when
+    a mesh is given) — see :func:`plan_engine_report` for the breakdown."""
+    plan = plan_engine_report(cfg, memory_bytes, max_len, mean_seq_tokens,
+                              max_slots, mesh=mesh, dp=dp, fsdp=fsdp)
+    return plan.num_slots, plan.token_budget

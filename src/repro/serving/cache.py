@@ -21,15 +21,35 @@ from repro.models import init_caches
 
 
 class SlotCache:
-    """Decode caches for ``num_slots`` fixed slots of length ``max_len``."""
+    """Decode caches for ``num_slots`` fixed slots of length ``max_len``.
 
-    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int):
+    ``shardings`` (a pytree of NamedSharding matching the cache layout,
+    e.g. ``to_named(mesh, partition_caches(...))``) places the slot axis
+    over the mesh's data axis and heads/features over the model axis;
+    insert/evict then re-commit their results so the decode step's
+    ``in_shardings`` never trigger a per-step reshard.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 shardings=None):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
+        self.shardings = shardings
         self.data = init_caches(cfg, num_slots, max_len)
         # blank single-slot template used to restore evicted slots
         self._blank = init_caches(cfg, 1, max_len)
+        if shardings is not None:
+            self.data = jax.device_put(self.data, shardings)
+            # the blank template is tiny: replicate it across the mesh so
+            # evict never pulls it from a single device
+            self._blank = jax.device_put(self._blank, jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(
+                    s.mesh, jax.sharding.PartitionSpec()), shardings))
+
+    def _commit(self) -> None:
+        if self.shardings is not None:
+            self.data = jax.device_put(self.data, self.shardings)
 
     # ----------------------------------------------------------- insert --
     def insert(self, slots: TypingSequence[int], caches,
@@ -48,6 +68,7 @@ class SlotCache:
             lambda dst, src: dst.at[:, s_idx].set(
                 jnp.take(src, r_idx, axis=1).astype(dst.dtype)),
             self.data, caches)
+        self._commit()
 
     # ------------------------------------------------------------ evict --
     def evict(self, slots: TypingSequence[int]) -> None:
@@ -61,6 +82,7 @@ class SlotCache:
                                  blank.shape[:1] + (len(slots),)
                                  + blank.shape[2:])),
             self.data, self._blank)
+        self._commit()
 
     # ------------------------------------------------------------ views --
     def slot_view(self, slot: int):

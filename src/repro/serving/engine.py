@@ -14,18 +14,30 @@ recompiled as requests come and go — idle slots ride along and their rows
 are fully overwritten at the next insert.  Sampling (greedy / temperature /
 top-k) is vectorized per slot inside the same jit, with per-request seeds
 folded with the sequence position so any request replays deterministically.
+
+Mesh serving (DESIGN.md section 9): pass a ``jax.sharding.Mesh`` with
+"data"/"model" axes and decode runs as ONE SPMD dispatch across the mesh —
+params placed by ``partition_params`` (TP over "model"), the slot cache by
+``partition_caches`` (slot axis over "data", heads/features over "model"),
+and the step jitted with explicit in/out shardings so nothing reshards
+between iterations.  The scheduler and all per-slot host state stay
+replicated host-side; with no mesh the single-device path is unchanged.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
+from repro.parallel import context as pctx
 from repro.serving.budget import plan_engine
 from repro.serving.cache import SlotCache
 from repro.serving.request import Request, RequestOutput, Sequence
@@ -56,23 +68,37 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, x - 1).bit_length()
 
 
-def _make_sampler(cfg: ModelConfig):
+MAX_TOP_K = 64  # static top-k width compiled into the sampler (overridable)
+
+
+def _make_sampler(cfg: ModelConfig, max_top_k: int = MAX_TOP_K):
     """(logits (N, padded_vocab), temps, top_k, seeds, positions) -> (N,) int32.
 
     Vocab-pad logits are sliced away exactly once, here.  temperature 0 is
     greedy argmax; otherwise softmax sampling at that temperature, optionally
-    truncated to the top-k logits.  The PRNG key for a token at sequence
-    index i is fold_in(PRNGKey(seed), i) — independent of batching/slots.
+    truncated to the top-k logits.  The k candidates come from
+    ``jax.lax.top_k`` (O(V log k) on the decode hot path, not a full-vocab
+    sort) with its tie rule made explicit: equal logits are ranked by lower
+    index, and EXACTLY k candidates survive — so ``top_k=1`` always equals
+    greedy argmax, even at temperature > 0 and with tied maxima.  The PRNG
+    key for a token at sequence index i is fold_in(PRNGKey(seed), i) —
+    independent of batching/slots.
     """
     v = cfg.vocab_size
+    kmax = min(max_top_k, v)
 
     def sample(logits, temps, top_k, seeds, positions):
         lg = logits[..., :v].astype(jnp.float32)
+        n = lg.shape[0]
         greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        srt = jnp.sort(lg, axis=-1)  # ascending; kth-largest sits at v - k
-        kidx = jnp.clip(v - top_k, 0, v - 1)
-        kth = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
-        cut = (top_k[:, None] > 0) & (lg < kth)
+        # rank-based truncation: keep positions 0..k-1 of the top_k ordering
+        # (ties broken toward lower index by lax.top_k), mask the rest
+        _, idxs = jax.lax.top_k(lg, kmax)  # (N, kmax)
+        keep = jnp.arange(kmax)[None, :] < jnp.minimum(top_k, kmax)[:, None]
+        sel = jnp.zeros(lg.shape, bool).at[
+            jnp.arange(n)[:, None], idxs].set(keep)
+        # top_k >= vocab means no truncation (same as top_k == 0)
+        cut = ((top_k > 0) & (top_k < v))[:, None] & ~sel
         scaled = jnp.where(cut, -jnp.inf, lg) / jnp.maximum(temps, 1e-6)[:, None]
         keys = jax.vmap(
             lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
@@ -90,36 +116,80 @@ class Engine:
     ``memory_budget_bytes`` via :func:`repro.serving.budget.plan_engine`
     (params priced under the active FactorizationPolicy; leftover memory
     becomes KV).  ``eos_id`` optionally stops sequences early.
+
+    ``mesh`` (axes named by ``dp``/``tp``, default "data"/"model") turns the
+    engine SPMD: see the module docstring.  ``memory_budget_bytes`` is then
+    a PER-DEVICE budget and ``num_slots`` is rounded up to a multiple of the
+    data-axis size so the slot axis shards evenly.  Requests with
+    ``0 < top_k < vocab`` must satisfy ``top_k <= max_top_k`` (the sampler
+    compiles a fixed top-k width; raise it here if clients need more).
     """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int,
                  num_slots: int | None = None,
                  token_budget: int | None = None,
                  memory_budget_bytes: int | None = None,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None,
+                 mesh=None, dp: tuple[str, ...] = ("data",),
+                 tp: str | None = "model",
+                 max_top_k: int = MAX_TOP_K):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"{cfg.name} takes frontend embeddings; the engine serves "
                 "token models (see examples/serve_decode.py for the stub flow)")
+        self.mesh = mesh
+        self.dp = tuple(dp)
+        self.tp = tp
+        if mesh is not None:
+            missing = [a for a in (*self.dp, tp)
+                       if a is not None and a not in mesh.axis_names]
+            if missing:
+                raise ValueError(
+                    f"mesh axes {missing} not in mesh {tuple(mesh.axis_names)}")
+        dp_size = pctx.axes_product(mesh, self.dp) if mesh is not None else 1
         if memory_budget_bytes is not None:
             if num_slots is not None or token_budget is not None:
                 raise ValueError(
                     "pass either memory_budget_bytes (slots/budget derived) "
                     "or explicit num_slots/token_budget, not both")
             num_slots, token_budget = plan_engine(cfg, memory_budget_bytes,
-                                                  max_len)
-        self.params = params
+                                                  max_len, mesh=mesh,
+                                                  dp=self.dp)
         self.cfg = cfg
         self.max_len = max_len
         self.num_slots = num_slots or 4
+        if mesh is not None:
+            # the slot axis shards over "data": round up to a multiple
+            self.num_slots = math.ceil(self.num_slots / dp_size) * dp_size
         self.eos_id = eos_id
-        self.cache = SlotCache(cfg, self.num_slots, max_len)
+        self.max_top_k = min(max_top_k, cfg.vocab_size)
+
+        if mesh is not None:
+            from repro.parallel.sharding import (guard_spec, partition_caches,
+                                                 partition_params, to_named)
+            self._param_sh = to_named(mesh, partition_params(cfg, mesh))
+            self.params = jax.device_put(params, self._param_sh)
+            cache_sh = to_named(mesh, partition_caches(
+                cfg, mesh, self.dp, self.num_slots, max_len))
+            self.cache = SlotCache(cfg, self.num_slots, max_len,
+                                   shardings=cache_sh)
+            dpa = self.dp if len(self.dp) > 1 else self.dp[0]
+            ns = self.num_slots
+            self._slot_sh = NamedSharding(mesh, guard_spec(P(dpa), (ns,), mesh))
+            self._tok_sh = NamedSharding(
+                mesh, guard_spec(P(dpa, None), (ns, 1), mesh))
+            self._rep_sh = NamedSharding(mesh, P())
+        else:
+            self.params = params
+            self.cache = SlotCache(cfg, self.num_slots, max_len)
         self.scheduler = Scheduler(self.num_slots, token_budget)
         self.stats = EngineStats()
         self._attn_only = all(m == "attn" for m, _ in cfg.pattern)
-        self._sample = _make_sampler(cfg)
+        self._sample = _make_sampler(cfg, self.max_top_k)
 
-        # per-slot host state fed to the jitted step each iteration
+        # per-slot host state fed to the jitted step each iteration; the
+        # scheduler and these arrays live on the host, replicated from the
+        # mesh's point of view — every device sees the same admissions
         ns = self.num_slots
         self._tok = np.zeros((ns, 1), np.int32)
         self._pos = np.zeros((ns,), np.int32)
@@ -141,8 +211,34 @@ class Engine:
             first = self._sample(last, temps, topk, seeds, lengths)
             return first, caches
 
-        self._step = jax.jit(step_fn)
+        if mesh is not None:
+            row = self._slot_sh
+            self._step = jax.jit(
+                step_fn,
+                in_shardings=(self._param_sh, self.cache.shardings,
+                              self._tok_sh, row, row, row, row),
+                out_shardings=(self._rep_sh, self.cache.shardings))
+        else:
+            self._step = jax.jit(step_fn)
+        # prefill shapes vary by (rows, width) bucket, so inputs are placed
+        # per call (_put) and jit infers shardings from the committed args
         self._prefill = jax.jit(prefill_fn, static_argnames=("ragged",))
+
+    # ------------------------------------------------------------- mesh ---
+    def _trace_ctx(self):
+        """Install the engine's mesh for pctx.constrain during tracing."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return pctx.mesh_context(self.mesh, self.dp, self.tp)
+
+    def _put(self, x, spec: P | None = None):
+        """Host array -> device, sharded per ``spec`` (guarded) on a mesh."""
+        x = jnp.asarray(x)
+        if self.mesh is None or spec is None:
+            return x
+        from repro.parallel.sharding import guard_spec
+        return jax.device_put(x, NamedSharding(
+            self.mesh, guard_spec(spec, x.shape, self.mesh)))
 
     # ---------------------------------------------------------- lifecycle --
     def run(self, requests: list[Request]) -> list[RequestOutput]:
@@ -161,6 +257,12 @@ class Engine:
                 raise ValueError(
                     f"{s.request_id}: prompt+max_new = {s.reserved_tokens} "
                     f"exceeds the token budget {budget}")
+            tk = s.request.sampling.top_k
+            if self.max_top_k < tk < self.cfg.vocab_size:
+                raise ValueError(
+                    f"{s.request_id}: top_k = {tk} exceeds the engine's "
+                    f"max_top_k = {self.max_top_k}; construct the Engine "
+                    "with a larger max_top_k")
         self.scheduler.add_all(seqs)
         while self.scheduler.has_work:
             admitted = self.scheduler.admit()
@@ -200,9 +302,11 @@ class Engine:
             # bucket (rows, width) to powers of two so a long-lived engine
             # compiles O(log slots * log max_len) prefill variants, not one
             # per admission shape; dummy rows/columns are masked out by the
-            # ragged lengths and never inserted into the cache
+            # ragged lengths and never inserted into the cache.  The row cap
+            # is _next_pow2(num_slots) — NOT num_slots, which would yield a
+            # non-power-of-two bucket whenever the slot count isn't one
             width = min(_next_pow2(width), self.max_len)
-            rows = min(_next_pow2(rows), self.num_slots)
+            rows = min(_next_pow2(rows), _next_pow2(self.num_slots))
         prompts = np.zeros((rows, width), np.int32)
         lens = np.ones((rows,), np.int32)  # dummy rows: length-1 stub
         temps = np.zeros((rows,), np.float32)
@@ -216,11 +320,14 @@ class Engine:
             seeds[j] = s.request.sampling.seed
         ragged = bool((lens != width).any())
 
+        dpa = (self.dp if len(self.dp) > 1 else self.dp[0]) if self.mesh else None
         t0 = time.perf_counter()
-        first, caches = self._prefill(self.params, jnp.asarray(prompts),
-                                      jnp.asarray(lens), jnp.asarray(temps),
-                                      jnp.asarray(topk), jnp.asarray(seeds),
-                                      ragged=ragged)
+        with self._trace_ctx():
+            first, caches = self._prefill(
+                self.params, self._put(prompts, P(dpa, None)),
+                self._put(lens, P(dpa)), self._put(temps, P(dpa)),
+                self._put(topk, P(dpa)), self._put(seeds, P(dpa)),
+                ragged=ragged)
         jax.block_until_ready((first, caches))
         slots = [s.slot for s in group]
         self.cache.insert(slots, caches)
@@ -241,10 +348,11 @@ class Engine:
     # ------------------------------------------------------------- decode --
     def _decode_once(self, active: list[Sequence]) -> None:
         t0 = time.perf_counter()
-        nxt, self.cache.data = self._step(
-            self.params, self.cache.data, jnp.asarray(self._tok),
-            jnp.asarray(self._pos), jnp.asarray(self._temps),
-            jnp.asarray(self._topk), jnp.asarray(self._seeds))
+        with self._trace_ctx():
+            nxt, self.cache.data = self._step(
+                self.params, self.cache.data, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self._temps),
+                jnp.asarray(self._topk), jnp.asarray(self._seeds))
         nxt = np.asarray(nxt)
         self.stats.decode_time += time.perf_counter() - t0
         self.stats.decode_steps += 1
@@ -269,3 +377,11 @@ class Engine:
             self._temps[slot] = 0.0
             self._topk[slot] = 0
             self._seeds[slot] = 0
+
+    # -------------------------------------------------------------- views --
+    def decode_compile_count(self) -> int | None:
+        """Number of decode-step compilations so far (None when the running
+        jax can't report it).  Stays at 1 across admissions/evictions — the
+        mesh throughput benchmark asserts this."""
+        size = getattr(self._step, "_cache_size", None)
+        return int(size()) if size is not None else None

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.butterfly import init_factors
 from repro.kernels.butterfly.kernel import fused_butterfly_apply, pack_factors
+from repro.kernels.butterfly.ops import fused_apply
 from repro.kernels.butterfly.ref import fused_butterfly_apply_ref
 from repro.kernels.pixelfly.kernel import pixelfly_bsmm
 from repro.kernels.pixelfly.ref import pixelfly_bsmm_ref
@@ -37,6 +38,53 @@ def test_fused_butterfly_matches_oracle_any_shape(args):
     want = fused_butterfly_apply_ref(x, factors, block_size=b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-4, atol=3e-5)
+
+
+decode_shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=7),  # decode-shaped: M < min tile
+    st.sampled_from([4, 8]),
+    st.sampled_from([8, 16]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@given(decode_shape_strategy)
+@settings(**SETTINGS)
+def test_fused_apply_decode_batches_below_min_tile(args):
+    """M = num_slots < 8 (decode-shaped): fused_apply must take a single
+    exact tile — no padding to 8, no doubled work — and stay correct."""
+    m, nb, b, seed = args
+    n = nb * b
+    factors = init_factors(jax.random.PRNGKey(seed % 9973), n, b)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 7919), (m, n))
+    got = fused_apply(x, factors, block_size=b, interpret=True)
+    want = fused_butterfly_apply_ref(x, factors, block_size=b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_fused_apply_small_batch_uses_exact_tile():
+    """The decode fast path really dispatches with batch_tile == M (the
+    kernel asserts M % tile == 0, so an exact small tile proves no pad)."""
+    from repro.kernels.butterfly import ops
+
+    n, b = 64, 16
+    factors = init_factors(jax.random.PRNGKey(0), n, b)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, n))
+    seen = []
+    orig = ops.fused_butterfly_apply
+
+    def spy(xf, w, *, block_size, batch_tile, interpret):
+        seen.append((xf.shape[0], batch_tile))
+        return orig(xf, w, block_size=block_size, batch_tile=batch_tile,
+                    interpret=interpret)
+
+    ops.fused_butterfly_apply = spy
+    try:
+        fused_apply(x, factors, block_size=b, interpret=True)
+    finally:
+        ops.fused_butterfly_apply = orig
+    assert seen == [(4, 4)], seen  # no rows padded in, tile == M
 
 
 @given(shape_strategy)

@@ -1,5 +1,6 @@
 """Engine unit tests: slot cache insert/evict, ragged batched prefill,
-budget planning, and sampling determinism."""
+budget planning, sampling determinism, and the top-k / bucket hot-path
+regressions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,9 +17,11 @@ from repro.serving import (
     cache_bytes_per_token,
     param_bytes,
     plan_engine,
+    plan_engine_report,
     slot_state_bytes,
     token_by_token_greedy,
 )
+from repro.serving.engine import _make_sampler
 
 MAX_LEN = 12
 
@@ -243,6 +246,94 @@ def test_engine_run_validates_batch_before_enqueuing(attn_setup):
     assert [o.request_id for o in outs] == ["next"]
 
 
+def test_sampler_top_k_one_equals_greedy_argmax(attn_setup):
+    """Regression for the sort-based cut: top_k=1 at temperature > 0 must
+    ALWAYS equal greedy argmax — including on tied maxima, where the old
+    ``lg < kth`` truncation admitted every tied candidate."""
+    cfg, _ = attn_setup
+    sample = _make_sampler(cfg)
+    rng = np.random.default_rng(8)
+    lg = jnp.asarray(rng.normal(size=(6, cfg.padded_vocab)), jnp.float32)
+    lg = lg.at[0, 3].set(9.0).at[0, 11].set(9.0)  # tied maxima, row 0
+    lg = lg.at[1, 2].set(7.0).at[1, 4].set(7.0).at[1, 9].set(7.0)
+    seeds = jnp.arange(6, dtype=jnp.uint32)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    ones = jnp.ones((6,), jnp.int32)
+    greedy = jnp.argmax(lg[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for temp in (0.1, 0.7, 1.3):
+        got = sample(lg, jnp.full((6,), temp, jnp.float32), ones, seeds, pos)
+        assert jnp.array_equal(got, greedy), (temp, got, greedy)
+
+
+def test_sampler_top_k_draws_stay_inside_the_top_k(attn_setup):
+    cfg, _ = attn_setup
+    sample = _make_sampler(cfg)
+    rng = np.random.default_rng(9)
+    lg = jnp.asarray(rng.normal(size=(4, cfg.padded_vocab)), jnp.float32)
+    top3 = np.asarray(jax.lax.top_k(lg[:, : cfg.vocab_size], 3)[1])
+    temps = jnp.full((4,), 0.9, jnp.float32)
+    topk = jnp.full((4,), 3, jnp.int32)
+    pos = jnp.arange(4, dtype=jnp.int32)
+    for trial in range(20):
+        seeds = jnp.full((4,), trial, jnp.uint32)
+        got = np.asarray(sample(lg, temps, topk, seeds, pos))
+        for r in range(4):
+            assert got[r] in top3[r], (r, got[r], top3[r])
+
+
+def test_sampler_top_k_at_or_above_vocab_is_full_vocab(attn_setup):
+    cfg, _ = attn_setup
+    sample = _make_sampler(cfg)
+    rng = np.random.default_rng(10)
+    lg = jnp.asarray(rng.normal(size=(3, cfg.padded_vocab)), jnp.float32)
+    temps = jnp.full((3,), 0.9, jnp.float32)
+    seeds = jnp.arange(3, dtype=jnp.uint32)
+    pos = jnp.arange(3, dtype=jnp.int32)
+    full = sample(lg, temps, jnp.zeros((3,), jnp.int32), seeds, pos)
+    atv = sample(lg, temps, jnp.full((3,), cfg.vocab_size, jnp.int32),
+                 seeds, pos)
+    assert jnp.array_equal(full, atv)
+
+
+def test_engine_rejects_top_k_beyond_max_top_k(attn_setup):
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=1, max_top_k=8)
+    sp = SamplingParams(temperature=0.5, top_k=9)
+    with pytest.raises(ValueError, match="max_top_k"):
+        engine.run([Request("r0", (1, 2, 3), 2, sampling=sp)])
+
+
+def test_prefill_buckets_are_powers_of_two_for_nonpow2_slots(attn_setup):
+    """num_slots=6: row buckets must cap at _next_pow2(num_slots)=8, never
+    at 6 — a 6-row dispatch would defeat the O(log slots * log max_len)
+    compile-cache bound the bucketing documents."""
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=6)
+    shapes = []
+    orig = engine._prefill
+
+    def spy(params, prompts, *a, **kw):
+        shapes.append(tuple(prompts.shape))
+        return orig(params, prompts, *a, **kw)
+
+    engine._prefill = spy
+    rng = np.random.default_rng(11)
+    prompts = [tuple(map(int, rng.integers(0, cfg.vocab_size, size=5)))
+               for _ in range(6)]
+    outs = engine.run([Request(f"r{i}", p, 3)
+                       for i, p in enumerate(prompts)])
+    assert len(outs) == 6 and all(len(o.tokens) == 3 for o in outs)
+    assert shapes, "prefill never dispatched"
+    for rows, width in shapes:
+        assert rows & (rows - 1) == 0, f"non-pow2 row bucket {rows}"
+        assert width & (width - 1) == 0 or width == MAX_LEN, shapes
+    # parity is not sacrificed by the wider bucket
+    ref = np.asarray(token_by_token_greedy(
+        params, cfg, jnp.asarray(prompts, jnp.int32), 3, MAX_LEN))
+    for i, out in enumerate(outs):
+        assert out.tokens == tuple(ref[i])
+
+
 def test_engine_rejects_embedding_mode_configs():
     cfg = reduced(get_config("musicgen-medium"))
     assert cfg.input_mode != "tokens"
@@ -288,3 +379,53 @@ def test_plan_engine_recurrent_has_no_token_budget():
                                 max_len=64)
     assert tokens is None
     assert slots == 10
+
+
+# -------------------------------------------------------- mesh budgets ----
+
+
+def _abstract_mesh(data: int, model: int):
+    from repro.launch.mesh import make_abstract_mesh
+    return make_abstract_mesh((data, model), ("data", "model"))
+
+
+def test_plan_engine_mesh_reports_per_device_budgets():
+    """Spec-level planning needs no devices (AbstractMesh): params priced at
+    their sharded footprint, slots handed out per data shard, totals a
+    multiple of dp."""
+    cfg = reduced(get_config("qwen3-4b"))
+    mesh = _abstract_mesh(2, 2)
+    per_device = param_bytes(cfg, mesh=mesh)
+    assert per_device < param_bytes(cfg)  # TP really shards something
+    budget = per_device + 64 * 1024
+    plan = plan_engine_report(cfg, budget, max_len=16, mesh=mesh,
+                              max_slots=64)
+    assert plan.dp_size == 2
+    assert plan.num_slots == plan.slots_per_device * 2
+    assert plan.param_bytes_per_device == per_device
+    assert plan.kv_bytes_per_device == budget - per_device
+    assert plan.per_token_bytes_per_device > 0
+    assert plan.token_budget is not None
+    assert plan.token_budget <= plan.num_slots * 16
+    # tuple view agrees
+    assert plan_engine(cfg, budget, 16, mesh=mesh, max_slots=64) == (
+        plan.num_slots, plan.token_budget)
+
+
+def test_plan_engine_mesh_data_axis_multiplies_slots():
+    """The same PER-DEVICE budget buys dp x the slots on a wider data axis
+    (each shard hosts its own slots) — the scaling the mesh engine exists
+    for."""
+    cfg = reduced(get_config("qwen3-4b"))
+    budget = param_bytes(cfg, mesh=_abstract_mesh(1, 1)) + 32 * 1024
+    n1, _ = plan_engine(cfg, budget, 16, mesh=_abstract_mesh(1, 1))
+    n4, _ = plan_engine(cfg, budget, 16, mesh=_abstract_mesh(4, 1))
+    assert n4 == 4 * n1
+
+
+def test_plan_engine_mesh_rejects_budget_below_sharded_params():
+    cfg = reduced(get_config("qwen3-4b"))
+    mesh = _abstract_mesh(2, 2)
+    with pytest.raises(ValueError, match="exceed the memory budget"):
+        plan_engine(cfg, param_bytes(cfg, mesh=mesh) - 1, max_len=16,
+                    mesh=mesh)

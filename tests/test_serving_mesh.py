@@ -1,0 +1,172 @@
+"""Mesh-serving parity: the TP x DP engine must be token-for-token identical
+to the single-device engine.
+
+The main process is pinned to 1 CPU device (smoke tests must see 1 device),
+so — like tests/test_sharding.py — these spawn subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 and compare a 2x2
+("data", "model") mesh engine against the plain engine inside the same
+process, for dense / butterfly / mixed policies and for a slot-starved run
+that forces eviction and reuse of sharded cache slots.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = [pytest.mark.slow, pytest.mark.mesh]
+
+
+def run_py(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("policy_name", ["dense", "butterfly", "mixed"])
+def test_mesh_engine_matches_single_device(policy_name):
+    """4 requests, 4 slots on a 2x2 mesh (2 slots per data shard): every
+    request's tokens equal the single-device engine's, and decode compiled
+    exactly once."""
+    out = run_py(f"""
+        import jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.configs.base import recommended_policy
+        from repro.core.policy import uniform_policy
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import init_params
+        from repro.serving import Engine, Request
+
+        cfg = reduced(get_config('qwen3-4b'))
+        policy_name = {policy_name!r}
+        if policy_name == 'butterfly':
+            cfg = cfg.with_fact(uniform_policy('butterfly', block_size=16))
+        elif policy_name == 'mixed':
+            cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(42)
+        prompts = rng.integers(0, cfg.vocab_size, size=(4, 7))
+        reqs = lambda: [Request(f'r{{i}}', tuple(map(int, prompts[i])), 6)
+                        for i in range(4)]
+
+        single = Engine(params, cfg, max_len=13, num_slots=4)
+        ref = [o.tokens for o in single.run(reqs())]
+
+        mesh = make_debug_mesh(2, 2)
+        eng = Engine(params, cfg, max_len=13, num_slots=4, mesh=mesh)
+        outs = eng.run(reqs())
+        for i, o in enumerate(outs):
+            assert o.tokens == ref[i], (i, o.tokens, ref[i])
+        compiles = eng.decode_compile_count()
+        assert compiles in (None, 1), compiles
+        # the cache really is sharded: slot axis over 'data'
+        leaf = jax.tree.leaves(eng.cache.data)[0]
+        assert 'data' in str(leaf.sharding.spec)
+        print('MESH_PARITY_OK')
+    """)
+    assert "MESH_PARITY_OK" in out
+
+
+def test_mesh_engine_slot_reuse_parity():
+    """2 slots (1 per data shard) serving 5 ragged requests: staggered
+    admission, sharded-cache evict + reuse, grouped ragged prefill — still
+    token-for-token equal to the single-device engine, with the decode step
+    compiled once across all admissions."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.configs.base import recommended_policy
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import init_params
+        from repro.serving import Engine, Request
+
+        cfg = reduced(get_config('qwen3-4b'))
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(7)
+        lens = [3, 7, 5, 7, 2]
+        prompts = [tuple(map(int, rng.integers(0, cfg.vocab_size, size=n)))
+                   for n in lens]
+        reqs = lambda: [Request(f'r{i}', p, 6)
+                        for i, p in enumerate(prompts)]
+
+        single = Engine(params, cfg, max_len=13, num_slots=2)
+        ref = [o.tokens for o in single.run(reqs())]
+
+        mesh = make_debug_mesh(2, 2)
+        eng = Engine(params, cfg, max_len=13, num_slots=2, mesh=mesh)
+        outs = eng.run(reqs())
+        for i, o in enumerate(outs):
+            assert o.tokens == ref[i], (i, o.tokens, ref[i])
+        assert eng.decode_compile_count() in (None, 1)
+        print('MESH_REUSE_OK')
+    """)
+    assert "MESH_REUSE_OK" in out
+
+
+def test_mesh_engine_recurrent_stack_parity():
+    """xLSTM on the mesh: O(1) recurrent slot state (mlstm/slstm cache
+    layouts, grouped-by-length prefill) shards and matches single-device."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import init_params
+        from repro.serving import Engine, Request
+
+        cfg = reduced(get_config('xlstm-350m'))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        lens = [4, 6, 4, 6]
+        prompts = [tuple(map(int, rng.integers(0, cfg.vocab_size, n)))
+                   for n in lens]
+        reqs = lambda: [Request(f'r{i}', p, 4)
+                        for i, p in enumerate(prompts)]
+        single = Engine(params, cfg, max_len=12, num_slots=4)
+        ref = [o.tokens for o in single.run(reqs())]
+        eng = Engine(params, cfg, max_len=12, num_slots=4,
+                     mesh=make_debug_mesh(2, 2))
+        outs = eng.run(reqs())
+        for i, o in enumerate(outs):
+            assert o.tokens == ref[i], (i, o.tokens, ref[i])
+        print('MESH_RECURRENT_OK')
+    """)
+    assert "MESH_RECURRENT_OK" in out
+
+
+def test_mesh_engine_memory_budget_and_slot_rounding():
+    """memory_budget_bytes is per-device on a mesh: the engine derives its
+    slots via plan_engine(mesh=...), and an odd explicit num_slots is
+    rounded up to a multiple of the data-axis size."""
+    out = run_py("""
+        import jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import init_params
+        from repro.serving import Engine, Request, param_bytes
+
+        cfg = reduced(get_config('qwen3-4b'))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_debug_mesh(2, 2)
+
+        eng = Engine(params, cfg, max_len=13, num_slots=3, mesh=mesh)
+        assert eng.num_slots == 4, eng.num_slots  # rounded up to dp multiple
+
+        budget = param_bytes(cfg, mesh=mesh) + 64 * 1024
+        eng2 = Engine(params, cfg, max_len=13, memory_budget_bytes=budget,
+                      mesh=mesh)
+        assert eng2.num_slots % 2 == 0 and eng2.num_slots >= 2
+        rng = np.random.default_rng(3)
+        prompt = tuple(map(int, rng.integers(0, cfg.vocab_size, size=5)))
+        out = eng2.run([Request('r0', prompt, 4)])[0]
+        assert len(out.tokens) == 4
+        print('MESH_BUDGET_OK')
+    """)
+    assert "MESH_BUDGET_OK" in out

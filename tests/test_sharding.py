@@ -52,7 +52,7 @@ def test_sharded_train_step_matches_single_device():
         mesh = make_debug_mesh(2, 4)
         with pctx.mesh_context(mesh, ('data',), 'model'):
             with mesh:
-                pspecs = partition_params(cfg, mesh, ('data',), fsdp=True)
+                pspecs = partition_params(cfg, mesh, fsdp=True)
                 sshapes = jax.eval_shape(
                     lambda: init_train_state(cfg, tc, jax.random.PRNGKey(0)))
                 sspecs = {'params': pspecs,
