@@ -39,10 +39,13 @@ def serve_tokens(cfg, params, args) -> None:
         sampling=SamplingParams(temperature=args.temperature))
     mesh = make_serving_mesh(args.dp, args.tp) if args.dp * args.tp > 1 else None
     engine = Engine(params, cfg, max_len=int(lens.max()) + args.max_new,
-                    num_slots=min(args.batch, 4), mesh=mesh)
+                    num_slots=min(args.batch, 4), mesh=mesh,
+                    page_size=args.page_size or None)
+    kind = ("O(1) recurrent state" if cfg.sub_quadratic else
+            f"paged KV: {engine.num_pages} x {engine.page_size}-token blocks"
+            if engine.page_size is not None else "KV cache")
     print(f"{cfg.name}: {engine.num_slots} slots, cache footprint "
-          f"{engine.cache.nbytes()/1e6:.2f} MB "
-          f"({'O(1) recurrent state' if cfg.sub_quadratic else 'KV cache'})")
+          f"{engine.cache.nbytes()/1e6:.2f} MB ({kind})")
     outputs = engine.run(requests)
     st = engine.stats
     gen = sum(len(o.tokens) for o in outputs)
@@ -89,6 +92,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=20)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV block size in tokens (0 = fixed slots)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis (token archs only)")
     ap.add_argument("--tp", type=int, default=1,

@@ -1,11 +1,14 @@
 """Serving CLI: a thin shell over the continuous-batching ``Engine``.
 
 CPU container: runs reduced configs for real.  Requests are admitted into
-fixed decode slots under a KV token budget, prefill is ONE batched forward
-per prompt-length group (not a per-token decode loop), and sampling
-(greedy / temperature / top-k) is per-request.  The old token-by-token
-prefill path survives as ``repro.serving.reference.token_by_token_greedy``
-— the parity oracle the engine is tested against.
+decode slots over a PAGED KV cache by default (``--page-size`` blocks; the
+scheduler admits against free pages, so short requests stop paying for
+``max_len`` stripes — ``--fixed-slots`` falls back to the dense SlotCache),
+prefill is ONE batched forward per prompt-length group (not a per-token
+decode loop), and sampling (greedy / temperature / top-k) is per-request.
+The old token-by-token prefill path survives as
+``repro.serving.reference.token_by_token_greedy`` — the parity oracle the
+engine is tested against.
 
 ``--dp/--tp`` serve across a (data, model) mesh: decode becomes one SPMD
 dispatch per step (DESIGN.md section 9).  On CPU, host devices are
@@ -56,7 +59,15 @@ def main():
                     help="decode slots (0 = min(batch, 8), or derived from "
                          "--memory-budget-mb when given)")
     ap.add_argument("--token-budget", type=int, default=0,
-                    help="KV token budget (0 = slot-bound only)")
+                    help="KV token budget (0 = slot-bound only); with "
+                         "paging this converts to a page budget")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV block size in tokens for the paged cache "
+                         "(attention archs; recurrent state is O(1) and "
+                         "stays slot-indexed)")
+    ap.add_argument("--fixed-slots", action="store_true",
+                    help="fall back to the fixed max_len-stripe SlotCache "
+                         "instead of the paged KV cache")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
                          "budget (params priced under the active policy; "
@@ -109,28 +120,41 @@ def main():
             raise SystemExit(str(e))
         log.info("mesh: dp=%d x tp=%d over %d devices",
                  args.dp, args.tp, args.dp * args.tp)
+    page_size = None if (args.fixed_slots or not args.page_size) \
+        else args.page_size
     if args.memory_budget_mb:  # derived sizing; explicit flags conflict
         if args.slots or args.token_budget:
             raise SystemExit("--memory-budget-mb derives slots and token "
                              "budget; drop --slots/--token-budget")
         budget = int(args.memory_budget_mb * 1e6)
-        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh)
+        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
+                                  page_size=page_size)
         log.info("plan (per device): params %.2f MB, kv %.2f MB, "
-                 "%d slots x %d shards -> %d total, token budget %s",
+                 "%d slots x %d shards -> %d total, token budget %s"
+                 "%s",
                  plan.param_bytes_per_device / 1e6,
                  plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
-                 plan.dp_size, plan.num_slots, plan.token_budget)
+                 plan.dp_size, plan.num_slots, plan.token_budget,
+                 f", {plan.num_pages} pages x {plan.page_size} tokens"
+                 if plan.num_pages is not None else "")
         # hand the engine the plan we just logged (num_slots is already a
         # dp multiple) instead of re-deriving it from the budget
         engine = Engine(params, cfg, max_len=max_len,
                         num_slots=plan.num_slots,
-                        token_budget=plan.token_budget, mesh=mesh)
+                        token_budget=(None if plan.num_pages is not None
+                                      else plan.token_budget),
+                        page_size=plan.page_size,
+                        num_pages=plan.num_pages, mesh=mesh)
     else:
         engine = Engine(params, cfg, max_len=max_len,
                         num_slots=(args.slots or min(args.batch, 8)),
-                        token_budget=args.token_budget or None, mesh=mesh)
-    log.info("engine: %d slots, token budget %s, cache %.2f MB%s",
-             engine.num_slots, engine.scheduler.token_budget,
+                        token_budget=args.token_budget or None,
+                        page_size=page_size, mesh=mesh)
+    log.info("engine: %d slots, %s, cache %.2f MB%s",
+             engine.num_slots,
+             (f"{engine.num_pages} pages x {engine.page_size} tokens"
+              if engine.page_size is not None
+              else f"token budget {engine.scheduler.token_budget}"),
              engine.cache.nbytes() / 1e6,
              " (sharded over the mesh)" if mesh is not None else "")
 
@@ -142,11 +166,18 @@ def main():
              st.prefill_tokens, st.prefill_dispatches, st.prefill_tps)
     log.info("decode: %d tokens in %d steps, %.1f tok/s",
              st.decode_tokens, st.decode_steps, st.decode_tps)
-    lat = [o.latency for o in outputs]
-    ttft = [o.time_to_first_token for o in outputs]
-    log.info("latency s: mean %.3f p50 %.3f max %.3f | ttft mean %.3f",
-             float(np.mean(lat)), float(np.median(lat)), float(np.max(lat)),
-             float(np.mean(ttft)))
+    # durations are None for any stage a sequence never reached (e.g. a
+    # direct scheduler user draining early) — skip them, never zero-fill
+    lat = [o.latency for o in outputs if o.latency is not None]
+    ttft = [o.time_to_first_token for o in outputs
+            if o.time_to_first_token is not None]
+    if lat and ttft:
+        log.info("latency s: mean %.3f p50 %.3f max %.3f | ttft mean %.3f",
+                 float(np.mean(lat)), float(np.median(lat)),
+                 float(np.max(lat)), float(np.mean(ttft)))
+    else:
+        log.info("latency: %d/%d sequences finished with timestamps",
+                 len(lat), len(outputs))
     log.info("sample %s: %s", outputs[0].request_id,
              list(outputs[0].tokens)[:12])
 

@@ -3,6 +3,7 @@ from repro.models.model import (
     decode_step,
     forward,
     init_caches,
+    init_paged_caches,
     init_params,
     lm_loss,
     param_count,

@@ -197,6 +197,30 @@ def attn_forward(
     return y, cache
 
 
+def _decode_attention(params: dict, cfg: ModelConfig, q: jax.Array,
+                      k: jax.Array, v: jax.Array, pos: jax.Array,
+                      out_dtype) -> jax.Array:
+    """Shared single-token attention core: q (B, 1, Hq, hd) against a dense
+    K/V view (B, T, Hkv, hd) with causal validity ``t <= pos``, followed by
+    the output projection.  Both the fixed-stripe and paged decode paths
+    end here — bit-exact parity between them depends on this being the ONE
+    place the decode attention math lives."""
+    b = q.shape[0]
+    t = k.shape[1]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    g = hq // hkv
+    qh = (q * hd ** -0.5).reshape(b, 1, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qh.astype(jnp.float32),
+                        k.astype(jnp.float32))  # (B,kv,g,1,T)
+    valid = jnp.arange(t)[None, :] <= pos[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd).astype(out_dtype)
+    _, out_lin = _linears(cfg)
+    return out_lin(params["out"], o)
+
+
 def attn_decode(
     params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
 ) -> tuple[jax.Array, dict]:
@@ -213,19 +237,51 @@ def attn_decode(
     k = cache["k"] + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
     v = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
 
-    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    g = hq // hkv
-    qh = (q * hd ** -0.5).reshape(b, 1, hkv, g, hd)
-    scores = jnp.einsum("bqkgh,btkh->bkgqt", qh.astype(jnp.float32),
-                        k.astype(jnp.float32))  # (B,kv,g,1,T)
-    valid = jnp.arange(t)[None, :] <= pos[:, None]  # (B, T)
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
-    o = o.reshape(b, 1, hq * hd).astype(x.dtype)
-    _, out_lin = _linears(cfg)
-    y = out_lin(params["out"], o)
+    y = _decode_attention(params, cfg, q, k, v, pos, x.dtype)
     return y, {"k": k, "v": v}
+
+
+def attn_decode_paged(
+    params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+    page_table: jax.Array, pos: jax.Array, page_size: int, kv_len: int
+) -> tuple[jax.Array, dict]:
+    """Single-token decode against a paged KV pool (vLLM-style block table).
+
+    x: (B, 1, d); cache k/v: (num_blocks, page_size, Hkv, hd) — the global
+    block pool, where block 0 is the reserved scratch block that unmapped
+    page-table entries point at; page_table: (B, max_pages) int32 physical
+    block ids; pos: (B,) position the new token is written at.
+
+    The write scatters one (page_size-row) entry: block
+    ``page_table[b, pos // page_size]``, row ``pos % page_size``.  Idle
+    decode rows (pos 0, all-zero table row) write the scratch block, which
+    no mapped gather ever reads.  The gather pulls each row's pages into a
+    dense view sliced to exactly ``kv_len`` positions, so the attention
+    math downstream is shape- and bit-identical to :func:`attn_decode` on
+    a fixed (B, kv_len) cache: positions beyond ``pos`` may hold stale page
+    contents, but the causal validity mask sends them to NEG_INF exactly
+    as the fixed path does for its zero-initialized rows.
+    """
+    b = x.shape[0]
+    positions = pos[:, None]  # (B, 1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    bid = jnp.take_along_axis(
+        page_table, (pos // page_size)[:, None], axis=1)[:, 0]  # (B,)
+    off = pos % page_size
+    k_pool = cache["k"].at[bid, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_pool = cache["v"].at[bid, off].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    k = k_pool[page_table].reshape(b, -1, hkv, hd)[:, :kv_len]
+    v = v_pool[page_table].reshape(b, -1, hkv, hd)[:, :kv_len]
+    k = pctx.constrain(k, "dp", None, None, None)
+    v = pctx.constrain(v, "dp", None, None, None)
+
+    y = _decode_attention(params, cfg, q, k, v, pos, x.dtype)
+    return y, {"k": k_pool, "v": v_pool}
 
 
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
@@ -233,4 +289,14 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return {
         "k": jnp.zeros((batch, max_len, hkv, hd), cfg.dtype),
         "v": jnp.zeros((batch, max_len, hkv, hd), cfg.dtype),
+    }
+
+
+def init_paged_attn_cache(cfg: ModelConfig, num_blocks: int,
+                          page_size: int) -> dict:
+    """Global K/V block pool shared by all slots (block 0 = scratch)."""
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((num_blocks, page_size, hkv, hd), cfg.dtype),
+        "v": jnp.zeros((num_blocks, page_size, hkv, hd), cfg.dtype),
     }

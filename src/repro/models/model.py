@@ -106,10 +106,17 @@ def _slot_forward(p: dict, cfg: ModelConfig, mixer: str, ffn: str,
 
 
 def _slot_decode(p: dict, cfg: ModelConfig, mixer: str, ffn: str,
-                 x: jax.Array, cache: dict, pos: jax.Array):
+                 x: jax.Array, cache: dict, pos: jax.Array,
+                 page_table: jax.Array | None = None,
+                 page_size: int | None = None,
+                 kv_len: int | None = None):
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if mixer == "attn":
-        h, nc = attention.attn_decode(p["mixer"], cfg, h, cache, pos)
+        if page_table is not None:
+            h, nc = attention.attn_decode_paged(
+                p["mixer"], cfg, h, cache, page_table, pos, page_size, kv_len)
+        else:
+            h, nc = attention.attn_decode(p["mixer"], cfg, h, cache, pos)
     elif mixer == "mamba":
         h, nc = ssm.mamba_decode(p["mixer"], cfg, h, cache, pos)
     elif mixer == "mlstm":
@@ -182,10 +189,21 @@ def forward(params: dict, cfg: ModelConfig, inputs: jax.Array,
 
 
 def decode_step(params: dict, cfg: ModelConfig, inputs: jax.Array,
-                caches, pos: jax.Array):
+                caches, pos: jax.Array,
+                page_table: jax.Array | None = None,
+                page_size: int | None = None,
+                kv_len: int | None = None):
     """One decode step.  inputs: (B, 1) tokens or (B, 1, d) embeddings;
     caches: pytree stacked over periods; pos: (B,) int32.
-    Returns (logits (B, 1, padded_vocab), new caches)."""
+    Returns (logits (B, 1, padded_vocab), new caches).
+
+    With ``page_table`` (B, max_pages) the attention caches are read as a
+    paged block pool (``init_paged_caches`` layout, (P, num_blocks,
+    page_size, Hkv, hd) leaves) instead of dense (P, B, T, ...) stripes;
+    ``page_size``/``kv_len`` are the static block width and gather width
+    (the engine's max_len).  Recurrent/conv state is O(1) per sequence and
+    stays slot-indexed in both layouts.
+    """
     params = cast_params(params, cfg.dtype)
     x = _embed_inputs(params, cfg, inputs)
     # decode is batch(=slot)-parallel over "dp"; S = 1, so no sequence
@@ -196,7 +214,8 @@ def decode_step(params: dict, cfg: ModelConfig, inputs: jax.Array,
         pp, pcaches = inp
         new = []
         for i, (m, f) in enumerate(cfg.pattern):
-            x, nc = _slot_decode(pp[f"slot{i}"], cfg, m, f, x, pcaches[i], pos)
+            x, nc = _slot_decode(pp[f"slot{i}"], cfg, m, f, x, pcaches[i], pos,
+                                 page_table, page_size, kv_len)
             x = pctx.constrain(x, "dp", None, None)
             new.append(nc)
         return x, tuple(new)
@@ -222,10 +241,25 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
     Ragged lengths (any row shorter than S) are only exact for pure-attention
     patterns: recurrent mixers (mamba/xlstm) fold right-pad tokens into their
     O(1) state, so callers must batch those by equal length instead.
+
+    S may exceed ``max_len`` only for ragged batches (the engine's pow2
+    width buckets can round past a non-pow2 max_len): every true length
+    must still be <= max_len, and the decode-ready K/V are sliced back to
+    ``max_len`` — the extra columns are all dummy padding.
     """
     b, s = inputs.shape[:2]
     if s > max_len:
-        raise ValueError(f"prompt length {s} exceeds max_len {max_len}")
+        if lengths is None:
+            raise ValueError(f"prompt length {s} exceeds max_len {max_len}")
+        # beyond-max_len columns are sliced away as dummy padding, so a
+        # TRUE length past max_len would be silently truncated — reject it
+        # whenever lengths are concrete (the engine always satisfies this;
+        # under jit the caller owns the contract)
+        if not isinstance(lengths, jax.core.Tracer) and \
+                int(jnp.max(lengths)) > max_len:
+            raise ValueError(
+                f"ragged length {int(jnp.max(lengths))} exceeds max_len "
+                f"{max_len}; only dummy pad columns may extend past it")
     ragged = lengths is not None
     if ragged and any(m != "attn" for m, _ in cfg.pattern):
         raise ValueError(
@@ -244,7 +278,9 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
             if valid is not None:
                 mask = valid[None, :, :, None, None].astype(k.dtype)
                 k, v = k * mask, v * mask
-            pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            if s >= max_len:  # bucketed width past max_len: drop dummy cols
+                k, v = k[:, :, :max_len], v[:, :, :max_len]
+            pad = [(0, 0), (0, 0), (0, max(0, max_len - s)), (0, 0), (0, 0)]
             # decode-ready layout: batch(=slot) over "dp", sequence over
             # "tp" — matches partition_caches, so a mesh engine's cache
             # insert needs no reshard
@@ -275,6 +311,34 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
                 caches.append(xlstm.init_mlstm_cache(cfg, batch))
             elif m == "slstm":
                 caches.append(xlstm.init_slstm_cache(cfg, batch))
+        return tuple(caches)
+
+    one = one_period()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_periods,) + x.shape), one)
+
+
+def init_paged_caches(cfg: ModelConfig, num_slots: int, num_blocks: int,
+                      page_size: int):
+    """Decode caches with paged attention K/V: attn leaves are a global
+    block pool (num_blocks, page_size, Hkv, hd) shared by all slots and
+    indexed by a per-slot page table (block 0 is the reserved scratch
+    block); recurrent/conv leaves stay slot-indexed exactly as in
+    :func:`init_caches` — their state is O(1) per sequence, so paging them
+    would buy nothing.  Stacked over periods like ``init_caches``."""
+
+    def one_period():
+        caches = []
+        for m, _ in cfg.pattern:
+            if m == "attn":
+                caches.append(attention.init_paged_attn_cache(
+                    cfg, num_blocks, page_size))
+            elif m == "mamba":
+                caches.append(ssm.init_mamba_cache(cfg, num_slots))
+            elif m == "mlstm":
+                caches.append(xlstm.init_mlstm_cache(cfg, num_slots))
+            elif m == "slstm":
+                caches.append(xlstm.init_slstm_cache(cfg, num_slots))
         return tuple(caches)
 
     one = one_period()

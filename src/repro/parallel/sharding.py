@@ -224,7 +224,11 @@ def partition_opt(param_specs, opt_shapes):
 def _cache_spec(path: str, shape, mesh, dp) -> P:
     nd = len(shape)
     dpa = tuple(dp) if len(dp) > 1 else dp[0]
-    if path.endswith("k") or path.endswith("v"):          # (P, B, T, kv, hd)
+    if path.endswith("k") or path.endswith("v"):
+        # dense: (P, B, T, kv, hd) — slots over data, sequence over model.
+        # paged: (P, num_blocks, page_size, kv, hd) — the block pool's
+        # block axis shards over data (the page table stays replicated
+        # host state), page offsets over model mirroring the dense layout.
         return _guard([None, dpa, "model", None, None][:nd], shape, mesh)
     if path.endswith("/h") and nd == 4:                   # mamba (P,B,di,n)
         return _guard([None, dpa, "model", None], shape, mesh)
@@ -238,9 +242,20 @@ def _cache_spec(path: str, shape, mesh, dp) -> P:
     return _guard([None, dpa, "model"][:nd], shape, mesh)
 
 
-def partition_caches(cfg: ModelConfig, mesh, dp, batch: int, max_len: int):
-    shapes = jax.eval_shape(
-        lambda: model_lib.init_caches(cfg, batch, max_len))
+def partition_caches(cfg: ModelConfig, mesh, dp, batch: int, max_len: int,
+                     pages: tuple[int, int] | None = None):
+    """Cache PartitionSpecs.  ``pages=(num_blocks, page_size)`` switches to
+    the ``init_paged_caches`` layout: attention K/V become the global block
+    pool (block axis over the data axis, page offsets over model); the
+    slot-indexed recurrent leaves keep their dense specs either way."""
+    if pages is None:
+        shapes = jax.eval_shape(
+            lambda: model_lib.init_caches(cfg, batch, max_len))
+    else:
+        num_blocks, page_size = pages
+        shapes = jax.eval_shape(
+            lambda: model_lib.init_paged_caches(cfg, batch, num_blocks,
+                                                page_size))
     flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
     specs = [_cache_spec(_path_str(p), leaf.shape, mesh, dp)
              for p, leaf in flat]

@@ -8,7 +8,7 @@ from repro.serving.budget import (
     plan_engine_report,
     slot_state_bytes,
 )
-from repro.serving.cache import SlotCache
+from repro.serving.cache import PageAllocator, PagedSlotCache, SlotCache
 from repro.serving.engine import Engine, EngineStats
 from repro.serving.reference import token_by_token_greedy
 from repro.serving.request import (
@@ -27,6 +27,8 @@ __all__ = [
     "EnginePlan",
     "EngineStats",
     "FinishReason",
+    "PageAllocator",
+    "PagedSlotCache",
     "Request",
     "RequestOutput",
     "SamplingParams",

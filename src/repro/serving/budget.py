@@ -116,7 +116,10 @@ def _local_slot_bytes(cfg: ModelConfig, mesh, dp, max_len: int) -> tuple[int, in
 @dataclasses.dataclass(frozen=True)
 class EnginePlan:
     """Budget breakdown behind a ``plan_engine`` answer.  All ``*_bytes``
-    fields are per-device; slots/tokens are mesh-wide totals."""
+    fields are per-device; slots/tokens/pages are mesh-wide totals.
+    ``num_pages``/``page_size`` are set only for paged plans — there the
+    token budget is exactly ``num_pages * page_size`` and the page pool,
+    not the slot count, is what bounds memory."""
 
     num_slots: int
     token_budget: int | None
@@ -126,29 +129,42 @@ class EnginePlan:
     kv_bytes_per_device: int          # leftover after params, per device
     per_token_bytes_per_device: int   # one slot's K/V growth, per device
     slot_state_bytes_per_device: int
+    page_size: int | None = None
+    num_pages: int | None = None
 
 
 def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
                        mean_seq_tokens: int | None = None,
                        max_slots: int = 256,
                        mesh=None, dp: tuple[str, ...] = ("data",),
-                       fsdp: bool | None = None) -> EnginePlan:
+                       fsdp: bool | None = None,
+                       page_size: int | None = None) -> EnginePlan:
     """Full per-device budget breakdown; ``plan_engine`` is the tuple view.
 
-    Slots are sized for ``mean_seq_tokens`` occupancy (default max_len / 2):
-    continuous batching overcommits slots relative to the worst case, and
-    the scheduler's token budget — the actual bytes available divided by
-    per-token bytes — is what keeps worst-case admissions honest.  NOTE:
-    ``SlotCache`` is dense (every slot preallocated at ``max_len``), so
-    the overcommit is physical; on hardware where the budget is the real
-    HBM, pass ``mean_seq_tokens=max_len`` for a fully-preallocatable plan
-    (a paged cache that makes the token budget the physical bound is on
-    the ROADMAP).  The
-    token budget is ``None`` (unlimited) for recurrent stacks whose
-    per-slot state is O(1).  With a mesh the budget is per-device and the
-    returned slot/token counts are mesh-wide (slots_per_device x dp); the
-    scheduler enforces the total, relying on the slot axis being evenly
-    sharded over "data".
+    Fixed-slot regime (``page_size=None``): slots are sized for
+    ``mean_seq_tokens`` occupancy (default max_len / 2) — continuous
+    batching overcommits slots relative to the worst case, and the
+    scheduler's token budget is what keeps worst-case admissions honest.
+    NOTE: ``SlotCache`` is dense (every slot preallocated at ``max_len``),
+    so the overcommit is physical; on hardware where the budget is the
+    real HBM, pass ``mean_seq_tokens=max_len`` for a fully-preallocatable
+    plan.
+
+    Paged regime (``page_size`` set, attention in the stack): the budget
+    is priced in ``page_size``-token blocks.  A slot now costs only its
+    fixed recurrent state plus at least one block (no ``max_len`` stripe),
+    so slots are sized at ``(avail - scratch) // (fixed + page_bytes)``
+    capped by ``max_slots``, and every remaining byte becomes pages:
+    ``num_pages`` is the physical admission bound and the token budget is
+    exactly ``num_pages * page_size``.  One extra block's bytes are set
+    aside for the pool's scratch block 0.
+
+    The token budget is ``None`` (unlimited) for recurrent stacks whose
+    per-slot state is O(1) — paging is a no-op there and the plan falls
+    back to the fixed regime.  With a mesh the budget is per-device and
+    the returned slot/token/page counts are mesh-wide (per-device x dp);
+    the scheduler enforces the total, relying on the slot axis (and the
+    paged pool's block axis) being evenly sharded over "data".
     """
     mean = mean_seq_tokens or max(1, max_len // 2)
     dp_size = axes_product(mesh, dp) if mesh is not None else 1
@@ -171,8 +187,32 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
         raise ValueError(
             f"{cfg.name}: {avail} B left after params cannot hold even one "
             f"minimal sequence ({fixed + 2 * per_tok} B) on each device")
-    per_slot = fixed + per_tok * mean
     cap = max(1, max_slots // dp_size)
+
+    if page_size is not None and per_tok > 0:
+        page_bytes = page_size * per_tok
+        scratch = page_bytes  # block 0, never handed out
+        if avail < fixed + 2 * page_bytes:
+            raise ValueError(
+                f"{cfg.name}: {avail} B left after params cannot hold the "
+                f"scratch block plus one minimal paged sequence "
+                f"({fixed + 2 * page_bytes} B) on each device")
+        # each admitted sequence needs its fixed state + >= 1 block; the
+        # pool, not a per-slot stripe, is what the remaining bytes buy
+        local_slots = max(1, min(cap,
+                                 (avail - scratch) // (fixed + page_bytes)))
+        local_pages = int((avail - scratch - local_slots * fixed)
+                          // page_bytes)
+        max_pages_per_seq = math.ceil(max_len / page_size)
+        local_pages = max(1, min(local_pages,
+                                 local_slots * max_pages_per_seq))
+        slots = local_slots * dp_size
+        num_pages = local_pages * dp_size
+        return EnginePlan(slots, num_pages * page_size, dp_size, local_slots,
+                          pb, avail, per_tok, fixed,
+                          page_size=page_size, num_pages=num_pages)
+
+    per_slot = fixed + per_tok * mean
     local_slots = int(avail // per_slot) if per_slot else cap
     local_slots = max(1, min(local_slots, cap))
     slots = local_slots * dp_size
@@ -188,9 +228,12 @@ def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
                 mean_seq_tokens: int | None = None,
                 max_slots: int = 256,
                 mesh=None, dp: tuple[str, ...] = ("data",),
-                fsdp: bool | None = None) -> tuple[int, int | None]:
+                fsdp: bool | None = None,
+                page_size: int | None = None) -> tuple[int, int | None]:
     """(num_slots, token_budget) that fit ``memory_bytes`` (per device when
-    a mesh is given) — see :func:`plan_engine_report` for the breakdown."""
+    a mesh is given) — see :func:`plan_engine_report` for the breakdown
+    (including ``num_pages`` for paged plans)."""
     plan = plan_engine_report(cfg, memory_bytes, max_len, mean_seq_tokens,
-                              max_slots, mesh=mesh, dp=dp, fsdp=fsdp)
+                              max_slots, mesh=mesh, dp=dp, fsdp=fsdp,
+                              page_size=page_size)
     return plan.num_slots, plan.token_budget

@@ -1,23 +1,47 @@
-"""Slot-indexed ragged KV/state cache for continuous batching.
+"""Slot- and page-indexed KV/state caches for continuous batching.
 
-Reuses the exact layouts of ``models.init_caches``: every leaf is stacked
-``(num_periods, num_slots, ...)``, so slot s of the engine IS batch row s of
-the decode step — admitting a sequence writes one batch row, retiring it
-restores that row to its init value.  ``insert`` takes decode-ready caches
-produced by ``models.prefill`` (same structure, any batch size) and copies
-one or more rows into slots in a single gather/scatter; ``evict`` resets a
-slot from a kept blank template (NOT zeros: mLSTM/sLSTM stabilizer state
-inits to -1e30, so a zero reset would corrupt a reused slot).
+``SlotCache`` reuses the exact layouts of ``models.init_caches``: every leaf
+is stacked ``(num_periods, num_slots, ...)``, so slot s of the engine IS
+batch row s of the decode step — admitting a sequence writes one batch row,
+retiring it restores that row to its init value.  ``insert`` takes
+decode-ready caches produced by ``models.prefill`` (same structure, any
+batch size) and copies one or more rows into slots in a single
+gather/scatter; ``evict`` resets a slot from a kept blank template (NOT
+zeros: mLSTM/sLSTM stabilizer state inits to -1e30, so a zero reset would
+corrupt a reused slot).
+
+``PagedSlotCache`` replaces the fixed ``max_len`` stripe per slot with a
+vLLM-style paged layout: attention K/V live in a global block pool
+(``models.init_paged_caches``) carved into ``page_size``-token blocks, and
+each slot holds a ``(max_pages,)`` row of an int32 page table mapping its
+logical pages to physical blocks.  A :class:`PageAllocator` free-list hands
+blocks out; block 0 is a reserved scratch block that unmapped table entries
+(and idle decode rows) point at, so the compiled decode step needs no
+branches.  Short sequences then cost pages proportional to their actual
+length instead of a whole ``max_len`` stripe — the *token budget*, not the
+slot width, bounds memory.  Recurrent/conv state is O(1) per sequence and
+stays slot-indexed in both layouts.
 """
 from __future__ import annotations
 
+import math
 from typing import Sequence as TypingSequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import init_caches
+from repro.models import init_caches, init_paged_caches
+
+
+def _check_slots(slots: TypingSequence[int], num_slots: int) -> None:
+    """Slot indices must be unique and in range (shared by both caches)."""
+    bad = [s for s in slots if not 0 <= int(s) < num_slots]
+    if bad:
+        raise IndexError(f"slots {bad} out of range [0, {num_slots})")
+    if len(set(int(s) for s in slots)) != len(slots):
+        raise ValueError(f"duplicate slots in {list(slots)}")
 
 
 class SlotCache:
@@ -93,8 +117,257 @@ class SlotCache:
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
 
     def _check_slots(self, slots: TypingSequence[int]) -> None:
-        bad = [s for s in slots if not 0 <= int(s) < self.num_slots]
-        if bad:
-            raise IndexError(f"slots {bad} out of range [0, {self.num_slots})")
-        if len(set(int(s) for s in slots)) != len(slots):
-            raise ValueError(f"duplicate slots in {list(slots)}")
+        _check_slots(slots, self.num_slots)
+
+
+class PageAllocator:
+    """Free-list allocator over the KV block pool.
+
+    Physical block ids run 1..num_pages — block 0 is the reserved scratch
+    block that unmapped page-table entries point at and is never handed
+    out.  Conservation is checked on every transition: each block is either
+    free or live, never both and never neither, so a double-alloc or
+    double-free raises instead of silently corrupting two sequences.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        # stack of free block ids; reversed so pop() hands out block 1 first
+        self._free: list[int] = list(range(1, num_pages + 1))[::-1]
+        self._live: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` blocks off the free list; raises MemoryError when the
+        pool cannot satisfy the request (nothing is partially allocated)."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise MemoryError(
+                f"asked for {n} pages but only {len(self._free)} of "
+                f"{self.num_pages} are free")
+        out = [self._free.pop() for _ in range(n)]
+        self._live.update(out)
+        self._check()
+        return out
+
+    def free(self, pages: TypingSequence[int]) -> None:
+        pages = [int(p) for p in pages]
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate pages in free: {pages}")
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+        self._live.difference_update(pages)
+        self._free.extend(pages)
+        self._check()
+
+    def _check(self) -> None:
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate block on free list"
+        assert not (free & self._live), "block both free and live"
+        assert len(free) + len(self._live) == self.num_pages, (
+            "block count not conserved")
+
+
+class PagedSlotCache:
+    """Decode caches for ``num_slots`` slots over a paged KV block pool.
+
+    Attention K/V leaves hold ``num_pages`` usable blocks of ``page_size``
+    tokens (plus the scratch block 0); ``table`` is the host-side
+    ``(num_slots, max_pages)`` int32 page table the compiled decode step
+    consumes (0 = unmapped).  ``insert`` maps just enough pages to cover a
+    sequence's prompt and scatters the dense prefill rows into them;
+    ``ensure_mapped`` grows a slot's table one block at a time as decode
+    crosses page boundaries; ``evict`` frees the slot's pages back to the
+    allocator and restores its slot-indexed recurrent state from the blank
+    template.  Freed blocks are NOT zeroed: every valid position of a
+    reused block is fully overwritten by the next insert/decode writes,
+    and stale positions beyond a sequence's current length are masked to
+    NEG_INF by the decode validity mask — reuse stays bit-exact.
+
+    ``shardings`` places the pool's block axis over the mesh's data axis
+    (page table stays replicated host state), mirroring ``SlotCache``.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 num_pages: int, page_size: int, shardings=None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_pages = math.ceil(max_len / page_size)
+        self.allocator = PageAllocator(num_pages)
+        self.table = np.zeros((num_slots, self.max_pages), np.int32)
+        self.shardings = shardings
+        self._attn = [m == "attn" for m, _ in cfg.pattern]
+        self.data = init_paged_caches(cfg, num_slots, num_pages + 1, page_size)
+        # blank single-slot template for the slot-indexed (recurrent) leaves
+        self._blank = init_caches(cfg, 1, 1)
+        if shardings is not None:
+            self.data = jax.device_put(self.data, shardings)
+            self._blank = jax.device_put(self._blank, jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(
+                    s.mesh, jax.sharding.PartitionSpec()), shardings))
+
+    def _commit(self) -> None:
+        if self.shardings is not None:
+            self.data = jax.device_put(self.data, self.shardings)
+
+    # ----------------------------------------------------------- insert --
+    def insert(self, slots: TypingSequence[int], caches,
+               lengths: TypingSequence[int],
+               rows: TypingSequence[int] | None = None) -> None:
+        """Admit prefilled sequences: map ``ceil(length / page_size)`` blocks
+        per slot, scatter the dense ``models.prefill`` rows (shaped like
+        ``init_caches(cfg, B, max_len)``) into them, and copy the
+        slot-indexed recurrent leaves.  ``rows`` defaults to
+        0..len(slots)-1."""
+        if rows is None:
+            rows = list(range(len(slots)))
+        if len(rows) != len(slots) or len(lengths) != len(slots):
+            raise ValueError(
+                f"{len(slots)} slots vs {len(rows)} rows / "
+                f"{len(lengths)} lengths")
+        self._check_slots(slots)
+        for s, n in zip(slots, lengths):
+            if not 0 < int(n) <= self.max_len:
+                raise ValueError(f"slot {s}: length {n} out of (0, "
+                                 f"{self.max_len}]")
+            if self.table[s].any():
+                raise ValueError(f"slot {s} still holds mapped pages; "
+                                 "evict before reinserting")
+        done: list[int] = []
+        try:
+            for s, n in zip(slots, lengths):
+                need = math.ceil(int(n) / self.page_size)
+                self.table[s, :need] = self.allocator.alloc(need)
+                done.append(s)
+        except MemoryError:
+            # roll the partial batch back: no slot keeps mapped-but-unwritten
+            # pages after a failed insert
+            for s in done:
+                self.allocator.free(self.table[s][self.table[s] > 0].tolist())
+                self.table[s] = 0
+            raise
+
+        s_idx = jnp.asarray(list(slots), jnp.int32)
+        r_idx = jnp.asarray(list(rows), jnp.int32)
+        # destination blocks for every (row, logical page); unmapped pages
+        # land in scratch block 0, whose contents nothing ever gathers
+        dst = jnp.asarray(self.table[list(slots)].reshape(-1), jnp.int32)
+        pad_to = self.max_pages * self.page_size
+
+        new = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                new.append({
+                    key: self._scatter_pages(self.data[i][key],
+                                             caches[i][key], r_idx, dst,
+                                             pad_to)
+                    for key in ("k", "v")})
+            else:
+                new.append(jax.tree.map(
+                    lambda dstl, src: dstl.at[:, s_idx].set(
+                        jnp.take(src, r_idx, axis=1).astype(dstl.dtype)),
+                    self.data[i], caches[i]))
+        self.data = tuple(new)
+        self._commit()
+
+    def _scatter_pages(self, pool, src, r_idx, dst, pad_to):
+        """src (P, B, max_len, ...) rows -> pool blocks per ``dst`` ids."""
+        rows = jnp.take(src, r_idx, axis=1)  # (P, R, max_len, ...)
+        p, r = rows.shape[:2]
+        if rows.shape[2] < pad_to:
+            pad = [(0, 0), (0, 0), (0, pad_to - rows.shape[2])]
+            pad += [(0, 0)] * (rows.ndim - 3)
+            rows = jnp.pad(rows, pad)
+        pages = rows.reshape(p, r * self.max_pages, self.page_size,
+                             *rows.shape[3:])
+        return pool.at[:, dst].set(pages.astype(pool.dtype))
+
+    # ------------------------------------------------------------ growth --
+    def ensure_mapped(self, slot: int, pos: int) -> None:
+        """Map the block holding position ``pos`` if the slot's table does
+        not cover it yet (called before each decode write; admission
+        reserved the worst case, so the alloc cannot fail)."""
+        page = int(pos) // self.page_size
+        if page >= self.max_pages:
+            raise IndexError(
+                f"slot {slot}: position {pos} beyond max_len {self.max_len}")
+        if self.table[slot, page] == 0:
+            self.table[slot, page] = self.allocator.alloc(1)[0]
+
+    # ------------------------------------------------------------ evict --
+    def evict(self, slots: TypingSequence[int]) -> None:
+        """Free ``slots``' pages back to the allocator and restore their
+        slot-indexed recurrent state to its init value."""
+        self._check_slots(slots)
+        for s in slots:
+            mapped = self.table[s][self.table[s] > 0]
+            if len(mapped):
+                self.allocator.free(mapped.tolist())
+            self.table[s] = 0
+        s_idx = jnp.asarray(list(slots), jnp.int32)
+        new = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                new.append(self.data[i])  # pool blocks just return to free
+            else:
+                new.append(jax.tree.map(
+                    lambda dst, blank: dst.at[:, s_idx].set(
+                        jnp.broadcast_to(blank[:, 0:1],
+                                         blank.shape[:1] + (len(slots),)
+                                         + blank.shape[2:])),
+                    self.data[i], self._blank[i]))
+        self.data = tuple(new)
+        self._commit()
+
+    # ------------------------------------------------------------ views --
+    def table_device(self) -> jax.Array:
+        """The page table as a device array for the decode dispatch."""
+        return jnp.asarray(self.table)
+
+    def gather_slot(self, slot: int, length: int | None = None):
+        """One slot's caches as a dense batch-of-1 pytree (test/debug
+        helper): attention pages gathered back into a (P, 1, max_len, ...)
+        stripe (positions past ``length`` zeroed — they may hold stale
+        block contents that decode masks), recurrent leaves sliced."""
+        n = self.max_len if length is None else int(length)
+        out = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                entry = {}
+                for key in ("k", "v"):
+                    pool = self.data[i][key]
+                    dense = jnp.take(pool, jnp.asarray(self.table[slot]),
+                                     axis=1)
+                    dense = dense.reshape(pool.shape[0], 1, -1,
+                                          *pool.shape[3:])[:, :, :self.max_len]
+                    mask = (jnp.arange(self.max_len) < n)
+                    entry[key] = dense * mask[None, None, :, None, None]
+                out.append(entry)
+            else:
+                out.append(jax.tree.map(
+                    lambda x: x[:, slot:slot + 1], self.data[i]))
+        return tuple(out)
+
+    def nbytes(self) -> int:
+        return (sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(self.data))
+                + self.table.nbytes)
+
+    def _check_slots(self, slots: TypingSequence[int]) -> None:
+        _check_slots(slots, self.num_slots)

@@ -15,6 +15,15 @@ are fully overwritten at the next insert.  Sampling (greedy / temperature /
 top-k) is vectorized per slot inside the same jit, with per-request seeds
 folded with the sequence position so any request replays deterministically.
 
+Paged KV (DESIGN.md section 10): ``Engine(page_size=...)`` swaps the fixed
+``max_len`` stripes for a :class:`PagedSlotCache` — attention K/V live in
+a global block pool indexed through a per-slot page table that is just
+another (replicated, host-updated) input to the same single compiled
+decode dispatch.  The scheduler admits against free pages, tables grow one
+block at a time as decode crosses page boundaries, and short requests stop
+paying for ``max_len`` stripes — the token budget becomes the physical
+memory bound.  ``page_size=None`` keeps the fixed-slot path bit-for-bit.
+
 Mesh serving (DESIGN.md section 9): pass a ``jax.sharding.Mesh`` with
 "data"/"model" axes and decode runs as ONE SPMD dispatch across the mesh —
 params placed by ``partition_params`` (TP over "model"), the slot cache by
@@ -38,8 +47,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
 from repro.parallel import context as pctx
-from repro.serving.budget import plan_engine
-from repro.serving.cache import SlotCache
+from repro.serving.budget import plan_engine_report
+from repro.serving.cache import PagedSlotCache, SlotCache
 from repro.serving.request import Request, RequestOutput, Sequence
 from repro.serving.scheduler import Scheduler
 
@@ -66,6 +75,16 @@ class EngineStats:
 
 def _next_pow2(x: int) -> int:
     return 1 << max(0, x - 1).bit_length()
+
+
+def _pow2_bucket(x: int, cap: int) -> int:
+    """Smallest power of two >= x, clamped to the pow2 ceiling of ``cap``.
+
+    Clamping to ``cap`` itself would reintroduce a non-pow2 dispatch shape
+    whenever the cap (num_slots, max_len) is not a power of two — the
+    compile-cache bound the bucketing exists for requires BOTH rows and
+    width to round through this one helper."""
+    return min(_next_pow2(x), _next_pow2(cap))
 
 
 MAX_TOP_K = 64  # static top-k width compiled into the sampler (overridable)
@@ -117,10 +136,21 @@ class Engine:
     (params priced under the active FactorizationPolicy; leftover memory
     becomes KV).  ``eos_id`` optionally stops sequences early.
 
+    ``page_size`` switches the attention KV cache from fixed ``max_len``
+    stripes to a paged block pool (:class:`PagedSlotCache`): the scheduler
+    then admits against free *pages* — ``num_pages`` of them, defaulting to
+    worst-case capacity (``num_slots * ceil(max_len / page_size)``), or
+    derived from ``token_budget`` / ``memory_budget_bytes`` — and a slot's
+    page table grows on demand as decode crosses block boundaries.  Paging
+    is a no-op for pure-recurrent stacks (their state is O(1) per slot), so
+    ``page_size`` is silently ignored there and the fixed-slot path runs.
+    ``page_size=None`` is the fixed-slot fallback.
+
     ``mesh`` (axes named by ``dp``/``tp``, default "data"/"model") turns the
     engine SPMD: see the module docstring.  ``memory_budget_bytes`` is then
     a PER-DEVICE budget and ``num_slots`` is rounded up to a multiple of the
-    data-axis size so the slot axis shards evenly.  Requests with
+    data-axis size so the slot axis shards evenly (paged: the block pool's
+    block axis, scratch included, is likewise rounded).  Requests with
     ``0 < top_k < vocab`` must satisfy ``top_k <= max_top_k`` (the sampler
     compiles a fixed top-k width; raise it here if clients need more).
     """
@@ -132,11 +162,22 @@ class Engine:
                  eos_id: int | None = None,
                  mesh=None, dp: tuple[str, ...] = ("data",),
                  tp: str | None = "model",
-                 max_top_k: int = MAX_TOP_K):
+                 max_top_k: int = MAX_TOP_K,
+                 page_size: int | None = None,
+                 num_pages: int | None = None):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"{cfg.name} takes frontend embeddings; the engine serves "
                 "token models (see examples/serve_decode.py for the stub flow)")
+        if num_pages is not None and page_size is None:
+            raise ValueError("num_pages only makes sense with page_size")
+        if num_pages is not None and token_budget is not None:
+            raise ValueError(
+                "pass either token_budget (converted to pages) or an "
+                "explicit num_pages, not both — one would silently lose")
+        if page_size is not None and not any(
+                m == "attn" for m, _ in cfg.pattern):
+            page_size = num_pages = None  # nothing to page: O(1) state only
         self.mesh = mesh
         self.dp = tuple(dp)
         self.tp = tp
@@ -148,13 +189,16 @@ class Engine:
                     f"mesh axes {missing} not in mesh {tuple(mesh.axis_names)}")
         dp_size = pctx.axes_product(mesh, self.dp) if mesh is not None else 1
         if memory_budget_bytes is not None:
-            if num_slots is not None or token_budget is not None:
+            if num_slots is not None or token_budget is not None or \
+                    num_pages is not None:
                 raise ValueError(
                     "pass either memory_budget_bytes (slots/budget derived) "
-                    "or explicit num_slots/token_budget, not both")
-            num_slots, token_budget = plan_engine(cfg, memory_budget_bytes,
-                                                  max_len, mesh=mesh,
-                                                  dp=self.dp)
+                    "or explicit num_slots/token_budget/num_pages, not both")
+            plan = plan_engine_report(cfg, memory_budget_bytes, max_len,
+                                      mesh=mesh, dp=self.dp,
+                                      page_size=page_size)
+            num_slots, token_budget = plan.num_slots, plan.token_budget
+            num_pages, page_size = plan.num_pages, plan.page_size
         self.cfg = cfg
         self.max_len = max_len
         self.num_slots = num_slots or 4
@@ -163,16 +207,40 @@ class Engine:
             self.num_slots = math.ceil(self.num_slots / dp_size) * dp_size
         self.eos_id = eos_id
         self.max_top_k = min(max_top_k, cfg.vocab_size)
+        self.page_size = page_size
+        if page_size is not None:
+            max_pages_per_seq = math.ceil(max_len / page_size)
+            if num_pages is None:
+                if token_budget is not None:
+                    # ceil: flooring would shrink the stated budget and
+                    # reject a max-size request the token regime admits
+                    num_pages = math.ceil(token_budget / page_size)
+                    token_budget = None
+                else:  # worst case: every slot filled to max_len
+                    num_pages = self.num_slots * max_pages_per_seq
+            if mesh is not None:
+                # pool blocks (incl. scratch) shard over "data": round the
+                # total block count up to a dp multiple
+                num_pages = dp_size * math.ceil(
+                    (num_pages + 1) / dp_size) - 1
+        self.num_pages = num_pages
 
         if mesh is not None:
             from repro.parallel.sharding import (guard_spec, partition_caches,
                                                  partition_params, to_named)
             self._param_sh = to_named(mesh, partition_params(cfg, mesh))
             self.params = jax.device_put(params, self._param_sh)
+            pages = (num_pages + 1, page_size) if page_size is not None \
+                else None
             cache_sh = to_named(mesh, partition_caches(
-                cfg, mesh, self.dp, self.num_slots, max_len))
-            self.cache = SlotCache(cfg, self.num_slots, max_len,
-                                   shardings=cache_sh)
+                cfg, mesh, self.dp, self.num_slots, max_len, pages=pages))
+            if page_size is not None:
+                self.cache = PagedSlotCache(cfg, self.num_slots, max_len,
+                                            num_pages, page_size,
+                                            shardings=cache_sh)
+            else:
+                self.cache = SlotCache(cfg, self.num_slots, max_len,
+                                       shardings=cache_sh)
             dpa = self.dp if len(self.dp) > 1 else self.dp[0]
             ns = self.num_slots
             self._slot_sh = NamedSharding(mesh, guard_spec(P(dpa), (ns,), mesh))
@@ -181,8 +249,18 @@ class Engine:
             self._rep_sh = NamedSharding(mesh, P())
         else:
             self.params = params
-            self.cache = SlotCache(cfg, self.num_slots, max_len)
-        self.scheduler = Scheduler(self.num_slots, token_budget)
+            if page_size is not None:
+                self.cache = PagedSlotCache(cfg, self.num_slots, max_len,
+                                            num_pages, page_size)
+            else:
+                self.cache = SlotCache(cfg, self.num_slots, max_len)
+        if page_size is not None:
+            self.scheduler = Scheduler(self.num_slots, max_len=max_len,
+                                       page_size=page_size,
+                                       num_pages=num_pages)
+        else:
+            self.scheduler = Scheduler(self.num_slots, token_budget,
+                                       max_len=max_len)
         self.stats = EngineStats()
         self._attn_only = all(m == "attn" for m, _ in cfg.pattern)
         self._sample = _make_sampler(cfg, self.max_top_k)
@@ -197,8 +275,12 @@ class Engine:
         self._topk = np.zeros((ns,), np.int32)
         self._seeds = np.zeros((ns,), np.uint32)
 
-        def step_fn(params, data, tok, pos, temps, topk, seeds):
-            logits, data = decode_step(params, cfg, tok, data, pos)
+        ps = self.page_size
+
+        def step_fn(params, data, table, tok, pos, temps, topk, seeds):
+            logits, data = decode_step(params, cfg, tok, data, pos,
+                                       page_table=table, page_size=ps,
+                                       kv_len=max_len if ps else None)
             nxt = self._sample(logits[:, 0], temps, topk, seeds, pos + 1)
             return nxt, data
 
@@ -213,10 +295,12 @@ class Engine:
 
         if mesh is not None:
             row = self._slot_sh
+            # the page table is replicated host state (None when unpaged)
             self._step = jax.jit(
                 step_fn,
                 in_shardings=(self._param_sh, self.cache.shardings,
-                              self._tok_sh, row, row, row, row),
+                              self._rep_sh if ps else None, self._tok_sh,
+                              row, row, row, row),
                 out_shardings=(self._rep_sh, self.cache.shardings))
         else:
             self._step = jax.jit(step_fn)
@@ -244,19 +328,13 @@ class Engine:
     def run(self, requests: list[Request]) -> list[RequestOutput]:
         """Serve ``requests`` to completion; returns outputs in request order."""
         seqs = [Sequence(r) for r in requests]
-        budget = self.scheduler.token_budget
         # validate the whole batch BEFORE enqueuing anything: a mid-add_all
         # rejection would leave ghost sequences in the queue that eat slots
-        # on the next run and whose outputs nobody collects
+        # on the next run and whose outputs nobody collects.  Feasibility
+        # (max_len capacity + token/page budget) is the scheduler's check —
+        # it owns those bounds so direct users get the same protection.
         for s in seqs:
-            if s.reserved_tokens > self.max_len:
-                raise ValueError(
-                    f"{s.request_id}: prompt+max_new = {s.reserved_tokens} "
-                    f"exceeds engine max_len = {self.max_len}")
-            if budget is not None and s.reserved_tokens > budget:
-                raise ValueError(
-                    f"{s.request_id}: prompt+max_new = {s.reserved_tokens} "
-                    f"exceeds the token budget {budget}")
+            self.scheduler.validate(s)
             tk = s.request.sampling.top_k
             if self.max_top_k < tk < self.cfg.vocab_size:
                 raise ValueError(
@@ -302,11 +380,13 @@ class Engine:
             # bucket (rows, width) to powers of two so a long-lived engine
             # compiles O(log slots * log max_len) prefill variants, not one
             # per admission shape; dummy rows/columns are masked out by the
-            # ragged lengths and never inserted into the cache.  The row cap
-            # is _next_pow2(num_slots) — NOT num_slots, which would yield a
-            # non-power-of-two bucket whenever the slot count isn't one
-            width = min(_next_pow2(width), self.max_len)
-            rows = min(_next_pow2(rows), _next_pow2(self.num_slots))
+            # ragged lengths and never inserted into the cache.  Both caps
+            # round through _pow2_bucket — clamping width at max_len itself
+            # (or rows at num_slots) would reintroduce a non-pow2 bucket
+            # whenever the cap isn't a power of two; prefill slices the
+            # decode-ready K/V back to max_len when width rounds past it
+            width = _pow2_bucket(width, self.max_len)
+            rows = _pow2_bucket(rows, self.num_slots)
         prompts = np.zeros((rows, width), np.int32)
         lens = np.ones((rows,), np.int32)  # dummy rows: length-1 stub
         temps = np.zeros((rows,), np.float32)
@@ -330,7 +410,11 @@ class Engine:
                 ragged=ragged)
         jax.block_until_ready((first, caches))
         slots = [s.slot for s in group]
-        self.cache.insert(slots, caches)
+        if self.page_size is not None:
+            self.cache.insert(slots, caches,
+                              lengths=[s.prompt_len for s in group])
+        else:
+            self.cache.insert(slots, caches)
         self.stats.prefill_time += time.perf_counter() - t0
         self.stats.prefill_tokens += int(lens[: len(group)].sum())
         self.stats.prefill_dispatches += 1
@@ -347,10 +431,19 @@ class Engine:
 
     # ------------------------------------------------------------- decode --
     def _decode_once(self, active: list[Sequence]) -> None:
+        table = None
+        if self.page_size is not None:
+            # grow page tables before the dispatch: each active slot whose
+            # write position crosses into an unmapped block gets one from
+            # the free list (admission reserved the worst case, so this
+            # cannot fail); values-only change — never a recompile
+            for s in active:
+                self.cache.ensure_mapped(s.slot, int(self._pos[s.slot]))
+            table = self.cache.table_device()
         t0 = time.perf_counter()
         with self._trace_ctx():
             nxt, self.cache.data = self._step(
-                self.params, self.cache.data, jnp.asarray(self._tok),
+                self.params, self.cache.data, table, jnp.asarray(self._tok),
                 jnp.asarray(self._pos), jnp.asarray(self._temps),
                 jnp.asarray(self._topk), jnp.asarray(self._seeds))
         nxt = np.asarray(nxt)

@@ -113,29 +113,37 @@ class Sequence:
         elif len(self.tokens) >= self.request.max_new:
             self.finish_reason = FinishReason.LENGTH
 
+    def _since_arrival(self, t: float | None) -> float | None:
+        """Duration from arrival to a lifecycle stage, or None if the
+        sequence never reached it — treating an unset stage as time 0 would
+        emit large negative durations that poison latency aggregates."""
+        return None if t is None else t - self.t_arrival
+
     def to_output(self) -> "RequestOutput":
         return RequestOutput(
             request_id=self.request_id,
             prompt=self.request.prompt,
             tokens=tuple(self.tokens),
             finish_reason=self.finish_reason,
-            queue_time=(self.t_admitted or 0.0) - self.t_arrival,
-            time_to_first_token=(self.t_first_token or 0.0) - self.t_arrival,
-            latency=(self.t_finished or 0.0) - self.t_arrival,
+            queue_time=self._since_arrival(self.t_admitted),
+            time_to_first_token=self._since_arrival(self.t_first_token),
+            latency=self._since_arrival(self.t_finished),
         )
 
 
 @dataclasses.dataclass(frozen=True)
 class RequestOutput:
-    """Finished request: generated tokens + latency breakdown (seconds)."""
+    """Finished request: generated tokens + latency breakdown (seconds).
+    A duration is ``None`` when the sequence never reached that lifecycle
+    stage (e.g. rejected or still waiting); aggregators must skip None."""
 
     request_id: str
     prompt: tuple[int, ...]
     tokens: tuple[int, ...]
     finish_reason: FinishReason | None
-    queue_time: float
-    time_to_first_token: float
-    latency: float
+    queue_time: float | None
+    time_to_first_token: float | None
+    latency: float | None
 
 
 def make_requests(prompts: TypingSequence[TypingSequence[int]], max_new: int,

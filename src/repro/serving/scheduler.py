@@ -1,21 +1,38 @@
-"""Continuous-batching scheduler: fixed decode slots + a KV token budget.
+"""Continuous-batching scheduler: fixed decode slots + a KV capacity budget.
 
 The decode step is compiled once for a fixed slot count, so scheduling is
 the art of keeping those slots full (PopSparse's lesson: structured
 sparsity pays off only when the compute units stay fed).  Admission is
 strict FIFO from a waiting queue: the head request is admitted as soon as
-a slot is free AND reserving its worst-case token footprint
-(prompt + max_new) fits the budget; the queue never skips the head, which
-is what makes fairness and eventual admission provable.
+a slot is free AND reserving its worst-case footprint fits the budget; the
+queue never skips the head, which is what makes fairness and eventual
+admission provable.
+
+The budget is counted in one of two units:
+  * tokens (``token_budget``): the fixed-``max_len`` SlotCache regime —
+    a sequence reserves ``prompt + max_new`` tokens;
+  * pages (``page_size``/``num_pages``): the PagedSlotCache regime — a
+    sequence reserves ``ceil((prompt + max_new) / page_size)`` blocks.
+    Physical blocks are handed out lazily (prompt pages at insert, one
+    block per boundary crossing during decode), but admission reserves the
+    worst case, so on-demand growth can never fail and the head blocks
+    only when reservations genuinely exhaust the pool — preemption/swap
+    (ROADMAP) is what it would take to admit more optimistically.
+
+``add`` rejects up front anything that could NEVER be admitted — both the
+budget bound and the per-sequence capacity bound (``max_len``): a direct
+scheduler user (the coming async path) must not be able to enqueue a head
+that deadlocks the FIFO queue.
 
 Invariants (property-tested in tests/test_serving_scheduler.py):
   * no slot is ever assigned to two live sequences,
-  * sum of reserved tokens over active sequences never exceeds the budget,
+  * reserved units (tokens or pages) never exceed the budget,
   * every added sequence is eventually admitted and retired,
   * admission order equals arrival order (FIFO).
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from typing import Iterable
 
@@ -24,31 +41,83 @@ from repro.serving.request import Sequence, SequenceState
 
 class Scheduler:
     """Admit/retire sequences into ``num_slots`` decode slots under a token
-    budget.  ``token_budget=None`` disables the budget (recurrent archs whose
-    per-sequence state is O(1))."""
+    or page budget.  ``token_budget=None`` (and no paging) disables the
+    budget (recurrent archs whose per-sequence state is O(1)).  ``max_len``
+    is the per-sequence capacity bound: anything reserving more tokens than
+    one slot can ever hold is rejected at ``add``."""
 
-    def __init__(self, num_slots: int, token_budget: int | None = None):
+    def __init__(self, num_slots: int, token_budget: int | None = None,
+                 max_len: int | None = None,
+                 page_size: int | None = None,
+                 num_pages: int | None = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if token_budget is not None and token_budget < 1:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        if (page_size is None) != (num_pages is None):
+            raise ValueError("page_size and num_pages come together")
+        if page_size is not None:
+            if token_budget is not None:
+                raise ValueError(
+                    "pass either token_budget (fixed slots) or "
+                    "page_size/num_pages (paged), not both")
+            if page_size < 1 or num_pages < 1:
+                raise ValueError(
+                    f"page_size/num_pages must be >= 1, got "
+                    f"{page_size}/{num_pages}")
         self.num_slots = num_slots
         self.token_budget = token_budget
+        self.max_len = max_len
+        self.page_size = page_size
+        self.num_pages = num_pages
         self.waiting: deque[Sequence] = deque()
         self.active: dict[int, Sequence] = {}  # slot -> sequence
         # stack of free slots; reversed so pop() hands out slot 0 first
         self._free: list[int] = list(range(num_slots))[::-1]
-        self.reserved_tokens = 0
+        # reserved capacity units: tokens in the fixed regime, pages when
+        # page_size is set
+        self.reserved_units = 0
+
+    # ------------------------------------------------------------ units --
+    @property
+    def budget(self) -> int | None:
+        """The admission budget in this scheduler's units (tokens/pages)."""
+        return self.num_pages if self.page_size is not None else self.token_budget
+
+    def need(self, seq: Sequence) -> int:
+        """Worst-case units ``seq`` must reserve to be admitted."""
+        if self.page_size is not None:
+            return math.ceil(seq.reserved_tokens / self.page_size)
+        return seq.reserved_tokens
+
+    @property
+    def reserved_tokens(self) -> int:
+        """Token-regime view of the reserved counter (kept for callers of
+        the fixed-slot scheduler; in the paged regime read
+        ``reserved_units`` — pages)."""
+        return self.reserved_units
 
     # ------------------------------------------------------------ intake --
+    def validate(self, seq: Sequence) -> None:
+        """Raise if ``seq`` could NEVER be admitted (it would deadlock the
+        strict-FIFO queue): capacity bound first, then the budget bound.
+        Checks nothing about the current load — only feasibility."""
+        if self.max_len is not None and seq.reserved_tokens > self.max_len:
+            raise ValueError(
+                f"{seq.request_id}: prompt+max_new = {seq.reserved_tokens} "
+                f"exceeds engine max_len = {self.max_len}")
+        budget = self.budget
+        if budget is not None and self.need(seq) > budget:
+            unit = "pages" if self.page_size is not None else "tokens"
+            raise ValueError(
+                f"{seq.request_id}: needs {self.need(seq)} {unit} but the "
+                f"{'page' if self.page_size is not None else 'token'} budget "
+                f"is {budget}; it would never be admitted")
+
     def add(self, seq: Sequence) -> None:
         """Queue a sequence.  Rejects up front anything that could never be
-        admitted (it would deadlock the strict-FIFO queue)."""
-        need = seq.reserved_tokens
-        if self.token_budget is not None and need > self.token_budget:
-            raise ValueError(
-                f"{seq.request_id}: needs {need} tokens but the budget is "
-                f"{self.token_budget}; it would never be admitted")
+        admitted (see :meth:`validate`)."""
+        self.validate(seq)
         seq.state = SequenceState.WAITING
         self.waiting.append(seq)
 
@@ -62,10 +131,10 @@ class Scheduler:
         budget holds.  Returns the newly admitted sequences (they still need
         a prefill before they can decode)."""
         admitted = []
+        budget = self.budget
         while self.waiting and self._free:
-            need = self.waiting[0].reserved_tokens
-            if (self.token_budget is not None
-                    and self.reserved_tokens + need > self.token_budget):
+            need = self.need(self.waiting[0])
+            if budget is not None and self.reserved_units + need > budget:
                 break  # strict FIFO: never admit past a blocked head
             seq = self.waiting.popleft()
             slot = self._free.pop()
@@ -73,7 +142,7 @@ class Scheduler:
             seq.state = SequenceState.RUNNING
             seq.t_admitted = seq.now()
             self.active[slot] = seq
-            self.reserved_tokens += need
+            self.reserved_units += need
             admitted.append(seq)
         return admitted
 
@@ -83,7 +152,7 @@ class Scheduler:
             raise ValueError(f"{seq.request_id} is not active in slot {seq.slot}")
         del self.active[seq.slot]
         self._free.append(seq.slot)
-        self.reserved_tokens -= seq.reserved_tokens
+        self.reserved_units -= self.need(seq)
         seq.slot = None
         seq.state = SequenceState.FINISHED
         seq.t_finished = seq.now()

@@ -1,0 +1,230 @@
+"""PageAllocator property tests + PagedSlotCache unit tests.
+
+The allocator suite is pure Python (no jax): hypothesis drives random
+alloc/free interleavings when available, with a seeded-random fallback
+exercising the same invariants where it is absent:
+  * no block is ever handed out twice while live,
+  * block ids stay in 1..num_pages (block 0 is the reserved scratch block),
+  * free + live counts are conserved through every transition,
+  * an unsatisfiable alloc raises without partially allocating,
+  * freed blocks become allocatable again.
+
+The cache suite checks the bit-exactness contract: a slot's gathered pages
+equal the dense prefill row that was scattered in, and evicted blocks
+reused by a later insert reproduce the original contents bit-for-bit.
+"""
+import random
+
+import pytest
+
+from repro.serving.cache import PageAllocator
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------ allocator ----
+
+
+def _run_ops(num_pages, ops):
+    """Apply (is_alloc, amount) ops, asserting every invariant along the
+    way.  ``amount`` for frees is an index seed into the live set."""
+    alloc = PageAllocator(num_pages)
+    live = set()
+    for is_alloc, amount in ops:
+        if is_alloc:
+            n = amount % (num_pages + 2)  # sometimes more than the pool
+            if n > alloc.num_free:
+                before = (alloc.num_free, alloc.num_live)
+                with pytest.raises(MemoryError):
+                    alloc.alloc(n)
+                assert (alloc.num_free, alloc.num_live) == before, (
+                    "failed alloc must not partially allocate")
+                continue
+            got = alloc.alloc(n)
+            assert len(set(got)) == len(got), "block handed out twice"
+            assert all(1 <= p <= num_pages for p in got), got
+            assert not (set(got) & live), "allocated a live block"
+            live.update(got)
+        elif live:
+            k = 1 + amount % len(live)
+            victims = sorted(live)[:k]
+            alloc.free(victims)
+            live.difference_update(victims)
+        assert alloc.num_live == len(live)
+        assert alloc.num_free + alloc.num_live == num_pages, "not conserved"
+    # drain: everything can come back
+    alloc.free(sorted(live))
+    assert alloc.num_free == num_pages
+    # and the whole pool is allocatable again
+    again = alloc.alloc(num_pages)
+    assert sorted(again) == list(range(1, num_pages + 1))
+
+
+if HAVE_HYPOTHESIS:
+    @given(num_pages=st.integers(1, 64),
+           ops=st.lists(st.tuples(st.booleans(), st.integers(0, 200)),
+                        max_size=60))
+    @settings(max_examples=200, deadline=None)
+    def test_allocator_invariants_hypothesis(num_pages, ops):
+        _run_ops(num_pages, ops)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_allocator_invariants_seeded(trial):
+    rng = random.Random(trial)
+    num_pages = rng.randint(1, 64)
+    ops = [(rng.random() < 0.6, rng.randint(0, 200))
+           for _ in range(rng.randint(0, 60))]
+    _run_ops(num_pages, ops)
+
+
+def test_allocator_rejects_double_free_and_foreign_pages():
+    alloc = PageAllocator(4)
+    got = alloc.alloc(2)
+    alloc.free(got[:1])
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.free(got[:1])  # double free
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.free([0])  # scratch block is never allocatable
+    with pytest.raises(ValueError, match="duplicate"):
+        alloc.free([got[1], got[1]])
+
+
+def test_allocator_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        PageAllocator(0)
+    alloc = PageAllocator(2)
+    with pytest.raises(ValueError):
+        alloc.alloc(-1)
+    with pytest.raises(MemoryError):
+        alloc.alloc(3)
+
+
+# ----------------------------------------------------------- paged cache ----
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("qwen3-4b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+MAX_LEN, PAGE = 12, 4
+
+
+def _tree_equal(a, b) -> bool:
+    import jax
+    import jax.numpy as jnp
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_insert_maps_exact_pages_and_gathers_bit_exactly(paged_setup):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import prefill
+    from repro.serving import PagedSlotCache
+
+    cfg, params = paged_setup
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 5)), jnp.int32)
+    _, dense = prefill(params, cfg, prompt, MAX_LEN)
+
+    cache = PagedSlotCache(cfg, num_slots=3, max_len=MAX_LEN, num_pages=9,
+                           page_size=PAGE)
+    cache.insert([1], dense, lengths=[5])
+    # 5 tokens at page 4 -> exactly 2 mapped blocks, in the table head
+    assert (cache.table[1] > 0).sum() == 2
+    assert cache.table[0].sum() == 0 and cache.table[2].sum() == 0
+    assert cache.allocator.num_live == 2
+    # the gathered stripe equals the dense prefill row bit-for-bit
+    assert _tree_equal(cache.gather_slot(1, 5), dense)
+
+
+def test_evicted_blocks_are_reused_bit_exactly(paged_setup):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import prefill
+    from repro.serving import PagedSlotCache
+
+    cfg, params = paged_setup
+    rng = np.random.default_rng(1)
+    pa = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 5)), jnp.int32)
+    pb = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    _, da = prefill(params, cfg, pa, MAX_LEN)
+    _, db = prefill(params, cfg, pb, MAX_LEN)
+
+    cache = PagedSlotCache(cfg, num_slots=2, max_len=MAX_LEN, num_pages=3,
+                           page_size=PAGE)
+    cache.insert([0], da, lengths=[5])
+    snap = jax.tree.map(jnp.copy, cache.gather_slot(0, 5))
+    cache.evict([0])
+    assert cache.allocator.num_live == 0
+    assert cache.table[0].sum() == 0
+    # the LIFO free list hands B exactly the blocks A freed, and A's
+    # reinsert lands on the blocks B dirtied — gather must still be
+    # bit-identical to the first pass
+    cache.insert([1], db, lengths=[8])
+    cache.evict([1])
+    cache.insert([0], da, lengths=[5])
+    assert _tree_equal(cache.gather_slot(0, 5), snap)
+
+
+def test_ensure_mapped_grows_one_block_and_is_idempotent(paged_setup):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import prefill
+    from repro.serving import PagedSlotCache
+
+    cfg, params = paged_setup
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, PAGE)), jnp.int32)
+    _, dense = prefill(params, cfg, prompt, MAX_LEN)
+    cache = PagedSlotCache(cfg, num_slots=1, max_len=MAX_LEN, num_pages=3,
+                           page_size=PAGE)
+    cache.insert([0], dense, lengths=[PAGE])
+    assert cache.allocator.num_live == 1  # prompt fills block exactly
+    cache.ensure_mapped(0, PAGE)  # decode writes position PAGE: new block
+    assert cache.allocator.num_live == 2
+    mapped = cache.table[0].copy()
+    cache.ensure_mapped(0, PAGE + 1)  # same block: no growth
+    assert cache.allocator.num_live == 2
+    assert (cache.table[0] == mapped).all()
+    with pytest.raises(IndexError, match="beyond max_len"):
+        cache.ensure_mapped(0, MAX_LEN)
+
+
+def test_insert_validations(paged_setup):
+    import numpy as np
+    from repro.models import init_caches
+    from repro.serving import PagedSlotCache
+
+    cfg, _ = paged_setup
+    cache = PagedSlotCache(cfg, num_slots=2, max_len=MAX_LEN, num_pages=2,
+                           page_size=PAGE)
+    src = init_caches(cfg, 1, MAX_LEN)
+    with pytest.raises(ValueError, match="length"):
+        cache.insert([0], src, lengths=[0])
+    with pytest.raises(ValueError, match="length"):
+        cache.insert([0], src, lengths=[MAX_LEN + 1])
+    cache.insert([0], src, lengths=[3])
+    with pytest.raises(ValueError, match="evict before reinserting"):
+        cache.insert([0], src, lengths=[3])
+    with pytest.raises(IndexError):
+        cache.insert([5], src, lengths=[3])
+    # exhausting the pool raises instead of corrupting another slot, and
+    # leaves the failed slot unmapped (no partial allocation)
+    with pytest.raises(MemoryError):
+        cache.insert([1], init_caches(cfg, 1, MAX_LEN), lengths=[MAX_LEN])
+    assert cache.table[1].sum() == 0
+    assert cache.allocator.num_live == 1  # just slot 0's block

@@ -151,6 +151,43 @@ def test_prefill_rejects_overlong_prompt(attn_setup):
         prefill(params, cfg, jnp.zeros((1, MAX_LEN + 1), jnp.int32), MAX_LEN)
 
 
+def test_prefill_rejects_true_ragged_length_past_max_len(attn_setup):
+    """Widths past max_len are allowed only as dummy pad columns (pow2
+    buckets); a TRUE length beyond max_len would be silently truncated by
+    the K/V slice, so concrete lengths must be validated."""
+    cfg, params = attn_setup
+    toks = jnp.zeros((1, MAX_LEN + 4), jnp.int32)
+    with pytest.raises(ValueError, match="only dummy pad columns"):
+        prefill(params, cfg, toks, MAX_LEN,
+                lengths=jnp.asarray([MAX_LEN + 2], jnp.int32))
+    # a bucketed width with in-range lengths stays legal
+    logits, _ = prefill(params, cfg, toks, MAX_LEN,
+                        lengths=jnp.asarray([MAX_LEN - 2], jnp.int32))
+    assert logits.shape[1] == MAX_LEN + 4
+
+
+def test_engine_rejects_token_budget_with_explicit_num_pages(attn_setup):
+    cfg, params = attn_setup
+    with pytest.raises(ValueError, match="not both"):
+        Engine(params, cfg, max_len=MAX_LEN, num_slots=2, token_budget=100,
+               page_size=4, num_pages=2)
+    with pytest.raises(ValueError, match="num_pages only makes sense"):
+        Engine(params, cfg, max_len=MAX_LEN, num_slots=2, num_pages=2)
+
+
+def test_engine_token_budget_converts_to_pages_with_ceil(attn_setup):
+    """A token budget that isn't a page multiple must round UP: flooring
+    would reject a max-size request the stated token budget admits."""
+    cfg, params = attn_setup
+    from repro.serving import Sequence
+
+    eng = Engine(params, cfg, max_len=10, num_slots=2, token_budget=10,
+                 page_size=4)
+    assert eng.num_pages == 3  # ceil(10 / 4), not 10 // 4 == 2
+    # a request reserving exactly the stated 10 tokens is admissible
+    eng.scheduler.validate(Sequence(Request("r0", tuple(range(1, 8)), 3)))
+
+
 # ------------------------------------------------------- engine behavior ----
 
 
@@ -332,6 +369,41 @@ def test_prefill_buckets_are_powers_of_two_for_nonpow2_slots(attn_setup):
         params, cfg, jnp.asarray(prompts, jnp.int32), 3, MAX_LEN))
     for i, out in enumerate(outs):
         assert out.tokens == tuple(ref[i])
+
+
+def test_prefill_buckets_are_powers_of_two_for_nonpow2_max_len(attn_setup):
+    """max_len=13: width buckets must round to powers of two (8, 16 —
+    prefill slices the decode-ready K/V back to 13), never clamp to the
+    non-pow2 max_len itself — the exact defect the row-bucket fix covered,
+    reintroduced on the width axis by ``min(_next_pow2(w), max_len)``."""
+    cfg, params = attn_setup
+    max_len = 13
+    engine = Engine(params, cfg, max_len=max_len, num_slots=4)
+    shapes = []
+    orig = engine._prefill
+
+    def spy(params, prompts, *a, **kw):
+        shapes.append(tuple(prompts.shape))
+        return orig(params, prompts, *a, **kw)
+
+    engine._prefill = spy
+    rng = np.random.default_rng(12)
+    # widths 9..12 all bucket to 16 > max_len; width 5 buckets to 8
+    for plen in (9, 5):
+        prompts = [tuple(map(int, rng.integers(0, cfg.vocab_size, size=plen)))
+                   for _ in range(3)]
+        outs = engine.run([Request(f"r{plen}-{i}", p, 3)
+                           for i, p in enumerate(prompts)])
+        ref = np.asarray(token_by_token_greedy(
+            params, cfg, jnp.asarray(prompts, jnp.int32), 3, max_len))
+        for i, out in enumerate(outs):
+            assert out.tokens == tuple(ref[i]), (plen, i)
+    assert shapes, "prefill never dispatched"
+    for rows, width in shapes:
+        assert rows & (rows - 1) == 0, f"non-pow2 row bucket {rows}"
+        assert width & (width - 1) == 0, f"non-pow2 width bucket {width}"
+    # both length groups really did exercise distinct buckets
+    assert {w for _, w in shapes} == {16, 8}
 
 
 def test_engine_rejects_embedding_mode_configs():

@@ -139,6 +139,48 @@ def test_add_rejects_request_that_can_never_fit():
         sched.add(_seq(0, 8, 8))
 
 
+def test_add_rejects_request_beyond_capacity_bound():
+    """The per-sequence capacity bound (max_len) lives in the scheduler:
+    a direct user (the coming async path) must not be able to enqueue a
+    head that could never fit a slot and deadlocks the FIFO queue."""
+    sched = Scheduler(num_slots=2, token_budget=100, max_len=10)
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        sched.add(_seq(0, 8, 8))  # 16 reserved > max_len 10, budget ok
+    sched.add(_seq(1, 5, 5))  # exactly max_len: fine
+    assert len(sched.admit()) == 1
+
+
+def test_page_mode_admits_against_free_pages():
+    """Page-unit accounting: a sequence reserves ceil(tokens / page_size)
+    blocks; the head blocks when reservations would exhaust the pool and
+    retirement frees its pages for the next admission."""
+    sched = Scheduler(num_slots=4, page_size=4, num_pages=5, max_len=20)
+    a, b, c = _seq(0, 5, 6), _seq(1, 4, 4), _seq(2, 1, 2)
+    # a: ceil(11/4) = 3 pages; b: 2 pages; c: 1 page
+    sched.add_all([a, b, c])
+    assert sched.admit() == [a, b]  # 3 + 2 = 5 = whole pool
+    assert sched.reserved_units == 5
+    assert sched.admit() == []  # c (1 page) waits: pool exhausted
+    sched.retire(a)
+    assert sched.reserved_units == 2
+    assert sched.admit() == [c]
+    sched.retire(b), sched.retire(c)
+    assert sched.reserved_units == 0
+
+
+def test_page_mode_rejects_request_beyond_pool():
+    sched = Scheduler(num_slots=2, page_size=4, num_pages=3, max_len=100)
+    with pytest.raises(ValueError, match="never be admitted"):
+        sched.add(_seq(0, 10, 10))  # 5 pages > 3 in the pool
+
+
+def test_page_mode_constructor_validations():
+    with pytest.raises(ValueError, match="come together"):
+        Scheduler(2, page_size=4)
+    with pytest.raises(ValueError, match="not both"):
+        Scheduler(2, token_budget=10, page_size=4, num_pages=2)
+
+
 def test_retire_frees_slot_and_budget_for_reuse():
     sched = Scheduler(num_slots=1, token_budget=12)
     a, b = _seq(0, 5, 5), _seq(1, 6, 6)
