@@ -14,15 +14,23 @@ Rows (trajectory JSONs track these):
   serve/paged/e2e         — Engine.run with the paged KV cache over two
                             admission waves (asserts ZERO decode recompiles
                             across page-table growth and slot reuse)
+  serve/stream/ttft       — a short request arriving AFTER a long batch
+                            started: closed-batch TTFT (waits for the whole
+                            batch) vs streaming TTFT (admitted mid-flight
+                            via Engine.submit/step), same engine shape,
+                            decode compiled exactly once; also reports the
+                            streamed requests' TTFT/ITL aggregates
 
 The acceptance bars are engine prefill >= 3x seed prefill tokens/sec on a
-reduced config, and (with --paged) the paged admission ratio; ``main``
-exits nonzero if either regresses.
+reduced config, (with --paged) the paged admission ratio, and (with
+--streaming) the late-arrival TTFT ratio >= --min-stream-ttft-ratio;
+``main`` exits nonzero if any regresses.
 """
 from __future__ import annotations
 
 import argparse
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +41,8 @@ from repro.configs import get_config, reduced
 from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
 from repro.models import prefill as model_prefill
-from repro.serving import Engine, make_requests, param_bytes
+from repro.serving import (Engine, Request, make_requests, param_bytes,
+                           percentile)
 from repro.serving.budget import plan_engine_report
 
 
@@ -168,6 +177,101 @@ def run_paged(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
     return {"admission_ratio": ratio, "decode_compiles": compiles}
 
 
+def run_streaming(arch: str = "qwen3-4b", batch: int = 4,
+                  prompt_len: int = 32, max_new: int = 16) -> dict:
+    """What the step-driven API buys a late arrival.
+
+    A short request lands one decode step after a long batch started.
+    Closed batch (``Engine.run``): it can only go in the NEXT run, so its
+    TTFT is the whole long batch plus its own prefill.  Streaming
+    (``submit``/``step``): the scheduler admits it into the free slot at
+    the next step and its first token arrives while the long batch is
+    still decoding.  Both paths use the same engine shape (batch + 1
+    slots) and fully warmed compile caches; the streaming engine must
+    compile decode exactly once across the mid-flight admission."""
+    section(f"streaming TTFT: {arch} reduced, B={batch}, P={prompt_len}")
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = prompt_len + max_new
+    slots = batch + 1  # one slot stays free for the late arrival
+    short_len = max(1, prompt_len // 4)
+
+    def long_reqs(tag):
+        return [Request(f"{tag}-long-{i}",
+                        tuple(int(x) for x in
+                              rng.integers(0, cfg.vocab_size, prompt_len)),
+                        max_new) for i in range(batch)]
+
+    def short_req(tag):
+        return Request(f"{tag}-short",
+                       tuple(int(x) for x in
+                             rng.integers(0, cfg.vocab_size, short_len)),
+                       max(2, max_new // 4))
+
+    def warm(engine, tag):
+        # pay every prefill bucket (batch-rows long, 1-row short) and the
+        # decode compile before anything is timed
+        engine.run(long_reqs(tag))
+        engine.run([short_req(tag)])
+
+    # --- closed batch: the late request waits for the whole run ---------
+    closed = Engine(params, cfg, max_len=max_len, num_slots=slots)
+    warm(closed, "warm-c")
+    t_arrival = time.perf_counter()  # the short request "arrives" now...
+    closed.run(long_reqs("c"))       # ...but the closed batch must drain
+    out = closed.run([short_req("c")])[0]
+    t_done = time.perf_counter()
+    # out.* durations start at ITS submission (after the long batch); its
+    # first token landed (latency - ttft) before run() returned, so:
+    ttft_closed = (t_done - t_arrival) - (out.latency
+                                          - out.time_to_first_token)
+
+    # --- streaming: submit mid-flight, watch for its first delta --------
+    stream = Engine(params, cfg, max_len=max_len, num_slots=slots)
+    warm(stream, "warm-s")
+    seqs = [stream.submit(r) for r in long_reqs("s")]
+    finished = 0
+    # the priming steps' events count too: with a tiny --max-new the long
+    # batch can retire inside them, and dropping those terminal events
+    # would break the completion accounting below
+    finished += sum(ev.finished for ev in stream.step())  # prefill
+    finished += sum(ev.finished for ev in stream.step())  # one decode step
+    t_arrival = time.perf_counter()
+    short = short_req("s")
+    seqs.append(stream.submit(short))
+    ttft_stream = None
+    while stream.scheduler.has_work:
+        for ev in stream.step():
+            if ev.request_id == short.request_id and ttft_stream is None:
+                ttft_stream = time.perf_counter() - t_arrival
+            finished += ev.finished
+    compiles = stream.decode_compile_count()
+    if compiles is not None and compiles != 1:
+        raise SystemExit(
+            f"streaming decode recompiled across the mid-flight arrival: "
+            f"{compiles} compilations (expected 1)")
+    assert ttft_stream is not None and finished == batch + 1
+
+    ratio = ttft_closed / ttft_stream
+    emit(f"serve/stream/ttft/{arch}", ttft_stream,
+         f"ttft_closed={ttft_closed:.4f};ttft_stream={ttft_stream:.4f};"
+         f"ratio={ratio:.2f};decode_compiles={compiles}")
+    # latency aggregates over the streamed run (None stages skipped)
+    outs = [s.to_output() for s in seqs]
+    ttfts = [o.time_to_first_token for o in outs
+             if o.time_to_first_token is not None]
+    itls = [o.itl_mean for o in outs if o.itl_mean is not None]
+    itl_p = [o.itl_p99 for o in outs if o.itl_p99 is not None]
+    emit(f"serve/stream/latency/{arch}", 0.0,
+         f"ttft_mean={sum(ttfts)/len(ttfts):.4f};"
+         f"ttft_p99={percentile(ttfts, 99):.4f};"
+         f"itl_mean={sum(itls)/len(itls):.4f};"
+         f"itl_p99={percentile(itl_p, 99):.4f}")
+    return {"ttft_closed": ttft_closed, "ttft_stream": ttft_stream,
+            "ratio": ratio, "decode_compiles": compiles}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -189,6 +293,13 @@ def main():
     ap.add_argument("--min-paged-ratio", type=float, default=1.5,
                     help="fail (exit 1) if paging admits fewer than this "
                          "multiple of the fixed-slot short requests")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also run the streaming mode: late-arrival TTFT "
+                         "under submit/step vs closed batch + zero-recompile "
+                         "check across the mid-flight admission")
+    ap.add_argument("--min-stream-ttft-ratio", type=float, default=2.0,
+                    help="fail (exit 1) if streaming improves the late "
+                         "request's TTFT by less than this factor")
     args = ap.parse_args()
     r = run(args.arch, args.batch, args.prompt_len, args.max_new,
             args.dp, args.tp)
@@ -201,6 +312,13 @@ def main():
         print(f"paged admission ratio: {p['admission_ratio']:.2f}x "
               f"(bar: {args.min_paged_ratio:.1f}x)")
         ok = ok and p["admission_ratio"] >= args.min_paged_ratio
+    if args.streaming:
+        s = run_streaming(args.arch, args.batch, args.prompt_len,
+                          args.max_new)
+        print(f"late-arrival TTFT: closed {s['ttft_closed']:.4f}s vs "
+              f"streamed {s['ttft_stream']:.4f}s = {s['ratio']:.2f}x "
+              f"(bar: {args.min_stream_ttft_ratio:.1f}x)")
+        ok = ok and s["ratio"] >= args.min_stream_ttft_ratio
     if not ok:
         raise SystemExit(1)
 

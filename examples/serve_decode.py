@@ -10,11 +10,17 @@ the minimal manual decode loop over the frontend stub.
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch qwen3-4b
       PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
 
+``--stream`` serves the same batch through the AsyncEngine instead of the
+closed-batch ``run()``: requests are submitted with staggered arrivals and
+tokens print AS THEY ARE PRODUCED, interleaved across requests — the
+step-loop/streaming API of DESIGN.md section 11 at toy scale.
+
 Mesh serving (decode sharded over a data x model mesh — DESIGN.md sec 9):
       XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/serve_decode.py --dp 2 --tp 2
 """
 import argparse
+import asyncio
 import time
 
 import jax
@@ -24,7 +30,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
-from repro.serving import Engine, SamplingParams, make_requests
+from repro.serving import AsyncEngine, Engine, SamplingParams, make_requests
 
 
 def serve_tokens(cfg, params, args) -> None:
@@ -46,13 +52,43 @@ def serve_tokens(cfg, params, args) -> None:
             if engine.page_size is not None else "KV cache")
     print(f"{cfg.name}: {engine.num_slots} slots, cache footprint "
           f"{engine.cache.nbytes()/1e6:.2f} MB ({kind})")
-    outputs = engine.run(requests)
+    if args.stream:
+        outputs = asyncio.run(stream_requests(engine, requests))
+    else:
+        outputs = engine.run(requests)
     st = engine.stats
     gen = sum(len(o.tokens) for o in outputs)
     print(f"generated {gen} tokens: prefill {st.prefill_tps:.1f} tok/s "
           f"({st.prefill_dispatches} dispatches), "
           f"decode {st.decode_tps:.1f} tok/s on CPU")
+    itl = [o.itl_mean for o in outputs if o.itl_mean is not None]
+    ttft = [o.time_to_first_token for o in outputs
+            if o.time_to_first_token is not None]
+    if itl and ttft:
+        print(f"ttft mean {np.mean(ttft):.4f}s, itl mean {np.mean(itl):.4f}s")
     print("sample:", list(outputs[0].tokens)[:12])
+
+
+async def stream_requests(engine, requests):
+    """Submit with staggered arrivals; print deltas as the step loop emits
+    them (tokens from different requests interleave on the console)."""
+    async with AsyncEngine(engine) as aeng:
+        outputs = [None] * len(requests)
+
+        async def one(i, req):
+            stream = await aeng.submit(req)
+            seq = aeng.sequence(req.request_id)
+            async for delta in stream:
+                print(f"  [{req.request_id}] token {delta.index}: "
+                      f"{delta.token}")
+            outputs[i] = seq.to_output()
+
+        tasks = []
+        for i, req in enumerate(requests):
+            tasks.append(asyncio.ensure_future(one(i, req)))
+            await asyncio.sleep(0.2)  # staggered arrivals, admitted mid-run
+        await asyncio.gather(*tasks)
+        return outputs
 
 
 def serve_embeddings(cfg, params, args) -> None:
@@ -94,6 +130,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-KV block size in tokens (0 = fixed slots)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the AsyncEngine: staggered arrivals, "
+                         "tokens printed as they stream (token archs only)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis (token archs only)")
     ap.add_argument("--tp", type=int, default=1,

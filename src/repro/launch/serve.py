@@ -5,18 +5,37 @@ decode slots over a PAGED KV cache by default (``--page-size`` blocks; the
 scheduler admits against free pages, so short requests stop paying for
 ``max_len`` stripes — ``--fixed-slots`` falls back to the dense SlotCache),
 prefill is ONE batched forward per prompt-length group (not a per-token
-decode loop), and sampling (greedy / temperature / top-k) is per-request.
-The old token-by-token prefill path survives as
+decode loop), and sampling (greedy / temperature / top-k / stop tokens) is
+per-request.  The old token-by-token prefill path survives as
 ``repro.serving.reference.token_by_token_greedy`` — the parity oracle the
 engine is tested against.
 
 ``--dp/--tp`` serve across a (data, model) mesh: decode becomes one SPMD
 dispatch per step (DESIGN.md section 9).  On CPU, host devices are
 simulated with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
+``--http PORT`` switches from the closed-batch demo to an open HTTP
+server over :class:`repro.serving.AsyncEngine` (DESIGN.md section 11):
+stdlib ``asyncio`` networking only, no web framework.
+
+  POST /generate   JSON body {"prompt": [ids], "max_new": n, and optional
+                   "temperature", "top_k", "seed", "stop_tokens"}.
+                   Responds 200 with Content-Type application/x-ndjson and
+                   ``Connection: close``: one JSON object PER LINE, each a
+                   TokenDelta {"request_id", "token", "index"}, the last
+                   line adding "finish_reason"; the body ends (connection
+                   closes) after the terminal line.  Tokens stream as the
+                   step loop produces them — a second request POSTed while
+                   the first is mid-stream interleaves, it does not wait.
+  GET /stats       One JSON object: engine throughput counters, scheduler
+                   occupancy, and TTFT/ITL aggregates over completed
+                   requests (None-valued stages skipped, PR 4 rules).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import itertools
 import json
 import logging
 
@@ -27,7 +46,8 @@ from repro.configs import get_config, reduced
 from repro.core.policy import FactorizationPolicy, uniform_policy
 from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params
-from repro.serving import Engine, SamplingParams, make_requests
+from repro.serving import (AsyncEngine, Engine, Request, RequestOutput,
+                           SamplingParams, make_requests, percentile)
 from repro.serving.budget import plan_engine_report
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
@@ -45,16 +65,303 @@ def resolve_policy(args) -> FactorizationPolicy | None:
     return None
 
 
+def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
+    """Engine construction shared by the closed-batch and HTTP modes."""
+    page_size = None if (args.fixed_slots or not args.page_size) \
+        else args.page_size
+    if args.memory_budget_mb:  # derived sizing; explicit flags conflict
+        if args.slots or args.token_budget:
+            raise SystemExit("--memory-budget-mb derives slots and token "
+                             "budget; drop --slots/--token-budget")
+        budget = int(args.memory_budget_mb * 1e6)
+        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
+                                  page_size=page_size)
+        log.info("plan (per device): params %.2f MB, kv %.2f MB, "
+                 "%d slots x %d shards -> %d total, token budget %s"
+                 "%s",
+                 plan.param_bytes_per_device / 1e6,
+                 plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
+                 plan.dp_size, plan.num_slots, plan.token_budget,
+                 f", {plan.num_pages} pages x {plan.page_size} tokens"
+                 if plan.num_pages is not None else "")
+        # hand the engine the plan we just logged (num_slots is already a
+        # dp multiple) instead of re-deriving it from the budget
+        return Engine(params, cfg, max_len=max_len,
+                      num_slots=plan.num_slots,
+                      token_budget=(None if plan.num_pages is not None
+                                    else plan.token_budget),
+                      page_size=plan.page_size,
+                      num_pages=plan.num_pages, mesh=mesh)
+    return Engine(params, cfg, max_len=max_len,
+                  num_slots=(args.slots or min(args.batch, 8)),
+                  token_budget=args.token_budget or None,
+                  page_size=page_size, mesh=mesh)
+
+
+def _latency_lines(outputs: list[RequestOutput]) -> list[str]:
+    """Human-readable TTFT/ITL/latency summary; every stage a sequence
+    never reached is None and skipped, never zero-filled.  The ITL p99 is
+    the p99 of per-request itl_p99 summaries (a conservative tail proxy —
+    see stats_payload)."""
+    lines = []
+    lat = [o.latency for o in outputs if o.latency is not None]
+    ttft = [o.time_to_first_token for o in outputs
+            if o.time_to_first_token is not None]
+    itl_m = [o.itl_mean for o in outputs if o.itl_mean is not None]
+    itl_p = [o.itl_p99 for o in outputs if o.itl_p99 is not None]
+    if lat:
+        lines.append(f"latency s: mean {float(np.mean(lat)):.3f} "
+                     f"p50 {float(np.median(lat)):.3f} "
+                     f"max {float(np.max(lat)):.3f}")
+    if ttft:
+        lines.append(f"ttft s: mean {float(np.mean(ttft)):.4f} "
+                     f"p50 {percentile(ttft, 50):.4f} "
+                     f"p99 {percentile(ttft, 99):.4f}")
+    if itl_m:
+        lines.append(f"itl s: mean {float(np.mean(itl_m)):.4f} "
+                     f"p99 {percentile(itl_p, 99):.4f}")
+    if not lines:
+        lines.append(f"latency: 0/{len(outputs)} sequences finished "
+                     "with timestamps")
+    return lines
+
+
+# ------------------------------------------------------------- HTTP front --
+class ServerState:
+    """Mutable bits shared by connection handlers: request ids + completed
+    outputs for /stats (bounded so a long-lived server cannot grow it)."""
+
+    MAX_COMPLETED = 4096
+
+    def __init__(self):
+        self.ids = itertools.count()
+        self.completed: list[RequestOutput] = []
+
+    def record(self, out: RequestOutput) -> None:
+        self.completed.append(out)
+        if len(self.completed) > self.MAX_COMPLETED:
+            del self.completed[: len(self.completed) - self.MAX_COMPLETED]
+
+
+def request_from_json(payload: dict, request_id: str) -> Request:
+    """Wire JSON -> Request; raises ValueError on a malformed body (the
+    handler maps that to 400)."""
+    if not isinstance(payload, dict):
+        raise ValueError("body must be a JSON object")
+    unknown = set(payload) - {"prompt", "max_new", "temperature", "top_k",
+                              "seed", "stop_tokens"}
+    if unknown:
+        raise ValueError(f"unknown fields: {sorted(unknown)}")
+    prompt = payload.get("prompt")
+    if not isinstance(prompt, list) or not prompt or \
+            not all(isinstance(t, int) for t in prompt):
+        raise ValueError("'prompt' must be a non-empty list of token ids")
+    sampling = SamplingParams(
+        temperature=float(payload.get("temperature", 0.0)),
+        top_k=int(payload.get("top_k", 0)),
+        seed=int(payload.get("seed", 0)),
+        stop_tokens=tuple(payload.get("stop_tokens", ())))
+    return Request(request_id=request_id, prompt=tuple(prompt),
+                   max_new=int(payload.get("max_new", 16)),
+                   sampling=sampling)
+
+
+def stats_payload(engine: Engine, state: ServerState) -> dict:
+    st = engine.stats
+    done = state.completed
+    ttft = [o.time_to_first_token for o in done
+            if o.time_to_first_token is not None]
+    itl_m = [o.itl_mean for o in done if o.itl_mean is not None]
+    itl_p = [o.itl_p99 for o in done if o.itl_p99 is not None]
+    return {
+        "engine": {
+            "prefill_tokens": st.prefill_tokens,
+            "prefill_dispatches": st.prefill_dispatches,
+            "prefill_tps": st.prefill_tps,
+            "decode_tokens": st.decode_tokens,
+            "decode_steps": st.decode_steps,
+            "decode_tps": st.decode_tps,
+            "decode_compile_count": engine.decode_compile_count(),
+        },
+        "scheduler": {
+            "num_slots": engine.num_slots,
+            "active": len(engine.scheduler.active),
+            "waiting": len(engine.scheduler.waiting),
+            "free_slots": engine.scheduler.free_slots,
+        },
+        "completed": len(done),
+        # aggregates over per-request summaries, None stages skipped.
+        # itl_s.p99 is the p99 of PER-REQUEST itl_p99 values (RequestOutput
+        # keeps summaries, not raw gaps) — a conservative tail proxy that
+        # typically over-reports versus the p99 over all token gaps
+        "ttft_s": {"mean": sum(ttft) / len(ttft) if ttft else None,
+                   "p50": percentile(ttft, 50) if ttft else None,
+                   "p99": percentile(ttft, 99) if ttft else None},
+        "itl_s": {"mean": sum(itl_m) / len(itl_m) if itl_m else None,
+                  "p99": percentile(itl_p, 99) if itl_p else None},
+    }
+
+
+def _write_head(writer: asyncio.StreamWriter, status: str,
+                ctype: str) -> None:
+    writer.write((f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+                  "Connection: close\r\n\r\n").encode())
+
+
+def _write_json(writer: asyncio.StreamWriter, status: str,
+                payload: dict) -> None:
+    _write_head(writer, status, "application/json")
+    writer.write((json.dumps(payload) + "\n").encode())
+
+
+async def _handle_generate(aeng: AsyncEngine, state: ServerState,
+                           body: bytes, writer: asyncio.StreamWriter) -> None:
+    rid = f"http-{next(state.ids)}"
+    try:
+        req = request_from_json(json.loads(body.decode() or "null"), rid)
+        stream = await aeng.submit(req)
+    except (ValueError, TypeError, json.JSONDecodeError) as e:
+        # TypeError covers wrong-typed fields hitting the float()/int()/
+        # tuple() coercions (e.g. "temperature": [0.5], "max_new": null)
+        _write_json(writer, "400 Bad Request", {"error": str(e)})
+        return
+    seq = aeng.sequence(rid)
+    _write_head(writer, "200 OK", "application/x-ndjson")
+    try:
+        async for delta in stream:
+            writer.write((json.dumps(delta.to_dict()) + "\n").encode())
+            await writer.drain()  # raises when the client is gone
+    finally:
+        # normal end OR client disconnect; closing an unfinished stream
+        # aborts the request, freeing its slot and pages immediately
+        await stream.aclose()
+        if seq is not None and seq.done:
+            state.record(seq.to_output())
+
+
+MAX_BODY_BYTES = 1 << 20  # a /generate body is a token list: 1 MiB is ample
+
+
+async def _handle_conn(aeng: AsyncEngine, state: ServerState,
+                       reader: asyncio.StreamReader,
+                       writer: asyncio.StreamWriter) -> None:
+    try:
+        request_line = (await reader.readline()).decode("latin1")
+        parts = request_line.split()
+        if len(parts) < 2:
+            return
+        method, path = parts[0], parts[1]
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = line.decode("latin1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        if method == "POST" and path == "/generate":
+            try:
+                length = int(headers.get("content-length", 0))
+                if length < 0:
+                    raise ValueError
+            except ValueError:
+                _write_json(writer, "400 Bad Request",
+                            {"error": "malformed Content-Length"})
+                return
+            if length > MAX_BODY_BYTES:
+                # refuse before buffering: readexactly would otherwise
+                # accumulate a client-controlled body without bound
+                _write_json(writer, "413 Payload Too Large",
+                            {"error": f"body over {MAX_BODY_BYTES} bytes"})
+                return
+            body = await reader.readexactly(length)
+            await _handle_generate(aeng, state, body, writer)
+        elif method == "GET" and path == "/stats":
+            # read under the engine lock (off-loop): a mid-step snapshot
+            # would see half-updated counters / slot accounting
+            payload = await aeng.with_engine(
+                lambda eng: stats_payload(eng, state))
+            _write_json(writer, "200 OK", payload)
+        else:
+            _write_json(writer, "404 Not Found",
+                        {"error": f"no route {method} {path}"})
+    except (ConnectionError, asyncio.IncompleteReadError):
+        pass  # client went away; any in-flight generate already aborted
+    except ValueError:
+        # e.g. a request/header line over the StreamReader's 64 KiB limit:
+        # best-effort 400 instead of a dead connection + logged traceback
+        try:
+            _write_json(writer, "400 Bad Request",
+                        {"error": "unparseable request"})
+        except (ConnectionError, OSError):
+            pass
+    finally:
+        try:
+            await writer.drain()
+            writer.close()
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+async def http_serve(engine: Engine, host: str, port: int,
+                     ready=None) -> None:
+    """Serve ``engine`` over HTTP until cancelled.  ``ready(port)`` fires
+    once the socket is bound (port 0 -> the ephemeral port chosen); tests
+    and the smoke client use it instead of polling."""
+    state = ServerState()
+    async with AsyncEngine(engine) as aeng:
+        server = await asyncio.start_server(
+            lambda r, w: _handle_conn(aeng, state, r, w), host, port)
+        bound = server.sockets[0].getsockname()[1]
+        log.info("HTTP serving on http://%s:%d (POST /generate, GET /stats)",
+                 host, bound)
+        if ready is not None:
+            ready(bound)
+        async with server:
+            await server.serve_forever()
+
+
+# ------------------------------------------------------------ batch demo --
+def run_batch(args, engine: Engine, cfg) -> None:
+    rng = np.random.default_rng(args.seed)
+    if args.ragged:
+        lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                            size=args.batch)
+    else:
+        lens = np.full(args.batch, args.prompt_len)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
+    requests = make_requests(
+        [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens],
+        max_new=args.max_new, sampling=sampling)
+
+    outputs = engine.run(requests)
+    st = engine.stats
+    total = sum(len(o.tokens) for o in outputs)
+    log.info("generated %d tokens over %d requests", total, len(outputs))
+    log.info("prefill: %d tokens in %d dispatches, %.1f tok/s",
+             st.prefill_tokens, st.prefill_dispatches, st.prefill_tps)
+    log.info("decode: %d tokens in %d steps, %.1f tok/s",
+             st.decode_tokens, st.decode_steps, st.decode_tps)
+    for line in _latency_lines(outputs):
+        log.info("%s", line)
+    log.info("sample %s: %s", outputs[0].request_id,
+             list(outputs[0].tokens)[:12])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--reduce", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4,
-                    help="number of requests to serve")
+                    help="number of requests to serve (batch mode)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths in [prompt_len/2, prompt_len]")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine sequence capacity (0 = prompt_len + "
+                         "max_new; the HTTP mode bound on prompt+max_new)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 = min(batch, 8), or derived from "
                          "--memory-budget-mb when given)")
@@ -80,6 +387,11 @@ def main():
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on this port (0 = ephemeral) "
+                         "instead of running the closed-batch demo")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --http")
     ap.add_argument("--fact", default="",
                     help="serve with a uniform factorization kind at the "
                          "classic sites (butterfly|pixelfly|...)")
@@ -99,19 +411,7 @@ def main():
                          "examples/serve_decode.py for the stub flow")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(args.seed)
-    if args.ragged:
-        lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
-                            size=args.batch)
-    else:
-        lens = np.full(args.batch, args.prompt_len)
-    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
-                              seed=args.seed)
-    requests = make_requests(
-        [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens],
-        max_new=args.max_new, sampling=sampling)
-
-    max_len = int(lens.max()) + args.max_new
+    max_len = args.max_len or (args.prompt_len + args.max_new)
     mesh = None
     if args.dp * args.tp > 1:
         try:
@@ -120,36 +420,7 @@ def main():
             raise SystemExit(str(e))
         log.info("mesh: dp=%d x tp=%d over %d devices",
                  args.dp, args.tp, args.dp * args.tp)
-    page_size = None if (args.fixed_slots or not args.page_size) \
-        else args.page_size
-    if args.memory_budget_mb:  # derived sizing; explicit flags conflict
-        if args.slots or args.token_budget:
-            raise SystemExit("--memory-budget-mb derives slots and token "
-                             "budget; drop --slots/--token-budget")
-        budget = int(args.memory_budget_mb * 1e6)
-        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
-                                  page_size=page_size)
-        log.info("plan (per device): params %.2f MB, kv %.2f MB, "
-                 "%d slots x %d shards -> %d total, token budget %s"
-                 "%s",
-                 plan.param_bytes_per_device / 1e6,
-                 plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
-                 plan.dp_size, plan.num_slots, plan.token_budget,
-                 f", {plan.num_pages} pages x {plan.page_size} tokens"
-                 if plan.num_pages is not None else "")
-        # hand the engine the plan we just logged (num_slots is already a
-        # dp multiple) instead of re-deriving it from the budget
-        engine = Engine(params, cfg, max_len=max_len,
-                        num_slots=plan.num_slots,
-                        token_budget=(None if plan.num_pages is not None
-                                      else plan.token_budget),
-                        page_size=plan.page_size,
-                        num_pages=plan.num_pages, mesh=mesh)
-    else:
-        engine = Engine(params, cfg, max_len=max_len,
-                        num_slots=(args.slots or min(args.batch, 8)),
-                        token_budget=args.token_budget or None,
-                        page_size=page_size, mesh=mesh)
+    engine = build_engine(args, cfg, params, max_len, mesh)
     log.info("engine: %d slots, %s, cache %.2f MB%s",
              engine.num_slots,
              (f"{engine.num_pages} pages x {engine.page_size} tokens"
@@ -158,28 +429,13 @@ def main():
              engine.cache.nbytes() / 1e6,
              " (sharded over the mesh)" if mesh is not None else "")
 
-    outputs = engine.run(requests)
-    st = engine.stats
-    total = sum(len(o.tokens) for o in outputs)
-    log.info("generated %d tokens over %d requests", total, len(outputs))
-    log.info("prefill: %d tokens in %d dispatches, %.1f tok/s",
-             st.prefill_tokens, st.prefill_dispatches, st.prefill_tps)
-    log.info("decode: %d tokens in %d steps, %.1f tok/s",
-             st.decode_tokens, st.decode_steps, st.decode_tps)
-    # durations are None for any stage a sequence never reached (e.g. a
-    # direct scheduler user draining early) — skip them, never zero-fill
-    lat = [o.latency for o in outputs if o.latency is not None]
-    ttft = [o.time_to_first_token for o in outputs
-            if o.time_to_first_token is not None]
-    if lat and ttft:
-        log.info("latency s: mean %.3f p50 %.3f max %.3f | ttft mean %.3f",
-                 float(np.mean(lat)), float(np.median(lat)),
-                 float(np.max(lat)), float(np.mean(ttft)))
-    else:
-        log.info("latency: %d/%d sequences finished with timestamps",
-                 len(lat), len(outputs))
-    log.info("sample %s: %s", outputs[0].request_id,
-             list(outputs[0].tokens)[:12])
+    if args.http is not None:
+        try:
+            asyncio.run(http_serve(engine, args.host, args.http))
+        except KeyboardInterrupt:
+            log.info("shutting down")
+        return
+    run_batch(args, engine, cfg)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Continuous-batching serving: request lifecycle, scheduler, slot cache,
-budget planning, and the engine that ties them to the model stack."""
+budget planning, the step-driven engine that ties them to the model stack,
+and the asyncio streaming front over it."""
+from repro.serving.async_engine import AsyncEngine
 from repro.serving.budget import (
     EnginePlan,
     cache_bytes_per_token,
@@ -10,6 +12,7 @@ from repro.serving.budget import (
 )
 from repro.serving.cache import PageAllocator, PagedSlotCache, SlotCache
 from repro.serving.engine import Engine, EngineStats
+from repro.serving.events import StepEvent, TokenDelta
 from repro.serving.reference import token_by_token_greedy
 from repro.serving.request import (
     FinishReason,
@@ -19,10 +22,12 @@ from repro.serving.request import (
     Sequence,
     SequenceState,
     make_requests,
+    percentile,
 )
 from repro.serving.scheduler import Scheduler
 
 __all__ = [
+    "AsyncEngine",
     "Engine",
     "EnginePlan",
     "EngineStats",
@@ -36,9 +41,12 @@ __all__ = [
     "Sequence",
     "SequenceState",
     "SlotCache",
+    "StepEvent",
+    "TokenDelta",
     "cache_bytes_per_token",
     "make_requests",
     "param_bytes",
+    "percentile",
     "plan_engine",
     "plan_engine_report",
     "slot_state_bytes",

@@ -1,0 +1,226 @@
+"""Asyncio streaming front over the step-driven :class:`Engine`.
+
+The engine itself is synchronous and single-threaded: ``submit``/``step``/
+``abort`` mutate the scheduler between compiled dispatches.  AsyncEngine
+puts that loop on a background thread and gives asyncio callers a
+streaming view:
+
+  * ``await submit(request)`` -> an ``AsyncIterator[TokenDelta]`` yielding
+    the request's deltas as the step loop produces them; the iterator ends
+    with (and includes) the terminal delta carrying ``finish_reason``.
+  * ``await generate(request)`` -> the whole :class:`RequestOutput` once
+    the request retires (convenience over the same stream).
+  * ``await abort(request_id)`` -> cancel between steps; the stream, if
+    open, receives the terminal ABORTED delta.  Dropping a stream early
+    (client disconnect -> generator close) aborts the request the same
+    way, so its slot and pages are freed immediately.
+
+Fan-out: the step thread hands each batch of events to the event loop via
+``call_soon_threadsafe``; the loop routes every event into its request's
+private ``asyncio.Queue``.  All queue registration/routing happens ON the
+loop thread and a queue is registered before its request reaches the
+engine, so no delta can be dropped.  Queues are unbounded, which is the
+backpressure story: depth is bounded by the request's own ``max_new``
+(ints, not tensors), and a slow consumer therefore delays only itself —
+the step loop never blocks on a client (see DESIGN.md section 11).
+
+Engine access is serialized by one lock shared between the step thread and
+the submit/abort paths, so engine internals never see concurrency; a lock
+hold is at most one ``step()`` (one compiled dispatch).  Coroutines
+acquire it via ``asyncio.to_thread`` — a dispatch-length hold must stall
+only the submitting/aborting caller, never the event loop (which is busy
+streaming every OTHER connection's deltas).
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import AsyncIterator
+
+from repro.serving.engine import Engine
+from repro.serving.events import TokenDelta
+from repro.serving.request import Request, RequestOutput, Sequence
+
+# How long the idle step thread dozes before re-checking for work; submits
+# set the wake event, so this only bounds shutdown latency.
+_IDLE_WAIT_S = 0.05
+
+
+class AsyncEngine:
+    """Own a background step loop over ``engine`` and stream its events.
+
+    Use as an async context manager (``async with AsyncEngine(engine)``)
+    or call :meth:`start` / :meth:`close` explicitly from a running loop.
+    One AsyncEngine binds to ONE event loop (the one running at start).
+    """
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self._lock = threading.Lock()    # serializes every engine touch
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._queues: dict[str, asyncio.Queue] = {}   # loop-thread only
+        self._seqs: dict[str, Sequence] = {}
+        self._crashed: BaseException | None = None
+
+    # ---------------------------------------------------------- lifecycle --
+    def start(self) -> "AsyncEngine":
+        if self._thread is not None:
+            raise RuntimeError("AsyncEngine already started")
+        self._stop.clear()  # start() after close() must actually restart
+        self._loop = asyncio.get_running_loop()
+        self._thread = threading.Thread(
+            target=self._step_loop, name="engine-step-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the step thread.  Requests still in flight stop making
+        progress; abort them first if their slots/pages must be freed."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    async def __aenter__(self) -> "AsyncEngine":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------- step loop --
+    def _step_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                has_work = self.engine.scheduler.has_work
+                if has_work:
+                    try:
+                        events = self.engine.step()
+                    except BaseException as e:  # surface, don't spin
+                        self._crashed = e
+                        self._loop.call_soon_threadsafe(self._fan_out_crash, e)
+                        return
+                else:
+                    events = []
+            if events:
+                self._loop.call_soon_threadsafe(self._fan_out, list(events))
+            if not has_work:
+                self._wake.wait(_IDLE_WAIT_S)
+                self._wake.clear()
+
+    def _fan_out(self, events: list[TokenDelta]) -> None:
+        # runs on the event loop thread; queues were registered there too
+        for ev in events:
+            q = self._queues.get(ev.request_id)
+            if q is not None:
+                q.put_nowait(ev)
+
+    def _fan_out_crash(self, exc: BaseException) -> None:
+        for q in self._queues.values():
+            q.put_nowait(exc)
+
+    def _check_alive(self) -> None:
+        if self._crashed is not None:
+            raise RuntimeError("engine step loop crashed") from self._crashed
+        if self._thread is None:
+            raise RuntimeError("AsyncEngine is not started")
+
+    # ------------------------------------------------------------- client --
+    async def submit(self, request: Request) -> AsyncIterator[TokenDelta]:
+        """Enqueue ``request`` and return its delta stream.  The request is
+        live once this coroutine returns — consuming the iterator is how
+        you receive tokens, and closing it early aborts the request."""
+        self._check_alive()
+        # a second submit under a streaming id must not clobber the live
+        # stream's queue (the engine would reject it AFTER the overwrite,
+        # orphaning the original consumer forever)
+        if request.request_id in self._queues:
+            raise ValueError(f"{request.request_id}: already streaming")
+        q: asyncio.Queue = asyncio.Queue()
+        # register the queue BEFORE the engine can emit for this request:
+        # fan-out callbacks run on this same loop thread, so they cannot
+        # interleave with this synchronous segment
+        self._queues[request.request_id] = q
+        try:
+            # the lock may be held by the step thread for a full compiled
+            # dispatch — take it off-loop so other connections keep moving
+            self._seqs[request.request_id] = await asyncio.to_thread(
+                self._locked_submit, request)
+        except BaseException:
+            self._queues.pop(request.request_id, None)
+            raise
+        self._wake.set()
+        return self._stream(request.request_id, q)
+
+    def _locked_submit(self, request: Request) -> Sequence:
+        with self._lock:
+            return self.engine.submit(request)
+
+    def _locked_abort(self, request_id: str) -> TokenDelta | None:
+        """Abort under the lock; None (not KeyError) when the request
+        already retired — the races where that happens are benign."""
+        with self._lock:
+            try:
+                return self.engine.abort(request_id)
+            except KeyError:
+                return None
+
+    async def _stream(self, request_id: str,
+                      q: asyncio.Queue) -> AsyncIterator[TokenDelta]:
+        finished = False
+        try:
+            while True:
+                ev = await q.get()
+                if isinstance(ev, BaseException):
+                    raise RuntimeError("engine step loop crashed") from ev
+                yield ev
+                if ev.finish_reason is not None:
+                    finished = True
+                    return
+        finally:
+            self._queues.pop(request_id, None)
+            self._seqs.pop(request_id, None)
+            if not finished:
+                # consumer went away mid-stream: free the slot/pages now
+                # (already-retired races are benign -> None, off-loop lock)
+                await asyncio.to_thread(self._locked_abort, request_id)
+
+    def sequence(self, request_id: str) -> Sequence | None:
+        """The live Sequence behind an open stream (None once it closed);
+        its ``to_output()`` is how the HTTP front records final stats."""
+        return self._seqs.get(request_id)
+
+    async def with_engine(self, fn):
+        """Run ``fn(engine)`` under the engine lock, off-loop: the one
+        sanctioned way to read multi-field engine state (e.g. /stats)
+        without racing a step in progress."""
+        return await asyncio.to_thread(self._locked_call, fn)
+
+    def _locked_call(self, fn):
+        with self._lock:
+            return fn(self.engine)
+
+    async def generate(self, request: Request) -> RequestOutput:
+        """Serve ``request`` to completion and return its output (the
+        non-streaming convenience; same path, deltas just aren't exposed)."""
+        seq: Sequence | None = None
+        stream = await self.submit(request)
+        seq = self._seqs[request.request_id]
+        async for _ in stream:
+            pass
+        return seq.to_output()
+
+    async def abort(self, request_id: str) -> TokenDelta:
+        """Cancel a live request; its stream (if any) receives the terminal
+        ABORTED delta.  Raises KeyError for unknown/finished requests."""
+        self._check_alive()
+        ev = await asyncio.to_thread(self._locked_abort, request_id)
+        if ev is None:
+            raise KeyError(f"{request_id}: not a live request")
+        q = self._queues.get(request_id)
+        if q is not None:
+            q.put_nowait(ev)
+        return ev

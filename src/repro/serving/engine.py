@@ -1,13 +1,25 @@
 """Continuous-batching serving engine: batched prefill + fixed-slot decode.
 
 One ``Engine`` owns the compiled step functions, a :class:`SlotCache`, and
-a :class:`Scheduler`.  ``run(requests)`` drives the lifecycle:
+a :class:`Scheduler`.  The core of the API is the re-entrant step loop:
 
-  admit (FIFO, budget-checked) -> batched prefill (ONE ``forward`` dispatch
-  per prompt-length group; one ragged padded dispatch for pure-attention
-  stacks) -> insert caches into free slots -> step ALL slots through
-  ``decode_step`` each iteration -> retire finished sequences and reuse
-  their slots for the next admissions.
+  ``submit(request)``  enqueue a request (validated, FIFO) at ANY time
+  ``step()``           ONE admit-or-decode iteration: either admit from
+                       the queue head + batched prefill (ONE ``forward``
+                       dispatch per prompt-length group; one ragged padded
+                       dispatch for pure-attention stacks, caches inserted
+                       into free slots), or step ALL active slots through
+                       ``decode_step``; returns the :class:`StepEvent`
+                       deltas (new token per sequence + retirements)
+  ``abort(request_id)``cancel a request between steps: a WAITING sequence
+                       is dequeued, a RUNNING one releases its slot and
+                       frees its pages immediately — other slots untouched
+
+``run(requests)`` is the closed-batch compatibility wrapper — submit all,
+step until drained — and is token-for-token identical to the pre-step-loop
+engine: every parity suite pins the refactor through it.  The async
+streaming front (:class:`repro.serving.async_engine.AsyncEngine`) drives
+the same three methods from a background thread.
 
 The decode step is compiled once for ``(num_slots, 1)`` and never
 recompiled as requests come and go — idle slots ride along and their rows
@@ -49,7 +61,9 @@ from repro.models import decode_step, prefill
 from repro.parallel import context as pctx
 from repro.serving.budget import plan_engine_report
 from repro.serving.cache import PagedSlotCache, SlotCache
-from repro.serving.request import Request, RequestOutput, Sequence
+from repro.serving.events import StepEvent
+from repro.serving.request import (Request, RequestOutput, Sequence,
+                                   SequenceState)
 from repro.serving.scheduler import Scheduler
 
 
@@ -264,6 +278,9 @@ class Engine:
         self.stats = EngineStats()
         self._attn_only = all(m == "attn" for m, _ in cfg.pattern)
         self._sample = _make_sampler(cfg, self.max_top_k)
+        # request_id -> Sequence for everything submitted and not yet
+        # retired/aborted: what ``abort`` looks up between steps
+        self._live: dict[str, Sequence] = {}
 
         # per-slot host state fed to the jitted step each iteration; the
         # scheduler and these arrays live on the host, replicated from the
@@ -325,35 +342,116 @@ class Engine:
             self.mesh, guard_spec(spec, x.shape, self.mesh)))
 
     # ---------------------------------------------------------- lifecycle --
-    def run(self, requests: list[Request]) -> list[RequestOutput]:
-        """Serve ``requests`` to completion; returns outputs in request order."""
-        seqs = [Sequence(r) for r in requests]
-        # validate the whole batch BEFORE enqueuing anything: a mid-add_all
-        # rejection would leave ghost sequences in the queue that eat slots
-        # on the next run and whose outputs nobody collects.  Feasibility
-        # (max_len capacity + token/page budget) is the scheduler's check —
-        # it owns those bounds so direct users get the same protection.
-        for s in seqs:
-            self.scheduler.validate(s)
-            tk = s.request.sampling.top_k
-            if self.max_top_k < tk < self.cfg.vocab_size:
-                raise ValueError(
-                    f"{s.request_id}: top_k = {tk} exceeds the engine's "
-                    f"max_top_k = {self.max_top_k}; construct the Engine "
-                    "with a larger max_top_k")
-        self.scheduler.add_all(seqs)
-        while self.scheduler.has_work:
-            admitted = self.scheduler.admit()
-            if admitted:
-                self._prefill_admitted(admitted)
-                self._retire_finished()
-                continue  # retiring may have unblocked the queue head
-            active = list(self.scheduler.active.values())
-            if not active:
+    def validate(self, seq: Sequence) -> None:
+        """Raise if ``seq`` can never be served: scheduler feasibility
+        (max_len capacity + token/page budget — the scheduler owns those
+        bounds) plus the engine's compiled sampler limits (top_k width,
+        stop-token ids inside the vocabulary)."""
+        self.scheduler.validate(seq)
+        tk = seq.request.sampling.top_k
+        if self.max_top_k < tk < self.cfg.vocab_size:
+            raise ValueError(
+                f"{seq.request_id}: top_k = {tk} exceeds the engine's "
+                f"max_top_k = {self.max_top_k}; construct the Engine "
+                "with a larger max_top_k")
+        # id validation has ONE home, here: out-of-range prompt ids would
+        # otherwise be silently clamped by the jitted embedding gather and
+        # serve garbage instead of erroring (untrusted HTTP clients included)
+        v = self.cfg.vocab_size
+        bad = [t for t in seq.request.prompt if not 0 <= t < v]
+        if bad:
+            raise ValueError(
+                f"{seq.request_id}: prompt ids {bad[:8]} outside the "
+                f"vocabulary [0, {v})")
+        bad = [t for t in seq.request.sampling.stop_tokens
+               if not 0 <= t < v]
+        if bad:
+            raise ValueError(
+                f"{seq.request_id}: stop_tokens {bad} outside the "
+                f"vocabulary [0, {v})")
+
+    def submit(self, request: Request) -> Sequence:
+        """Enqueue one request for the step loop (legal at any time, before
+        or between ``step()`` calls).  Validates up front — an infeasible
+        request raises here and nothing is enqueued.  Returns the live
+        :class:`Sequence` (its ``to_output()`` is the final result once a
+        step retires it)."""
+        if request.request_id in self._live:
+            raise ValueError(f"{request.request_id}: already submitted")
+        seq = Sequence(request)
+        self.validate(seq)
+        self.scheduler.add(seq)
+        self._live[request.request_id] = seq
+        return seq
+
+    def abort(self, request_id: str) -> StepEvent:
+        """Cancel a live request between steps.  A WAITING sequence is
+        dequeued; a RUNNING one releases its slot and (paged) frees its
+        pages immediately — no other slot's state is touched, and the next
+        ``step()`` can admit into the freed capacity.  Returns the terminal
+        (tokenless) event; ``to_output()`` keeps the partial tokens."""
+        seq = self._live.pop(request_id, None)
+        if seq is None:
+            raise KeyError(f"{request_id}: not a live request")
+        if seq.slot is None:  # WAITING: nothing reserved yet
+            self.scheduler.remove_waiting(seq)
+            seq.mark_aborted()
+            seq.state = SequenceState.FINISHED
+            seq.t_finished = seq.now()
+        else:  # RUNNING: release the slot, free pages, clear host state
+            seq.mark_aborted()
+            self.cache.evict([seq.slot])
+            slot = seq.slot
+            self.scheduler.retire(seq)
+            self._clear_slot(slot)
+        return StepEvent(request_id, token=None, index=None,
+                         finish_reason=seq.finish_reason)
+
+    def step(self) -> list[StepEvent]:
+        """ONE admit-or-decode iteration; re-entrant — call until the
+        scheduler drains (or forever, interleaving ``submit``/``abort``
+        between calls).  If the queue head can be admitted this step is a
+        prefill (first token per admitted sequence); otherwise all active
+        slots take one decode step.  Finished sequences are retired before
+        returning, so a freed slot is admissible by the NEXT call — one
+        admission or one decode dispatch per call, never both.  Returns one
+        event per sequence that progressed (empty when idle)."""
+        if not self.scheduler.has_work:
+            return []
+        admitted = self.scheduler.admit()
+        if admitted:
+            self._prefill_admitted(admitted)
+            progressed = admitted
+        else:
+            progressed = list(self.scheduler.active.values())
+            if not progressed:
                 raise RuntimeError(
                     "scheduler stalled: waiting requests but nothing active")
-            self._decode_once(active)
-            self._retire_finished()
+            self._decode_once(progressed)
+        events = [StepEvent(s.request_id, s.tokens[-1], len(s.tokens) - 1,
+                            s.finish_reason)
+                  for s in progressed]
+        self._retire_finished()
+        return events
+
+    def run(self, requests: list[Request]) -> list[RequestOutput]:
+        """Closed-batch compatibility wrapper: submit all, step until
+        drained; returns outputs in request order.  The whole batch is
+        validated BEFORE anything is enqueued — a mid-batch rejection must
+        not leave ghost sequences in the queue that eat slots on the next
+        run and whose outputs nobody collects (``submit`` validates per
+        request, which is the same guarantee for a single enqueue)."""
+        seqs = [Sequence(r) for r in requests]
+        ids = [s.request_id for s in seqs]
+        if len(set(ids)) != len(ids) or any(i in self._live for i in ids):
+            raise ValueError("duplicate request_id in batch or already live")
+        for s in seqs:
+            self.validate(s)
+        for s in seqs:
+            self.scheduler.add(s)
+            self._live[s.request_id] = s
+        while self.scheduler.has_work:
+            self.step()
         return [s.to_output() for s in seqs]
 
     # ------------------------------------------------------------ prefill --
@@ -457,6 +555,15 @@ class Engine:
             self._pos[slot] += 1
 
     # ------------------------------------------------------------- retire --
+    def _clear_slot(self, slot: int) -> None:
+        """Reset one slot's host-side sampling state after its sequence
+        left (retired or aborted); the cache row was already evicted."""
+        self._tok[slot, 0] = 0
+        self._pos[slot] = 0
+        self._temps[slot] = 0.0
+        self._topk[slot] = 0
+        self._seeds[slot] = 0
+
     def _retire_finished(self) -> None:
         done = [s for s in self.scheduler.active.values() if s.done]
         if not done:
@@ -465,11 +572,8 @@ class Engine:
         for s in done:
             slot = s.slot
             self.scheduler.retire(s)
-            self._tok[slot, 0] = 0
-            self._pos[slot] = 0
-            self._temps[slot] = 0.0
-            self._topk[slot] = 0
-            self._seeds[slot] = 0
+            self._clear_slot(slot)
+            self._live.pop(s.request_id, None)
 
     # -------------------------------------------------------------- views --
     def decode_compile_count(self) -> int | None:

@@ -1,0 +1,51 @@
+"""Step events: the per-sequence deltas the engine's step loop emits.
+
+``Engine.step()`` runs ONE admit-or-decode iteration and returns a list of
+:class:`StepEvent` — one per sequence that made progress this step.  An
+event carries the newly sampled token (and its 0-based index into the
+request's generated tokens) and, when this step retired the sequence, the
+``finish_reason``.  An abort produces a tokenless event (``token is
+None``) so consumers always observe a terminal event exactly once.
+
+:class:`TokenDelta` is the client-facing name for the same record: the
+AsyncEngine fans step events out to per-request queues and streams them to
+callers unchanged, so "the concatenation of a request's TokenDeltas" and
+"the tokens ``Engine.run`` would have returned" are the same sequence by
+construction (tested token-for-token in tests/test_serving_streaming.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.request import FinishReason
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent:
+    """One sequence's progress in one engine step.
+
+    token / index are ``None`` only for tokenless retirements (abort);
+    ``finish_reason`` is ``None`` while the sequence keeps running and set
+    exactly once, on the event that retires it.
+    """
+
+    request_id: str
+    token: int | None
+    index: int | None
+    finish_reason: FinishReason | None = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_reason is not None
+
+    def to_dict(self) -> dict:
+        """JSON-ready form (the HTTP front's wire format, one per line)."""
+        d = {"request_id": self.request_id, "token": self.token,
+             "index": self.index}
+        if self.finish_reason is not None:
+            d["finish_reason"] = self.finish_reason.value
+        return d
+
+
+# What a streaming client consumes: identical record, client-facing name.
+TokenDelta = StepEvent

@@ -16,23 +16,33 @@ from typing import Sequence as TypingSequence
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """How to turn logits into a token.
+    """How to turn logits into a token (and when to stop).
 
     temperature: 0 = greedy argmax; > 0 = softmax sampling at that
     temperature.  top_k: 0 = full vocabulary; > 0 restricts sampling to the
     k highest-logit tokens.  seed: per-request PRNG seed (decode steps fold
     in the position, so regenerating a request is deterministic).
+    stop_tokens: request-level stop set — sampling any of these ids ends the
+    sequence with ``FinishReason.STOP`` (the engine's ``eos_id`` still
+    applies on top and reports ``EOS``); ids are validated against the
+    model's vocabulary when the request is submitted to an engine.
     """
 
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    stop_tokens: tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        object.__setattr__(self, "stop_tokens",
+                           tuple(int(t) for t in self.stop_tokens))
+        if any(t < 0 for t in self.stop_tokens):
+            raise ValueError(
+                f"stop_tokens must be non-negative ids, got {self.stop_tokens}")
 
 
 GREEDY = SamplingParams()
@@ -62,8 +72,10 @@ class SequenceState(enum.Enum):
 
 
 class FinishReason(enum.Enum):
-    LENGTH = "length"  # hit max_new
-    EOS = "eos"        # sampled the engine's eos token
+    LENGTH = "length"    # hit max_new
+    EOS = "eos"          # sampled the engine's eos token
+    STOP = "stop"        # sampled one of the request's stop_tokens
+    ABORTED = "aborted"  # cancelled by the client / Engine.abort
 
 
 class Sequence:
@@ -80,6 +92,9 @@ class Sequence:
         self.t_admitted: float | None = None
         self.t_first_token: float | None = None
         self.t_finished: float | None = None
+        # one timestamp per generated token: t_tokens[0] is the first-token
+        # time and consecutive differences are the inter-token latencies
+        self.t_tokens: list[float] = []
 
     def now(self) -> float:
         return self._clock()
@@ -105,13 +120,24 @@ class Sequence:
 
     # ---------------------------------------------------------- updates --
     def append_token(self, token: int, eos_id: int | None = None) -> None:
+        now = self._clock()
         if self.t_first_token is None:
-            self.t_first_token = self._clock()
+            self.t_first_token = now
+        self.t_tokens.append(now)
         self.tokens.append(int(token))
+        # finish checks, strongest reason first: the engine's eos is implied
+        # on top of any request-level stop set
         if eos_id is not None and int(token) == eos_id:
             self.finish_reason = FinishReason.EOS
+        elif int(token) in self.request.sampling.stop_tokens:
+            self.finish_reason = FinishReason.STOP
         elif len(self.tokens) >= self.request.max_new:
             self.finish_reason = FinishReason.LENGTH
+
+    def mark_aborted(self) -> None:
+        """Terminal state for a cancelled sequence; tokens generated so far
+        are kept so ``to_output`` reports the partial result."""
+        self.finish_reason = FinishReason.ABORTED
 
     def _since_arrival(self, t: float | None) -> float | None:
         """Duration from arrival to a lifecycle stage, or None if the
@@ -119,7 +145,14 @@ class Sequence:
         emit large negative durations that poison latency aggregates."""
         return None if t is None else t - self.t_arrival
 
+    @property
+    def inter_token_latencies(self) -> list[float]:
+        """Gaps between consecutive token timestamps (empty with < 2
+        tokens — a single token has no inter-token interval)."""
+        return [b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])]
+
     def to_output(self) -> "RequestOutput":
+        itl = self.inter_token_latencies
         return RequestOutput(
             request_id=self.request_id,
             prompt=self.request.prompt,
@@ -128,14 +161,32 @@ class Sequence:
             queue_time=self._since_arrival(self.t_admitted),
             time_to_first_token=self._since_arrival(self.t_first_token),
             latency=self._since_arrival(self.t_finished),
+            itl_mean=sum(itl) / len(itl) if itl else None,
+            itl_p99=percentile(itl, 99.0) if itl else None,
         )
+
+
+def percentile(values: TypingSequence[float], q: float) -> float:
+    """Linear-interpolated percentile over a small host-side sample (the
+    per-request ITL lists are tiny; pulling in numpy here would make the
+    request module device-adjacent for no reason)."""
+    if not values:
+        raise ValueError("percentile of an empty sample")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
 
 @dataclasses.dataclass(frozen=True)
 class RequestOutput:
     """Finished request: generated tokens + latency breakdown (seconds).
     A duration is ``None`` when the sequence never reached that lifecycle
-    stage (e.g. rejected or still waiting); aggregators must skip None."""
+    stage (e.g. rejected, still waiting, or — for the inter-token fields —
+    fewer than two tokens generated); aggregators must skip None."""
 
     request_id: str
     prompt: tuple[int, ...]
@@ -144,6 +195,8 @@ class RequestOutput:
     queue_time: float | None
     time_to_first_token: float | None
     latency: float | None
+    itl_mean: float | None = None
+    itl_p99: float | None = None
 
 
 def make_requests(prompts: TypingSequence[TypingSequence[int]], max_new: int,

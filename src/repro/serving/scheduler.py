@@ -21,8 +21,13 @@ The budget is counted in one of two units:
 
 ``add`` rejects up front anything that could NEVER be admitted — both the
 budget bound and the per-sequence capacity bound (``max_len``): a direct
-scheduler user (the coming async path) must not be able to enqueue a head
-that deadlocks the FIFO queue.
+scheduler user must not be able to enqueue a head that deadlocks the
+FIFO queue.  ``add`` is legal at ANY point in the engine's life, not just
+before a run: admission happens one ``admit()`` call at a time under the
+same slot/budget bounds, so the step-driven engine calls ``add`` for
+requests arriving mid-flight and the next step admits them as capacity
+frees up — this is what ``Engine.submit`` / the AsyncEngine build on.
+``remove_waiting`` is the inverse for aborts that land before admission.
 
 Invariants (property-tested in tests/test_serving_scheduler.py):
   * no slot is ever assigned to two live sequences,
@@ -124,6 +129,12 @@ class Scheduler:
     def add_all(self, seqs: Iterable[Sequence]) -> None:
         for s in seqs:
             self.add(s)
+
+    def remove_waiting(self, seq: Sequence) -> None:
+        """Drop a still-WAITING sequence from the queue (abort before
+        admission).  Nothing was reserved for it yet, so no accounting
+        changes; raises ValueError if it is not in the queue."""
+        self.waiting.remove(seq)  # ValueError if absent
 
     # --------------------------------------------------------- admission --
     def admit(self) -> list[Sequence]:

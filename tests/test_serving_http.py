@@ -1,0 +1,235 @@
+"""HTTP front round-trip tests: a live ``http_serve`` server on an
+ephemeral port, driven with raw sockets (the wire format is
+newline-delimited JSON over ``Connection: close`` — any language's plain
+socket client can consume it, which is the point of testing it raw).
+
+Covers: token-for-token parity of the streamed NDJSON chunks against a
+local golden ``Engine.run``, two staggered requests interleaving their
+chunks mid-stream, ``GET /stats`` aggregates, and 400/404 error paths.
+"""
+import asyncio
+import json
+import queue
+import socket
+import threading
+import time
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.launch.serve import http_serve, request_from_json  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving import Engine, Request, SamplingParams  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+ARCH = "qwen3-4b"
+PROMPT_LEN, MAX_NEW = 6, 5
+MAX_LEN = PROMPT_LEN + MAX_NEW
+
+
+# ------------------------------------------------------------ host helpers
+
+def test_request_from_json_parses_and_rejects():
+    req = request_from_json(
+        {"prompt": [1, 2], "max_new": 3, "temperature": 0.5, "top_k": 4,
+         "seed": 9, "stop_tokens": [7]}, "http-0")
+    assert req.prompt == (1, 2) and req.max_new == 3
+    assert req.sampling == SamplingParams(0.5, 4, 9, (7,))
+    for bad in [None, [], {"max_new": 3}, {"prompt": []},
+                {"prompt": ["x"]}, {"prompt": [1], "nope": 1}]:
+        with pytest.raises(ValueError):
+            request_from_json(bad, "http-0")
+
+
+# --------------------------------------------------------------- live wire
+
+class _LiveServer:
+    """http_serve on its own event loop thread; .port once bound."""
+
+    def __init__(self, engine):
+        self._ready: queue.Queue = queue.Queue()
+        self._loop = asyncio.new_event_loop()
+        self._task = None
+        self._thread = threading.Thread(target=self._run, args=(engine,),
+                                        daemon=True)
+        self._thread.start()
+        self.port = self._ready.get(timeout=120)
+
+    def _run(self, engine):
+        asyncio.set_event_loop(self._loop)
+        self._task = self._loop.create_task(
+            http_serve(engine, "127.0.0.1", 0, ready=self._ready.put))
+        try:
+            self._loop.run_until_complete(self._task)
+        except asyncio.CancelledError:
+            pass
+        finally:
+            self._loop.close()
+
+    def stop(self):
+        self._loop.call_soon_threadsafe(self._task.cancel)
+        self._thread.join(timeout=30)
+
+
+def _request(port: int, payload: bytes, method=b"POST",
+             path=b"/generate", record=None, first_chunk=None):
+    """One raw HTTP exchange; returns (status_line, [parsed body lines]).
+    ``record`` (a list) gets (monotonic_time, parsed_line) per chunk AS IT
+    ARRIVES — the interleaving assertion needs arrival order, not content.
+    ``first_chunk`` (an Event) is set when the first body line lands, so a
+    test can stagger a second request to provably mid-stream timing."""
+    with socket.create_connection(("127.0.0.1", port), timeout=120) as s:
+        head = b"%s %s HTTP/1.1\r\nHost: t\r\nContent-Length: %d\r\n\r\n" % (
+            method, path, len(payload))
+        s.sendall(head + payload)
+        f = s.makefile("rb")
+        status = f.readline().decode().strip()
+        while f.readline() not in (b"\r\n", b"\n", b""):
+            pass  # drain headers
+        lines = []
+        for raw in f:  # server closes the connection after the last line
+            raw = raw.strip()
+            if not raw:
+                continue
+            parsed = json.loads(raw)
+            lines.append(parsed)
+            if record is not None:
+                record.append((time.monotonic(), parsed))
+            if first_chunk is not None:
+                first_chunk.set()
+    return status, lines
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(server, engine params context, golden outputs): one server for the
+    whole module — engine state drains between tests, and reusing it keeps
+    the compile cost paid once."""
+    cfg = reduced(get_config(ARCH))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                             size=PROMPT_LEN)]
+               for _ in range(3)]
+    golden_engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2,
+                           page_size=4)
+    golden = golden_engine.run(
+        [Request(f"g{i}", tuple(p), MAX_NEW) for i, p in enumerate(prompts)])
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=4)
+    server = _LiveServer(engine)
+    yield server, engine, prompts, golden
+    server.stop()
+
+
+def test_http_generate_round_trip_matches_engine_run(served):
+    server, _, prompts, golden = served
+    status, lines = _request(server.port, json.dumps(
+        {"prompt": prompts[0], "max_new": MAX_NEW}).encode())
+    assert status.startswith("HTTP/1.1 200")
+    assert tuple(d["token"] for d in lines) == golden[0].tokens
+    assert [d["index"] for d in lines] == list(range(len(lines)))
+    assert "finish_reason" in lines[-1]
+    assert all("finish_reason" not in d for d in lines[:-1])
+    assert lines[-1]["finish_reason"] == golden[0].finish_reason.value
+
+
+def test_http_staggered_requests_interleave(served):
+    """A second request POSTed while the first is mid-stream must emit
+    chunks BEFORE the first finishes — open admission over one engine."""
+    server, _, prompts, golden = served
+    record: list = []
+    results: dict = {}
+    long_started = threading.Event()
+
+    def post(key, payload, wait_for=None):
+        if wait_for is not None:
+            wait_for.wait(timeout=120)
+        results[key] = _request(
+            server.port, json.dumps(payload).encode(), record=record,
+            first_chunk=long_started if key == "long" else None)
+
+    # the short request is POSTed the moment the long one's FIRST chunk
+    # arrives — provably mid-stream, no sleep-based timing guesses.  The
+    # long request decodes MAX_LEN - 3 tokens (the most this engine can
+    # hold) so the short one has many decode steps of runway; its prompt
+    # reuses the warmed prefill bucket, so its first token needs no fresh
+    # compile and lands while the long one still decodes.
+    long_new = MAX_LEN - 3
+    t1 = threading.Thread(target=post, args=(
+        "long", {"prompt": prompts[1][:3], "max_new": long_new}))
+    t2 = threading.Thread(target=post, args=(
+        "short", {"prompt": prompts[2], "max_new": 2}, long_started))
+    t1.start(), t2.start()
+    t1.join(120), t2.join(120)
+    by_rid: dict = {}
+    for ts, d in record:
+        by_rid.setdefault(d["request_id"], []).append(ts)
+    rids = sorted(by_rid)  # http-N ids are monotonic: long first
+    assert len(rids) == 2
+    long_rid, short_rid = rids
+    assert len(by_rid[long_rid]) == long_new and len(by_rid[short_rid]) == 2
+    # interleaved: the late request's first chunk lands before the long
+    # request's last chunk — no closed-batch boundary between them
+    assert min(by_rid[short_rid]) < max(by_rid[long_rid]), (
+        "late request waited for the earlier one to finish")
+
+
+def test_http_stats_reports_counters_and_latency_aggregates(served):
+    server, engine, prompts, _ = served
+    status, lines = _request(server.port, b"", method=b"GET", path=b"/stats")
+    assert status.startswith("HTTP/1.1 200")
+    stats = lines[0]
+    assert stats["engine"]["decode_compile_count"] == 1
+    assert stats["engine"]["prefill_tokens"] > 0
+    assert stats["scheduler"]["num_slots"] == engine.num_slots
+    assert stats["scheduler"]["active"] == 0  # drained between tests
+    assert stats["completed"] >= 3
+    assert stats["ttft_s"]["mean"] > 0
+    assert stats["ttft_s"]["p99"] >= stats["ttft_s"]["p50"]
+    assert stats["itl_s"]["mean"] > 0  # every request generated >= 2 tokens
+
+
+def test_http_bad_request_and_unknown_route(served):
+    server, *_ = served
+    status, lines = _request(server.port, b'{"max_new": 2}')
+    assert status.startswith("HTTP/1.1 400")
+    assert "prompt" in lines[0]["error"]
+    status, lines = _request(server.port, b"{}", method=b"GET",
+                             path=b"/nope")
+    assert status.startswith("HTTP/1.1 404")
+    # infeasible request: validation error surfaces as 400, nothing queued
+    status, lines = _request(server.port, json.dumps(
+        {"prompt": [1] * 4, "max_new": 10 * MAX_LEN}).encode())
+    assert status.startswith("HTTP/1.1 400")
+    assert "error" in lines[0]
+    # out-of-vocab prompt ids: rejected, not clamped into garbage output
+    status, lines = _request(server.port, json.dumps(
+        {"prompt": [10 ** 9], "max_new": 2}).encode())
+    assert status.startswith("HTTP/1.1 400")
+    assert "prompt ids" in lines[0]["error"]
+    # wrong-TYPED fields must 400 too, not kill the connection responseless
+    for body in ({"prompt": [1], "temperature": [0.5]},
+                 {"prompt": [1], "max_new": None},
+                 {"prompt": [1], "stop_tokens": 5}):
+        status, lines = _request(server.port, json.dumps(body).encode())
+        assert status.startswith("HTTP/1.1 400"), body
+        assert "error" in lines[0]
+
+
+@pytest.mark.parametrize("value", [b"abc", b"-5"])
+def test_http_malformed_content_length_gets_400(served, value):
+    server, *_ = served
+    with socket.create_connection(("127.0.0.1", server.port),
+                                  timeout=60) as s:
+        s.sendall(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                  b"Content-Length: " + value + b"\r\n\r\n")
+        raw = b""
+        while chunk := s.recv(65536):
+            raw += chunk
+    assert raw.startswith(b"HTTP/1.1 400")
+    assert b"Content-Length" in raw

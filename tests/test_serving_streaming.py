@@ -1,0 +1,544 @@
+"""Step-loop + streaming tests for the serving engine redesign.
+
+Host-level tests (fast, no jit): StepEvent schema, stop-token finish
+logic, inter-token latency math, scheduler mid-flight removal.
+
+Engine integration (slow marker):
+  * streaming parity — the concatenation of a request's TokenDeltas
+    (collected via submit/step or through the AsyncEngine) equals the
+    tokens ``Engine.run`` returns, token for token, for dense / butterfly
+    / mixed policies over both the fixed-slot and paged KV caches;
+  * mid-flight arrival property — requests submitted while the engine is
+    decoding are admitted strict-FIFO, never starve, and never recompile
+    the decode step (hypothesis when available, seeded fallback always);
+  * abort — a RUNNING abort frees its slot and pages immediately without
+    touching other slots' tokens; a WAITING abort just dequeues.
+"""
+import asyncio
+import random
+
+import pytest
+
+from repro.serving.events import StepEvent, TokenDelta
+from repro.serving.request import (FinishReason, Request, SamplingParams,
+                                   Sequence, SequenceState, percentile)
+from repro.serving.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------- host level
+
+def test_step_event_schema_and_wire_format():
+    ev = StepEvent("r0", token=7, index=0)
+    assert not ev.finished
+    assert ev.to_dict() == {"request_id": "r0", "token": 7, "index": 0}
+    done = StepEvent("r0", token=9, index=3,
+                     finish_reason=FinishReason.LENGTH)
+    assert done.finished
+    assert done.to_dict()["finish_reason"] == "length"
+    # TokenDelta is the client-facing name for the same record
+    assert TokenDelta is StepEvent
+
+
+def test_sampling_params_normalize_and_reject_stop_tokens():
+    sp = SamplingParams(stop_tokens=[3, 5])
+    assert sp.stop_tokens == (3, 5)
+    with pytest.raises(ValueError, match="non-negative"):
+        SamplingParams(stop_tokens=(-1,))
+
+
+def _seq(prompt_len=3, max_new=8, clock=None, **sampling):
+    kw = {"clock": clock} if clock is not None else {}
+    return Sequence(Request("r0", tuple(range(1, prompt_len + 1)), max_new,
+                            sampling=SamplingParams(**sampling)), **kw)
+
+
+def test_stop_token_finishes_sequence_with_stop_reason():
+    s = _seq(stop_tokens=(42,))
+    s.append_token(7)
+    assert s.finish_reason is None
+    s.append_token(42)
+    assert s.finish_reason is FinishReason.STOP
+    assert s.tokens == [7, 42]  # the stop token itself is kept
+
+
+def test_engine_eos_still_implied_and_wins_over_stop_set():
+    s = _seq(stop_tokens=(42,))
+    s.append_token(42, eos_id=42)  # same id via both paths: EOS reports
+    assert s.finish_reason is FinishReason.EOS
+
+
+def test_length_finish_unchanged_without_stop_tokens():
+    s = _seq(max_new=2)
+    s.append_token(1)
+    s.append_token(2)
+    assert s.finish_reason is FinishReason.LENGTH
+
+
+def test_inter_token_latency_accounting_with_fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    s = _seq(max_new=4, clock=clock)
+    for dt, tok in [(1.0, 5), (2.0, 6), (4.0, 7), (1.0, 8)]:
+        t[0] += dt
+        s.append_token(tok)
+    # first token at t=1; gaps between the 4 tokens: 2, 4, 1
+    assert s.t_tokens == [1.0, 3.0, 7.0, 8.0]
+    assert s.inter_token_latencies == [2.0, 4.0, 1.0]
+    out = s.to_output()
+    assert out.itl_mean == pytest.approx(7.0 / 3)
+    assert out.itl_p99 == pytest.approx(percentile([2.0, 4.0, 1.0], 99))
+    assert out.itl_p99 <= 4.0
+
+
+def test_single_token_output_has_no_itl():
+    s = _seq(max_new=1)
+    s.append_token(5)
+    out = s.to_output()
+    assert out.itl_mean is None and out.itl_p99 is None
+
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile([7.0], 99) == 7.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+
+
+def test_aborted_sequence_reports_partial_tokens():
+    s = _seq(max_new=8)
+    s.append_token(3)
+    s.mark_aborted()
+    assert s.done
+    out = s.to_output()
+    assert out.finish_reason is FinishReason.ABORTED
+    assert out.tokens == (3,)
+
+
+def test_scheduler_remove_waiting():
+    sched = Scheduler(num_slots=1, token_budget=100, max_len=50)
+    a, b = _seq(), Sequence(Request("r1", (1, 2), 4))
+    sched.add(a)
+    sched.add(b)
+    assert sched.admit() == [a]
+    sched.remove_waiting(b)
+    assert not sched.waiting
+    assert sched.reserved_units == a.reserved_tokens  # b reserved nothing
+    with pytest.raises(ValueError):
+        sched.remove_waiting(b)  # not queued anymore
+
+
+# ------------------------------------------------------------- integration
+
+jax = pytest.importorskip("jax")
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.configs.base import recommended_policy  # noqa: E402
+from repro.core.policy import uniform_policy  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving import AsyncEngine, Engine  # noqa: E402
+
+ARCH = "qwen3-4b"  # pure-attention stack: rows are batch-independent
+PROMPT_LEN, MAX_NEW, BATCH = 7, 6, 4
+MAX_LEN = PROMPT_LEN + MAX_NEW
+PAGE = 4
+
+
+def _cfg(policy_name: str):
+    cfg = reduced(get_config(ARCH))
+    if policy_name == "butterfly":
+        cfg = cfg.with_fact(uniform_policy("butterfly", block_size=16))
+    elif policy_name == "mixed":
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+    else:
+        assert policy_name == "dense"
+    return cfg
+
+
+_SETUP_CACHE: dict = {}
+
+
+def _setup(policy_name: str):
+    """cfg, params, prompts, and the run() golden outputs (memoized: the
+    golden engine is the parity anchor every streaming variant compares
+    against)."""
+    if policy_name not in _SETUP_CACHE:
+        cfg = _cfg(policy_name)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(42)
+        prompts = [tuple(map(int, rng.integers(0, cfg.vocab_size,
+                                               size=PROMPT_LEN)))
+                   for _ in range(BATCH)]
+        golden_engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+        golden = golden_engine.run(
+            [Request(f"g{i}", p, MAX_NEW) for i, p in enumerate(prompts)])
+        _SETUP_CACHE[policy_name] = (cfg, params, prompts, golden)
+    return _SETUP_CACHE[policy_name]
+
+
+def _collect_stream(engine, requests):
+    """submit all + step until drained, gathering each request's deltas."""
+    deltas: dict[str, list] = {r.request_id: [] for r in requests}
+    for r in requests:
+        engine.submit(r)
+    while engine.scheduler.has_work:
+        for ev in engine.step():
+            deltas[ev.request_id].append(ev)
+    return deltas
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy_name,paged", [
+    ("dense", False), ("dense", True),
+    ("butterfly", False),
+    ("mixed", False), ("mixed", True),
+])
+def test_streaming_parity_with_run(policy_name, paged):
+    """Concatenated TokenDeltas == Engine.run tokens, token for token —
+    the golden run() batch is slot-starved (2 slots, 4 requests), so the
+    streaming engine also exercises admission waves and slot reuse."""
+    cfg, params, prompts, golden = _setup(policy_name)
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2,
+                    page_size=PAGE if paged else None)
+    reqs = [Request(f"s{i}", p, MAX_NEW) for i, p in enumerate(prompts)]
+    deltas = _collect_stream(engine, reqs)
+    for i, (req, gold) in enumerate(zip(reqs, golden)):
+        evs = deltas[req.request_id]
+        assert tuple(ev.token for ev in evs) == gold.tokens, (
+            f"{policy_name} paged={paged}: request {i} diverged")
+        assert [ev.index for ev in evs] == list(range(len(evs)))
+        # exactly one terminal event, at the end, same reason as run()
+        assert [ev.finished for ev in evs] == \
+            [False] * (len(evs) - 1) + [True]
+        assert evs[-1].finish_reason == gold.finish_reason
+    assert engine.decode_compile_count() == 1
+
+
+@pytest.mark.slow
+def test_async_engine_streaming_matches_run():
+    """The asyncio front fans the same deltas out per request: concatenated
+    streams == run() tokens; generate() returns the full output."""
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+
+    async def drive():
+        async with AsyncEngine(engine) as aeng:
+            streams = [await aeng.submit(Request(f"a{i}", p, MAX_NEW))
+                       for i, p in enumerate(prompts[:-1])]
+
+            async def collect(s):
+                return [ev async for ev in s]
+
+            gathered = await asyncio.gather(*[collect(s) for s in streams])
+            whole = await aeng.generate(
+                Request("a-last", prompts[-1], MAX_NEW))
+            return gathered, whole
+
+    gathered, whole = asyncio.run(drive())
+    for evs, gold in zip(gathered, golden[:-1]):
+        assert tuple(ev.token for ev in evs) == gold.tokens
+        assert evs[-1].finish_reason == gold.finish_reason
+    assert whole.tokens == golden[-1].tokens
+    assert whole.itl_mean is not None  # per-token timestamps flowed through
+    assert engine.decode_compile_count() == 1
+
+
+@pytest.mark.slow
+def test_async_stream_close_aborts_and_frees_slot():
+    """Dropping a stream mid-flight (client gone) aborts the request: its
+    slot frees immediately and the other request still finishes clean."""
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+
+    async def drive():
+        async with AsyncEngine(engine) as aeng:
+            doomed = await aeng.submit(Request("doomed", prompts[0], MAX_NEW))
+            first = [ev async for i, ev in _aenumerate(doomed) if i == 0]
+            await doomed.aclose()  # consumer walks away after one token
+            out = await aeng.generate(Request("ok", prompts[1], MAX_NEW))
+            return first, out
+
+    async def _aenumerate(ait):
+        i = 0
+        async for x in ait:
+            yield i, x
+            i += 1
+            if i >= 1:
+                return
+
+    first, out = asyncio.run(drive())
+    assert len(first) == 1
+    assert out.tokens == golden[1].tokens
+    assert engine.scheduler.free_slots == engine.num_slots
+    assert not engine.scheduler.active and not engine.scheduler.waiting
+
+
+# ------------------------------------------------- mid-flight arrival FIFO
+
+class _MidflightHarness:
+    """One engine reused across property examples (so the no-recompile
+    assertion spans ALL of them); each example drains completely."""
+
+    def __init__(self):
+        cfg = _cfg("dense")
+        self.cfg = cfg
+        self.engine = Engine(init_params(cfg, jax.random.PRNGKey(0)), cfg,
+                             max_len=MAX_LEN, num_slots=2)
+        self.rng = np.random.default_rng(7)
+        self.counter = 0
+
+    def run_schedule(self, schedule):
+        """``schedule``: list of (arrive_after_steps, prompt_len, max_new).
+        Submits each request once the step counter reaches its arrival
+        point, steps until drained, and asserts FIFO admission + no
+        starvation + zero decode recompiles."""
+        eng = self.engine
+        pending = sorted(enumerate(schedule), key=lambda kv: kv[1][0])
+        seqs, order = {}, []
+        steps = 0
+        limit = 20 * (len(schedule) + 1) + max(a for a, _, _ in schedule) + 5
+        while pending or eng.scheduler.has_work:
+            while pending and pending[0][1][0] <= steps:
+                i, (_, plen, mnew) = pending.pop(0)
+                rid = f"mf{self.counter}"
+                self.counter += 1
+                prompt = tuple(map(int, self.rng.integers(
+                    0, self.cfg.vocab_size, size=plen)))
+                seqs[rid] = (i, eng.submit(
+                    Request(rid, prompt, mnew)))
+                order.append(rid)
+            eng.step()
+            steps += 1
+            assert steps <= limit, "late submit starved (no progress bound)"
+        # every request finished with its full budget of tokens
+        for rid, (_, seq) in seqs.items():
+            assert seq.state is SequenceState.FINISHED
+            assert len(seq.tokens) == seq.request.max_new
+        # strict FIFO: admission times respect submission order
+        admitted_at = [seqs[rid][1].t_admitted for rid in order]
+        assert all(a <= b for a, b in zip(admitted_at, admitted_at[1:]))
+        assert eng.decode_compile_count() == 1
+
+
+@pytest.fixture(scope="module")
+def midflight():
+    return _MidflightHarness()
+
+
+if HAVE_HYPOTHESIS:
+    schedules = st.lists(
+        st.tuples(st.integers(0, 10), st.integers(1, PROMPT_LEN),
+                  st.integers(1, MAX_NEW)),
+        min_size=1, max_size=6)
+
+    @pytest.mark.slow
+    @given(schedule=schedules)
+    @settings(max_examples=10, deadline=None)
+    def test_midflight_arrivals_fifo_hypothesis(midflight, schedule):
+        midflight.run_schedule(schedule)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("trial", range(4))
+def test_midflight_arrivals_fifo_seeded(midflight, trial):
+    """Seeded fallback: always runs, even where hypothesis is absent."""
+    rng = random.Random(trial)
+    schedule = [(rng.randint(0, 10), rng.randint(1, PROMPT_LEN),
+                 rng.randint(1, MAX_NEW))
+                for _ in range(rng.randint(1, 6))]
+    midflight.run_schedule(schedule)
+
+
+@pytest.mark.slow
+def test_late_arrival_streams_before_earlier_requests_finish():
+    """The acceptance property: with a slot free, a short request submitted
+    mid-decode emits its first token BEFORE the long batch retires."""
+    cfg, params, prompts, _ = _setup("dense")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+    long_req = Request("long", prompts[0], MAX_NEW)
+    engine.submit(long_req)
+    engine.step()  # prefill
+    engine.step()  # one decode step: mid-flight now
+    late = Request("late", prompts[1][:3], 2)
+    engine.submit(late)
+    first_late_at, long_done_at = None, None
+    n = 2
+    while engine.scheduler.has_work:
+        for ev in engine.step():
+            if ev.request_id == "late" and first_late_at is None:
+                first_late_at = n
+            if ev.request_id == "long" and ev.finished:
+                long_done_at = n
+        n += 1
+    assert first_late_at is not None and long_done_at is not None
+    assert first_late_at < long_done_at
+    assert engine.decode_compile_count() == 1
+
+
+# ----------------------------------------------------------------- aborts
+
+@pytest.mark.slow
+def test_abort_running_frees_pages_without_touching_other_slots():
+    """Page accounting across an abort: the aborted slot's blocks return to
+    the allocator immediately, a waiting request admits into the freed
+    capacity, and the surviving request's tokens are unchanged."""
+    cfg, params, prompts, golden = _setup("mixed")
+    # pool sized so three live requests can NEVER coexist: each reserves
+    # ceil(13 / 4) = 4 pages, pool holds 8
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2,
+                    page_size=PAGE, num_pages=8)
+    keep = Request("keep", prompts[0], MAX_NEW)
+    doomed = Request("doomed", prompts[1], MAX_NEW)
+    blocked = Request("blocked", prompts[2], MAX_NEW)
+    for r in (keep, doomed, blocked):
+        engine.submit(r)
+    engine.step()  # admits keep + doomed (8/8 pages reserved); prefill
+    assert [s.request_id for s in engine.scheduler.active.values()] == \
+        ["keep", "doomed"]
+    engine.step()  # one decode step
+    live_before = engine.cache.allocator.num_live
+    assert live_before > 0
+    doomed_slot = next(s.slot for s in engine.scheduler.active.values()
+                       if s.request_id == "doomed")
+    doomed_pages = int((engine.cache.table[doomed_slot] > 0).sum())
+
+    ev = engine.abort("doomed")
+    assert ev.finish_reason is FinishReason.ABORTED and ev.token is None
+    # pages freed NOW, not at some later drain; reservation released too
+    assert engine.cache.allocator.num_live == live_before - doomed_pages
+    assert engine.scheduler.reserved_units == 4  # only keep's reservation
+
+    outs = {}
+    while engine.scheduler.has_work:
+        for e in engine.step():
+            if e.finished:
+                outs[e.request_id] = e
+    assert set(outs) == {"keep", "blocked"}  # blocked admitted after abort
+    assert engine.cache.allocator.num_live == 0  # full conservation at end
+
+
+@pytest.mark.slow
+def test_abort_running_keeps_other_slot_tokens_identical():
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+    keep = engine.submit(Request("keep", prompts[0], MAX_NEW))
+    engine.submit(Request("doomed", prompts[1], MAX_NEW))
+    engine.step()  # prefill both
+    engine.step()  # decode
+    engine.abort("doomed")
+    while engine.scheduler.has_work:
+        engine.step()
+    assert keep.tokens == list(golden[0].tokens)
+    assert keep.finish_reason == golden[0].finish_reason
+
+
+@pytest.mark.slow
+def test_abort_waiting_request_dequeues_cleanly():
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=1)
+    first = engine.submit(Request("first", prompts[0], MAX_NEW))
+    queued = engine.submit(Request("queued", prompts[1], MAX_NEW))
+    engine.step()  # first admitted; queued still WAITING
+    ev = engine.abort("queued")
+    assert ev.finish_reason is FinishReason.ABORTED
+    assert queued.state is SequenceState.FINISHED
+    assert queued.to_output().tokens == ()
+    assert not engine.scheduler.waiting
+    with pytest.raises(KeyError):
+        engine.abort("queued")  # no longer live
+    while engine.scheduler.has_work:
+        engine.step()
+    assert first.tokens == list(golden[0].tokens)
+
+
+# ------------------------------------------------------------- stop tokens
+
+@pytest.mark.slow
+def test_stop_tokens_truncate_generation():
+    cfg, params, prompts, golden = _setup("dense")
+    gold = golden[0].tokens
+    assert len(gold) >= 3
+    stop = gold[2]
+    cut = gold.index(stop)  # first occurrence is where it must stop
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=1)
+    out = engine.run([Request("s", prompts[0], MAX_NEW,
+                              sampling=SamplingParams(stop_tokens=(stop,)))])[0]
+    assert out.tokens == gold[: cut + 1]  # stop token itself included
+    assert out.finish_reason is FinishReason.STOP
+
+
+@pytest.mark.slow
+def test_submit_validates_stop_token_ids_against_vocab():
+    cfg, params, prompts, _ = _setup("dense")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=1)
+    with pytest.raises(ValueError, match="outside the vocabulary"):
+        engine.submit(Request(
+            "bad", prompts[0], 2,
+            sampling=SamplingParams(stop_tokens=(cfg.vocab_size,))))
+    assert not engine.scheduler.waiting  # nothing enqueued on rejection
+
+
+@pytest.mark.slow
+def test_submit_validates_prompt_ids_against_vocab():
+    """Out-of-range prompt ids must 400/raise, not be silently clamped by
+    the jitted embedding gather into plausible-looking garbage."""
+    cfg, params, prompts, _ = _setup("dense")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=1)
+    for bad in (cfg.vocab_size, -1):
+        with pytest.raises(ValueError, match="prompt ids"):
+            engine.submit(Request("bad", prompts[0][:-1] + (bad,), 2))
+    assert not engine.scheduler.waiting
+
+
+@pytest.mark.slow
+def test_async_engine_restarts_after_close():
+    """start() after close() must actually restart the step loop (the stop
+    flag is cleared), not hand back a dead engine whose streams hang."""
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+
+    async def drive():
+        aeng = AsyncEngine(engine)
+        aeng.start()
+        aeng.close()
+        aeng.start()
+        try:
+            return await aeng.generate(Request("re", prompts[0], MAX_NEW))
+        finally:
+            aeng.close()
+
+    out = asyncio.run(drive())
+    assert out.tokens == golden[0].tokens
+
+
+@pytest.mark.slow
+def test_async_duplicate_request_id_does_not_orphan_live_stream():
+    """A second submit reusing a streaming id is rejected WITHOUT touching
+    the original stream's queue — the first consumer still gets every
+    delta through to the terminal one."""
+    cfg, params, prompts, golden = _setup("mixed")
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+
+    async def drive():
+        async with AsyncEngine(engine) as aeng:
+            stream = await aeng.submit(Request("dup", prompts[0], MAX_NEW))
+            with pytest.raises(ValueError, match="already"):
+                await aeng.submit(Request("dup", prompts[1], MAX_NEW))
+            return [ev async for ev in stream]
+
+    evs = asyncio.run(drive())
+    assert tuple(ev.token for ev in evs) == golden[0].tokens
+    assert evs[-1].finished
