@@ -28,8 +28,16 @@ stdlib ``asyncio`` networking only, no web framework.
                    step loop produces them — a second request POSTed while
                    the first is mid-stream interleaves, it does not wait.
   GET /stats       One JSON object: engine throughput counters, scheduler
-                   occupancy, and TTFT/ITL aggregates over completed
-                   requests (None-valued stages skipped, PR 4 rules).
+                   occupancy, prefix-cache hit rates (--prefix-cache), and
+                   TTFT/ITL aggregates over completed requests
+                   (None-valued stages skipped, PR 4 rules).
+  GET /healthz     Cheap liveness probe: {"status": "ok"} plus a
+                   free_pages/free_slots/waiting snapshot — what a replica
+                   router dispatches on.
+
+``--prefix-cache`` turns on the radix-tree prefix cache over the paged
+pool (DESIGN.md section 12): repeated prompt heads skip prefill for the
+matched pages, bit-identical to the uncached stream.
 """
 from __future__ import annotations
 
@@ -69,33 +77,42 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
     """Engine construction shared by the closed-batch and HTTP modes."""
     page_size = None if (args.fixed_slots or not args.page_size) \
         else args.page_size
-    if args.memory_budget_mb:  # derived sizing; explicit flags conflict
-        if args.slots or args.token_budget:
-            raise SystemExit("--memory-budget-mb derives slots and token "
-                             "budget; drop --slots/--token-budget")
-        budget = int(args.memory_budget_mb * 1e6)
-        plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
-                                  page_size=page_size)
-        log.info("plan (per device): params %.2f MB, kv %.2f MB, "
-                 "%d slots x %d shards -> %d total, token budget %s"
-                 "%s",
-                 plan.param_bytes_per_device / 1e6,
-                 plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
-                 plan.dp_size, plan.num_slots, plan.token_budget,
-                 f", {plan.num_pages} pages x {plan.page_size} tokens"
-                 if plan.num_pages is not None else "")
-        # hand the engine the plan we just logged (num_slots is already a
-        # dp multiple) instead of re-deriving it from the budget
+    prefix = bool(getattr(args, "prefix_cache", False))
+    if prefix and page_size is None:
+        raise SystemExit("--prefix-cache needs the paged KV cache; drop "
+                         "--fixed-slots / set --page-size")
+    try:
+        if args.memory_budget_mb:  # derived sizing; explicit flags conflict
+            if args.slots or args.token_budget:
+                raise SystemExit("--memory-budget-mb derives slots and token "
+                                 "budget; drop --slots/--token-budget")
+            budget = int(args.memory_budget_mb * 1e6)
+            plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
+                                      page_size=page_size)
+            log.info("plan (per device): params %.2f MB, kv %.2f MB, "
+                     "%d slots x %d shards -> %d total, token budget %s"
+                     "%s",
+                     plan.param_bytes_per_device / 1e6,
+                     plan.kv_bytes_per_device / 1e6, plan.slots_per_device,
+                     plan.dp_size, plan.num_slots, plan.token_budget,
+                     f", {plan.num_pages} pages x {plan.page_size} tokens"
+                     if plan.num_pages is not None else "")
+            # hand the engine the plan we just logged (num_slots is already a
+            # dp multiple) instead of re-deriving it from the budget
+            return Engine(params, cfg, max_len=max_len,
+                          num_slots=plan.num_slots,
+                          token_budget=(None if plan.num_pages is not None
+                                        else plan.token_budget),
+                          page_size=plan.page_size,
+                          num_pages=plan.num_pages, mesh=mesh,
+                          prefix_cache=prefix)
         return Engine(params, cfg, max_len=max_len,
-                      num_slots=plan.num_slots,
-                      token_budget=(None if plan.num_pages is not None
-                                    else plan.token_budget),
-                      page_size=plan.page_size,
-                      num_pages=plan.num_pages, mesh=mesh)
-    return Engine(params, cfg, max_len=max_len,
-                  num_slots=(args.slots or min(args.batch, 8)),
-                  token_budget=args.token_budget or None,
-                  page_size=page_size, mesh=mesh)
+                      num_slots=(args.slots or min(args.batch, 8)),
+                      token_budget=args.token_budget or None,
+                      page_size=page_size, mesh=mesh, prefix_cache=prefix)
+    except ValueError as e:
+        # e.g. --prefix-cache on a recurrent arch (needs pure attention)
+        raise SystemExit(str(e))
 
 
 def _latency_lines(outputs: list[RequestOutput]) -> list[str]:
@@ -190,6 +207,9 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             "free_slots": engine.scheduler.free_slots,
         },
         "completed": len(done),
+        # trie hit-rate counters; None when --prefix-cache is off
+        "prefix_cache": (engine.prefix.stats()
+                         if engine.prefix is not None else None),
         # aggregates over per-request summaries, None stages skipped.
         # itl_s.p99 is the p99 of PER-REQUEST itl_p99 values (RequestOutput
         # keeps summaries, not raw gaps) — a conservative tail proxy that
@@ -199,6 +219,19 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
                    "p99": percentile(ttft, 99) if ttft else None},
         "itl_s": {"mean": sum(itl_m) / len(itl_m) if itl_m else None,
                   "p99": percentile(itl_p, 99) if itl_p else None},
+    }
+
+
+def healthz_payload(engine: Engine) -> dict:
+    """Liveness snapshot: cheap enough for a router to poll per dispatch.
+    ``free_pages`` is None in the fixed-slot regime (no page pool)."""
+    alloc = getattr(engine.cache, "allocator", None)
+    return {
+        "status": "ok",
+        "free_slots": engine.scheduler.free_slots,
+        "active": len(engine.scheduler.active),
+        "waiting": len(engine.scheduler.waiting),
+        "free_pages": alloc.num_free if alloc is not None else None,
     }
 
 
@@ -280,6 +313,9 @@ async def _handle_conn(aeng: AsyncEngine, state: ServerState,
             # would see half-updated counters / slot accounting
             payload = await aeng.with_engine(
                 lambda eng: stats_payload(eng, state))
+            _write_json(writer, "200 OK", payload)
+        elif method == "GET" and path == "/healthz":
+            payload = await aeng.with_engine(healthz_payload)
             _write_json(writer, "200 OK", payload)
         else:
             _write_json(writer, "404 Not Found",
@@ -375,6 +411,10 @@ def main():
     ap.add_argument("--fixed-slots", action="store_true",
                     help="fall back to the fixed max_len-stripe SlotCache "
                          "instead of the paged KV cache")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache over the paged pool: "
+                         "repeated prompt heads skip prefill (needs "
+                         "--page-size, conflicts with --fixed-slots)")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
                          "budget (params priced under the active policy; "

@@ -8,4 +8,5 @@ from repro.models.model import (
     lm_loss,
     param_count,
     prefill,
+    prefill_with_prefix,
 )

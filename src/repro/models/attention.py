@@ -284,6 +284,56 @@ def attn_decode_paged(
     return y, {"k": k_pool, "v": v_pool}
 
 
+def attn_prefill_paged_past(
+    params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+    page_table: jax.Array, prefix_lens: jax.Array, positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """Tail prefill attending to a paged prefix plus itself (causal).
+
+    x: (B, S, d) tail hidden states; cache k/v: (num_blocks, page_size,
+    Hkv, hd) — the global block pool; page_table: (B, max_prefix_pages)
+    int32 block ids covering each row's matched prefix (scratch-0 padded);
+    prefix_lens: (B,) valid prefix token counts; positions: (B, S[, 3])
+    absolute positions ``prefix_lens[b] + t`` of each tail token.
+
+    The gathered prefix view is masked at ``t < prefix_lens`` and the tail
+    block causally at ``t' <= q`` — the same validity set a full prefill
+    over the whole prompt sees, with masked scores at NEG_INF contributing
+    exactly zero to the softmax, so the tail activations are bit-identical
+    to the uncached forward.  Returns (out (B, S, d), {"k", "v"} tail K/V
+    (B, S, Hkv, hd)) for the page-table scatter.
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    kp = cache["k"][page_table].reshape(b, -1, hkv, hd)
+    vp = cache["v"][page_table].reshape(b, -1, hkv, hd)
+    kp = pctx.constrain(kp, "dp", None, None, None)
+    vp = pctx.constrain(vp, "dp", None, None, None)
+    n_pref = kp.shape[1]
+    kf = jnp.concatenate([kp, k.astype(kp.dtype)], axis=1)  # (B, T, Hkv, hd)
+    vf = jnp.concatenate([vp, v.astype(vp.dtype)], axis=1)
+
+    t = n_pref + s
+    g = hq // hkv
+    qh = (q * hd ** -0.5).reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qh.astype(jnp.float32),
+                        kf.astype(jnp.float32))  # (B,kv,g,S,T)
+    tpos = jnp.arange(t)
+    causal = (tpos[None, :] - n_pref) <= jnp.arange(s)[:, None]  # (S, T)
+    valid = jnp.where((tpos < n_pref)[None, None, :],
+                      tpos[None, None, :] < prefix_lens[:, None, None],
+                      causal[None])  # (B, S, T)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, vf.astype(jnp.float32))
+    o = o.reshape(b, s, hq * hd).astype(x.dtype)
+    _, out_lin = _linears(cfg)
+    y = out_lin(params["out"], o)
+    return y, {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
+
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     hkv, hd = cfg.num_kv_heads, cfg.hd
     return {

@@ -298,6 +298,68 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
     return logits, tuple(fixed)
 
 
+def prefill_with_prefix(params: dict, cfg: ModelConfig, inputs: jax.Array,
+                        paged_caches, page_tables: jax.Array,
+                        prefix_lens: jax.Array):
+    """Tail prefill: forward ONLY the unmatched tail of each prompt,
+    attending to the matched prefix K/V already resident in the paged
+    block pool — the prefix-cache fast path that turns a long shared
+    system prompt into a near-decode-latency dispatch.
+
+    inputs: (B, S_tail) right-padded tail tokens; paged_caches: the pool
+    pytree (``init_paged_caches`` layout, attention leaves (P, num_blocks,
+    page_size, Hkv, hd)); page_tables: (B, NP) int32 block ids covering
+    each row's matched prefix (scratch-0 padded past it); prefix_lens:
+    (B,) matched token counts — tail token t of row b sits at absolute
+    position ``prefix_lens[b] + t``.
+
+    Returns (logits (B, S_tail, padded_vocab), per-period ``{"k", "v"}``
+    tail caches (P, B, S_tail, Hkv, hd)) for
+    ``PagedSlotCache.write_tails``.  Validity masking matches the full
+    prefill exactly (NEG_INF scores contribute exact zeros), so tail
+    logits — and therefore every sampled token — are bit-identical to an
+    uncached forward over the whole prompt.
+
+    Pure-attention patterns only: recurrent mixers would need their O(1)
+    state replayed through the prefix, which the pool does not hold.
+    """
+    if any(m != "attn" for m, _ in cfg.pattern):
+        raise ValueError(
+            f"{cfg.name}: prefix-cached prefill needs a pure-attention "
+            "pattern; recurrent state cannot be recovered from the pool")
+    b, s = inputs.shape[:2]
+    positions = prefix_lens[:, None] + jnp.arange(s)[None]  # (B, S)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    params = cast_params(params, cfg.dtype)
+    x = _embed_inputs(params, cfg, inputs)
+    x = pctx.constrain(x, "dp", None, None)
+
+    def period_body(x, inp):
+        pp, pcaches = inp
+        tails = []
+        for i, (m, f) in enumerate(cfg.pattern):
+            p = pp[f"slot{i}"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            h, kv = attention.attn_prefill_paged_past(
+                p["mixer"], cfg, h, pcaches[i], page_tables, prefix_lens,
+                positions)
+            x = x + h
+            if f != "none":
+                g = rms_norm(x, p["norm2"], cfg.norm_eps)
+                g = (moe_lib.moe_forward(p["ffn"], cfg, g) if f == "moe"
+                     else mlp_forward(p["ffn"], cfg, g))
+                x = x + g
+            x = pctx.constrain(x, "dp", None, None)
+            tails.append(kv)
+        return x, tuple(tails)
+
+    x, tails = jax.lax.scan(period_body, x, (params["periods"], paged_caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_linear(cfg)(params["head"], x)
+    return logits, tails
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     """Decode caches for the whole stack, stacked over periods."""
     def one_period():

@@ -13,6 +13,7 @@ from repro.serving.budget import (
 from repro.serving.cache import PageAllocator, PagedSlotCache, SlotCache
 from repro.serving.engine import Engine, EngineStats
 from repro.serving.events import StepEvent, TokenDelta
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch, token_digest
 from repro.serving.reference import token_by_token_greedy
 from repro.serving.request import (
     FinishReason,
@@ -34,6 +35,8 @@ __all__ = [
     "FinishReason",
     "PageAllocator",
     "PagedSlotCache",
+    "PrefixCache",
+    "PrefixMatch",
     "Request",
     "RequestOutput",
     "SamplingParams",
@@ -51,4 +54,5 @@ __all__ = [
     "plan_engine_report",
     "slot_state_bytes",
     "token_by_token_greedy",
+    "token_digest",
 ]

@@ -159,6 +159,14 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
     exactly ``num_pages * page_size``.  One extra block's bytes are set
     aside for the pool's scratch block 0.
 
+    The prefix cache (``Engine(prefix_cache=True)``) needs no extra
+    headroom in this plan: trie-resident pages live in the SAME pool, and
+    the scheduler counts them inside the ``num_pages`` bound
+    (``reserved_units + resident_pages <= num_pages``, evicting
+    unreferenced trie pages under admission pressure) — the cache trades
+    idle pool capacity for hit rate rather than consuming a separate
+    budget (DESIGN.md section 12).
+
     The token budget is ``None`` (unlimited) for recurrent stacks whose
     per-slot state is O(1) — paging is a no-op there and the plan falls
     back to the fixed regime.  With a mesh the budget is per-device and

@@ -121,13 +121,21 @@ class SlotCache:
 
 
 class PageAllocator:
-    """Free-list allocator over the KV block pool.
+    """Refcounted free-list allocator over the KV block pool.
 
     Physical block ids run 1..num_pages — block 0 is the reserved scratch
     block that unmapped page-table entries point at and is never handed
-    out.  Conservation is checked on every transition: each block is either
-    free or live, never both and never neither, so a double-alloc or
-    double-free raises instead of silently corrupting two sequences.
+    out.  Every live block carries a reference count: ``alloc`` hands it
+    out at count 1, ``share`` adds a reader (a second slot mapping the
+    block, or the prefix trie adopting it), and ``release`` drops one —
+    the block only returns to the free list when its count hits 0, so an
+    abort/evict of one reader can never free a block another reader still
+    maps.  Conservation is checked on every transition: each block is
+    either free or live (counted once no matter how many references it
+    holds), never both and never neither, so ``num_free + num_live ==
+    num_pages`` always — the shared-page form of ``free + Σ unique-mapped
+    = total``.  A release of a block that is not live raises instead of
+    silently corrupting two sequences.
     """
 
     def __init__(self, num_pages: int):
@@ -136,7 +144,7 @@ class PageAllocator:
         self.num_pages = num_pages
         # stack of free block ids; reversed so pop() hands out block 1 first
         self._free: list[int] = list(range(1, num_pages + 1))[::-1]
-        self._live: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
@@ -144,11 +152,17 @@ class PageAllocator:
 
     @property
     def num_live(self) -> int:
-        return len(self._live)
+        """UNIQUE live blocks (each counted once however many refs it has)."""
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        """Current reference count of ``page`` (0 if free)."""
+        return self._refs.get(int(page), 0)
 
     def alloc(self, n: int) -> list[int]:
-        """Take ``n`` blocks off the free list; raises MemoryError when the
-        pool cannot satisfy the request (nothing is partially allocated)."""
+        """Take ``n`` blocks off the free list at refcount 1; raises
+        MemoryError when the pool cannot satisfy the request (nothing is
+        partially allocated)."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
@@ -156,27 +170,51 @@ class PageAllocator:
                 f"asked for {n} pages but only {len(self._free)} of "
                 f"{self.num_pages} are free")
         out = [self._free.pop() for _ in range(n)]
-        self._live.update(out)
+        for p in out:
+            self._refs[p] = 1
         self._check()
         return out
 
+    def share(self, pages: TypingSequence[int]) -> None:
+        """Add one reference to each live block in ``pages``."""
+        pages = self._validated(pages, "share")
+        for p in pages:
+            self._refs[p] += 1
+        self._check()
+
+    def release(self, pages: TypingSequence[int]) -> None:
+        """Drop one reference from each block; a block returns to the free
+        list only when its count hits 0."""
+        pages = self._validated(pages, "release")
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+        self._check()
+
     def free(self, pages: TypingSequence[int]) -> None:
+        """Alias of :meth:`release` — every free is a refcounted release,
+        so single-owner callers keep their exact pre-refcount semantics."""
+        self.release(pages)
+
+    def _validated(self, pages: TypingSequence[int], what: str) -> list[int]:
         pages = [int(p) for p in pages]
         if len(set(pages)) != len(pages):
-            raise ValueError(f"duplicate pages in free: {pages}")
+            raise ValueError(f"duplicate pages in {what}: {pages}")
         for p in pages:
-            if p not in self._live:
+            if p not in self._refs:
                 raise ValueError(f"page {p} is not allocated (double free?)")
-        self._live.difference_update(pages)
-        self._free.extend(pages)
-        self._check()
+        return pages
 
     def _check(self) -> None:
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate block on free list"
-        assert not (free & self._live), "block both free and live"
-        assert len(free) + len(self._live) == self.num_pages, (
+        assert not (free & self._refs.keys()), "block both free and live"
+        assert len(free) + len(self._refs) == self.num_pages, (
             "block count not conserved")
+        assert all(c >= 1 for c in self._refs.values()), (
+            "live block with refcount < 1")
 
 
 class PagedSlotCache:
@@ -188,9 +226,13 @@ class PagedSlotCache:
     consumes (0 = unmapped).  ``insert`` maps just enough pages to cover a
     sequence's prompt and scatters the dense prefill rows into them;
     ``ensure_mapped`` grows a slot's table one block at a time as decode
-    crosses page boundaries; ``evict`` frees the slot's pages back to the
-    allocator and restores its slot-indexed recurrent state from the blank
-    template.  Freed blocks are NOT zeroed: every valid position of a
+    crosses page boundaries; ``evict`` drops one allocator reference per
+    mapped page (returning private pages, keeping shared ones live) and
+    restores the slot-indexed recurrent state from the blank template.
+    ``map_prefix``/``cow_block``/``alloc_tail``/``write_tails`` are the
+    prefix-cache entry points: map already-written shared blocks read-only
+    into a fresh slot, copy-on-write the first divergent or partially
+    filled block, and scatter a tail prefill into the private remainder.  Freed blocks are NOT zeroed: every valid position of a
     reused block is fully overwritten by the next insert/decode writes,
     and stale positions beyond a sequence's current length are masked to
     NEG_INF by the decode validity mask — reuse stays bit-exact.
@@ -259,7 +301,8 @@ class PagedSlotCache:
             # roll the partial batch back: no slot keeps mapped-but-unwritten
             # pages after a failed insert
             for s in done:
-                self.allocator.free(self.table[s][self.table[s] > 0].tolist())
+                self.allocator.release(
+                    self.table[s][self.table[s] > 0].tolist())
                 self.table[s] = 0
             raise
 
@@ -310,15 +353,124 @@ class PagedSlotCache:
         if self.table[slot, page] == 0:
             self.table[slot, page] = self.allocator.alloc(1)[0]
 
+    # ---------------------------------------------------- prefix sharing --
+    def map_prefix(self, slot: int, blocks: TypingSequence[int]) -> None:
+        """Map shared, already-written blocks read-only into the head of a
+        fresh slot's page table.  The caller must hold one reference per
+        block (the pin taken at admission); that reference becomes the
+        slot's mapping reference and is dropped again by ``evict`` — the
+        cache itself takes no extra ref here."""
+        self._check_slots([slot])
+        if self.table[slot].any():
+            raise ValueError(f"slot {slot} still holds mapped pages; "
+                             "evict before mapping a prefix")
+        if len(blocks) > self.max_pages:
+            raise ValueError(f"slot {slot}: {len(blocks)} prefix blocks "
+                             f"exceed max_pages {self.max_pages}")
+        for i, b in enumerate(blocks):
+            self.table[slot, i] = int(b)
+
+    def cow_block(self, slot: int, page_idx: int, src_block: int) -> int:
+        """Copy-on-write: allocate a private block, device-copy
+        ``src_block``'s K/V rows into it on every attention leaf, map it at
+        ``page_idx``, and drop the caller's reference on ``src_block`` (the
+        pin is consumed — the shared block stays live for its other
+        readers).  Returns the private block id."""
+        self._check_slots([slot])
+        src = int(src_block)
+        new = self.allocator.alloc(1)[0]
+        out = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                out.append({key: self.data[i][key].at[:, new].set(
+                    self.data[i][key][:, src]) for key in ("k", "v")})
+            else:
+                out.append(self.data[i])
+        self.data = tuple(out)
+        self.table[slot, int(page_idx)] = new
+        self.allocator.release([src])
+        self._commit()
+        return new
+
+    def alloc_tail(self, slot: int, start: int, length: int) -> None:
+        """Map private blocks for every page covering positions
+        [``start``, ``length``) that the prefix mapping (and any COW block)
+        left unmapped.  Admission charged the unshared tail, so the alloc
+        cannot fail under the scheduler's invariant."""
+        self._check_slots([slot])
+        if not 0 <= int(start) < int(length) <= self.max_len:
+            raise ValueError(f"slot {slot}: tail [{start}, {length}) out of "
+                             f"range (0, {self.max_len}]")
+        first, last = int(start) // self.page_size, \
+            (int(length) - 1) // self.page_size
+        for page in range(first, last + 1):
+            if self.table[slot, page] == 0:
+                self.table[slot, page] = self.allocator.alloc(1)[0]
+
+    def write_tails(self, slots: TypingSequence[int], caches,
+                    starts: TypingSequence[int],
+                    lengths: TypingSequence[int],
+                    rows: TypingSequence[int] | None = None) -> None:
+        """Scatter tail K/V rows into already-mapped blocks.  ``caches`` is
+        a per-period tuple of ``{"k", "v"}`` leaves shaped ``(P, B, S_tail,
+        Hkv, hd)`` (from ``models.prefill_with_prefix``); row ``rows[j]``'s
+        tail index t holds sequence position ``starts[j] + t``, and
+        positions [``starts[j]``, ``lengths[j]``) are written.  All target
+        blocks must be mapped (``map_prefix``/``cow_block``/``alloc_tail``
+        first)."""
+        if rows is None:
+            rows = list(range(len(slots)))
+        if len(rows) != len(slots) or len(starts) != len(slots) \
+                or len(lengths) != len(slots):
+            raise ValueError(
+                f"{len(slots)} slots vs {len(rows)} rows / "
+                f"{len(starts)} starts / {len(lengths)} lengths")
+        self._check_slots(slots)
+        row_sel, tail_sel, bid, off = [], [], [], []
+        for r, s, st, ln in zip(rows, slots, starts, lengths):
+            if not 0 <= int(st) < int(ln) <= self.max_len:
+                raise ValueError(f"slot {s}: tail [{st}, {ln}) out of range "
+                                 f"(0, {self.max_len}]")
+            for pos in range(int(st), int(ln)):
+                b = int(self.table[s, pos // self.page_size])
+                if b == 0:
+                    raise ValueError(
+                        f"slot {s}: position {pos} not mapped; alloc_tail "
+                        "before write_tails")
+                row_sel.append(int(r))
+                tail_sel.append(pos - int(st))
+                bid.append(b)
+                off.append(pos % self.page_size)
+        r_idx = jnp.asarray(row_sel, jnp.int32)
+        t_idx = jnp.asarray(tail_sel, jnp.int32)
+        b_idx = jnp.asarray(bid, jnp.int32)
+        o_idx = jnp.asarray(off, jnp.int32)
+        new = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                entry = {}
+                for key in ("k", "v"):
+                    pool = self.data[i][key]
+                    src = caches[i][key][:, r_idx, t_idx]  # (P, N, Hkv, hd)
+                    entry[key] = pool.at[:, b_idx, o_idx].set(
+                        src.astype(pool.dtype))
+                new.append(entry)
+            else:
+                new.append(self.data[i])
+        self.data = tuple(new)
+        self._commit()
+
     # ------------------------------------------------------------ evict --
     def evict(self, slots: TypingSequence[int]) -> None:
-        """Free ``slots``' pages back to the allocator and restore their
-        slot-indexed recurrent state to its init value."""
+        """Release one reference on each of ``slots``' mapped pages (a
+        private page returns to the allocator, a shared one stays live for
+        its remaining readers) and restore the slot-indexed recurrent state
+        to its init value."""
         self._check_slots(slots)
         for s in slots:
             mapped = self.table[s][self.table[s] > 0]
             if len(mapped):
-                self.allocator.free(mapped.tolist())
+                self.allocator.release(mapped.tolist())
             self.table[s] = 0
         s_idx = jnp.asarray(list(slots), jnp.int32)
         new = []

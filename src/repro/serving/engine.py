@@ -57,11 +57,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, prefill
+from repro.models import decode_step, prefill, prefill_with_prefix
 from repro.parallel import context as pctx
 from repro.serving.budget import plan_engine_report
 from repro.serving.cache import PagedSlotCache, SlotCache
 from repro.serving.events import StepEvent
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import (Request, RequestOutput, Sequence,
                                    SequenceState)
 from repro.serving.scheduler import Scheduler
@@ -160,6 +161,15 @@ class Engine:
     ``page_size`` is silently ignored there and the fixed-slot path runs.
     ``page_size=None`` is the fixed-slot fallback.
 
+    ``prefix_cache=True`` (paged + pure-attention only) adds a radix-tree
+    prefix cache over the block pool: admission matches each prompt
+    against previously served prefixes, maps fully shared pages read-only
+    into the slot (refcounted, copy-on-write at the first divergent
+    page), and prefills only the unshared tail — the scheduler charges
+    just that tail and counts the trie's resident pages against the page
+    budget, evicting unreferenced LRU nodes under pressure.  Token
+    streams stay bit-identical to the uncached engine.
+
     ``mesh`` (axes named by ``dp``/``tp``, default "data"/"model") turns the
     engine SPMD: see the module docstring.  ``memory_budget_bytes`` is then
     a PER-DEVICE budget and ``num_slots`` is rounded up to a multiple of the
@@ -178,7 +188,8 @@ class Engine:
                  tp: str | None = "model",
                  max_top_k: int = MAX_TOP_K,
                  page_size: int | None = None,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 prefix_cache: bool = False):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"{cfg.name} takes frontend embeddings; the engine serves "
@@ -278,6 +289,23 @@ class Engine:
         self.stats = EngineStats()
         self._attn_only = all(m == "attn" for m, _ in cfg.pattern)
         self._sample = _make_sampler(cfg, self.max_top_k)
+        # radix-tree prefix cache over the paged pool (DESIGN.md section
+        # 12): admission consults the trie, fully shared prompt pages are
+        # mapped read-only into the slot, and only the unshared tail is
+        # prefilled — bit-identical to the uncached stream
+        self.prefix: PrefixCache | None = None
+        if prefix_cache:
+            if self.page_size is None:
+                raise ValueError(
+                    "prefix_cache needs the paged KV layout; pass page_size "
+                    "(pure-recurrent stacks have nothing to share)")
+            if not self._attn_only:
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache needs a pure-attention "
+                    "pattern; recurrent prefix state cannot be recovered "
+                    "from the block pool")
+            self.prefix = PrefixCache(self.cache)
+            self.scheduler.prefix_hook = self.prefix
         # request_id -> Sequence for everything submitted and not yet
         # retired/aborted: what ``abort`` looks up between steps
         self._live: dict[str, Sequence] = {}
@@ -310,6 +338,18 @@ class Engine:
             first = self._sample(last, temps, topk, seeds, lengths)
             return first, caches
 
+        def prefix_fn(params, data, tables, tails, plens, tlens,
+                      temps, topk, seeds):
+            # tail-only prefill against the resident prefix pages; the
+            # first token samples at the FULL prompt position, so the
+            # stream is bit-identical to the uncached fold_in sequence
+            logits, tail_caches = prefill_with_prefix(
+                params, cfg, tails, data, tables, plens)
+            last = jnp.take_along_axis(
+                logits, (tlens - 1)[:, None, None], axis=1)[:, 0]
+            first = self._sample(last, temps, topk, seeds, plens + tlens)
+            return first, tail_caches
+
         if mesh is not None:
             row = self._slot_sh
             # the page table is replicated host state (None when unpaged)
@@ -324,6 +364,7 @@ class Engine:
         # prefill shapes vary by (rows, width) bucket, so inputs are placed
         # per call (_put) and jit infers shardings from the committed args
         self._prefill = jax.jit(prefill_fn, static_argnames=("ragged",))
+        self._prefix_prefill = jax.jit(prefix_fn)
 
     # ------------------------------------------------------------- mesh ---
     def _trace_ctx(self):
@@ -459,17 +500,29 @@ class Engine:
         """Batched prefill: pure-attention stacks take mixed lengths in one
         right-padded dispatch; recurrent stacks are grouped by exact length
         (pad tokens would pollute O(1) state) — still one dispatch per group,
-        never per token."""
-        lengths = {s.prompt_len for s in admitted}
-        if self._attn_only or len(lengths) == 1:
-            groups = [admitted]
-        else:
-            by_len: dict[int, list[Sequence]] = {}
-            for s in admitted:
-                by_len.setdefault(s.prompt_len, []).append(s)
-            groups = list(by_len.values())
-        for group in groups:
-            self._prefill_group(group)
+        never per token.  With the prefix cache on, trie hits split off into
+        their own tail-only dispatch (the matched pages are already
+        resident) and misses take the full path; both adopt their prompt
+        pages into the trie afterwards."""
+        hits, misses = [], []
+        for s in admitted:
+            if s.prefix_match is not None and s.prefix_match.matched_len > 0:
+                hits.append(s)
+            else:
+                misses.append(s)
+        if misses:
+            lengths = {s.prompt_len for s in misses}
+            if self._attn_only or len(lengths) == 1:
+                groups = [misses]
+            else:
+                by_len: dict[int, list[Sequence]] = {}
+                for s in misses:
+                    by_len.setdefault(s.prompt_len, []).append(s)
+                groups = list(by_len.values())
+            for group in groups:
+                self._prefill_group(group)
+        if hits:
+            self._prefill_prefix_group(hits)
 
     def _prefill_group(self, group: list[Sequence]) -> None:
         width = max(s.prompt_len for s in group)
@@ -526,6 +579,100 @@ class Engine:
             self._temps[slot] = temps[j]
             self._topk[slot] = topk[j]
             self._seeds[slot] = seeds[j]
+        self._adopt_group(group)
+
+    def _prefill_prefix_group(self, group: list[Sequence]) -> None:
+        """Tail-only prefill for trie hits: map the matched full pages
+        read-only, copy-on-write the partially matched page, allocate the
+        private tail pages, then run ONE bucketed ``prefill_with_prefix``
+        dispatch and scatter the tail K/V into the mapped blocks.  The
+        matched tokens are never recomputed — that is the TTFT win."""
+        ps = self.page_size
+        for s in group:
+            m = s.prefix_match
+            self.cache.map_prefix(s.slot, m.full_blocks)
+            if m.partial_len > 0:
+                # the COW copy consumes the pin reference on the shared
+                # partial block; its content is identical, so the gather
+                # below may read either copy
+                self.cache.cow_block(s.slot, m.full_pages, m.partial_block)
+            self.cache.alloc_tail(s.slot, m.matched_len, s.prompt_len)
+
+        # bucket rows / tail width / prefix pages to powers of two so the
+        # compile cache stays O(log^3) for a long-lived engine; dummy rows
+        # carry a zero prefix + length-1 tail and are never scattered
+        rows = _pow2_bucket(len(group), self.num_slots)
+        tailw = _pow2_bucket(
+            max(s.prompt_len - s.prefix_match.matched_len for s in group),
+            self.max_len)
+        npref = _pow2_bucket(
+            max(math.ceil(s.prefix_match.matched_len / ps) for s in group),
+            self.cache.max_pages)
+        tails = np.zeros((rows, tailw), np.int32)
+        tables = np.zeros((rows, npref), np.int32)
+        plens = np.zeros((rows,), np.int32)
+        tlens = np.ones((rows,), np.int32)
+        temps = np.zeros((rows,), np.float32)
+        topk = np.zeros((rows,), np.int32)
+        seeds = np.zeros((rows,), np.uint32)
+        for j, s in enumerate(group):
+            m = s.prefix_match
+            pages = math.ceil(m.matched_len / ps)
+            tables[j, :pages] = self.cache.table[s.slot, :pages]
+            tails[j, : s.prompt_len - m.matched_len] = \
+                s.request.prompt[m.matched_len:]
+            plens[j] = m.matched_len
+            tlens[j] = s.prompt_len - m.matched_len
+            temps[j] = s.request.sampling.temperature
+            topk[j] = s.request.sampling.top_k
+            seeds[j] = s.request.sampling.seed
+
+        dpa = (self.dp if len(self.dp) > 1 else self.dp[0]) if self.mesh else None
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            first, tail_caches = self._prefix_prefill(
+                self.params, self.cache.data,
+                self._put(tables, P(dpa, None)),
+                self._put(tails, P(dpa, None)), self._put(plens, P(dpa)),
+                self._put(tlens, P(dpa)), self._put(temps, P(dpa)),
+                self._put(topk, P(dpa)), self._put(seeds, P(dpa)))
+        jax.block_until_ready((first, tail_caches))
+        # the first tokens exist the moment the dispatch returns — record
+        # them (this is each request's TTFT stamp) BEFORE the tail-KV
+        # scatter and trie adoption, which are cache maintenance the next
+        # decode step needs, not the client
+        first = np.asarray(first)
+        for j, s in enumerate(group):
+            s.append_token(int(first[j]), self.eos_id)
+            slot = s.slot
+            self._tok[slot, 0] = first[j]
+            self._pos[slot] = s.prompt_len
+            self._temps[slot] = temps[j]
+            self._topk[slot] = topk[j]
+            self._seeds[slot] = seeds[j]
+        self.cache.write_tails(
+            [s.slot for s in group], tail_caches,
+            starts=[s.prefix_match.matched_len for s in group],
+            lengths=[s.prompt_len for s in group],
+            rows=list(range(len(group))))
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += int(tlens[: len(group)].sum())
+        self.stats.prefill_dispatches += 1
+        self._adopt_group(group)
+
+    def _adopt_group(self, group: list[Sequence]) -> None:
+        """Adopt each sequence's full prompt pages into the trie right
+        after its prefill and transfer the adopted units from the
+        sequence's admission charge to the trie's residency — the
+        ``reserved + resident`` sum the admission check bounds is exactly
+        conserved."""
+        if self.prefix is None:
+            return
+        for s in group:
+            adopted = self.prefix.adopt(s.request.prompt,
+                                        self.cache.table[s.slot])
+            if adopted:
+                self.scheduler.transfer_to_shared(s, adopted)
 
     # ------------------------------------------------------------- decode --
     def _decode_once(self, active: list[Sequence]) -> None:

@@ -1,0 +1,266 @@
+"""Radix-tree prefix cache over page-aligned prompt prefixes.
+
+Serving workloads share prompt heads — system prompts, few-shot preambles,
+multi-turn history — so storing each prefix's K/V once is the cache-side
+analogue of the paper's butterfly factorization: spend a little index
+structure to buy back the scarce memory.  The trie indexes prompts at
+*page* granularity: every node owns exactly one ``page_size``-token run
+and the physical :class:`~repro.serving.cache.PageAllocator` block holding
+its K/V, and children are keyed by a **stable blake2b digest of the int32
+token bytes** (never Python ``hash()``, which is salted per process — hit
+rates must reproduce across workers and ``PYTHONHASHSEED``).
+
+Reference counting ties the trie to the allocator: a resident node holds
+one reference on its block, every slot mapping the block holds another,
+so ``refcount == 1`` means "trie-only" — exactly the *unreferenced* nodes
+the LRU eviction may return to the pool under admission pressure.  A
+match never hands out blocks without pinning them (``pin`` takes the
+slot's reference up front), so a concurrent eviction can never free a
+block between matching and mapping.
+
+Matching is capped at ``prompt_len - 1`` tokens: at least one tail token
+is always prefilled so the engine has logits to sample the first output
+from.  Fully matched pages are mapped read-only; a partially matched page
+(divergent or cut short by the cap) is surfaced as ``partial_block`` for
+the engine to copy-on-write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Sequence as TypingSequence
+
+import numpy as np
+
+
+def token_digest(tokens: TypingSequence[int]) -> bytes:
+    """Stable 16-byte key for a token-id run: blake2b over the int32 bytes.
+    Identical across processes, platforms, and ``PYTHONHASHSEED``."""
+    arr = np.asarray(list(tokens), np.int32)
+    return hashlib.blake2b(arr.tobytes(), digest_size=16).digest()
+
+
+def _common_prefix_len(a: tuple, b: tuple) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if int(x) != int(y):
+            break
+        n += 1
+    return n
+
+
+class _Node:
+    """One full page of tokens + the pool block holding its K/V."""
+
+    __slots__ = ("tokens", "block", "children", "parent", "key", "last_used")
+
+    def __init__(self, tokens: tuple, block: int, parent, key: bytes,
+                 clock: int):
+        self.tokens = tokens
+        self.block = block
+        self.children: dict[bytes, _Node] = {}
+        self.parent = parent
+        self.key = key
+        self.last_used = clock
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of one trie lookup.  ``matched_len = page_size *
+    len(full_blocks) + partial_len`` tokens, capped at ``prompt_len - 1``.
+    ``pin``/``unpin`` toggle the slot-side allocator references on
+    ``full_blocks`` (+ ``partial_block``); the engine consumes the partial
+    reference via ``PagedSlotCache.cow_block``."""
+
+    matched_len: int
+    full_blocks: list[int]
+    full_nodes: list
+    partial_block: int | None = None
+    partial_len: int = 0
+    partial_node: object = None
+    pinned: bool = False
+
+    @property
+    def full_pages(self) -> int:
+        return len(self.full_blocks)
+
+    @property
+    def blocks(self) -> list[int]:
+        out = list(self.full_blocks)
+        if self.partial_block is not None:
+            out.append(self.partial_block)
+        return out
+
+
+class PrefixCache:
+    """Page-granularity radix trie over a :class:`PagedSlotCache`'s pool.
+
+    The trie holds one allocator reference per resident node, so
+    ``resident_pages`` is exactly the number of pool blocks the cache
+    keeps warm — the scheduler adds it to its admission check and calls
+    :meth:`evict` when a request doesn't fit, which returns unreferenced
+    (refcount == 1) leaf nodes to the pool in LRU order.  Interior nodes
+    and any node a slot still maps are never evicted.
+    """
+
+    def __init__(self, cache) -> None:
+        self.cache = cache
+        self.allocator = cache.allocator
+        self.page_size = int(cache.page_size)
+        self.root = _Node((), 0, None, b"", 0)
+        self._clock = 0
+        self._resident = 0
+        # counters surfaced via /stats
+        self.requests = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.queried_tokens = 0
+        self.adopted_pages = 0
+        self.evicted_pages = 0
+
+    # ------------------------------------------------------------ lookup --
+    def match(self, prompt: TypingSequence[int]) -> PrefixMatch:
+        """Longest cached prefix of ``prompt`` (<= len(prompt) - 1 tokens).
+        Takes no references — call :meth:`pin` before using the blocks."""
+        ps = self.page_size
+        prompt = tuple(int(t) for t in prompt)
+        node, pos = self.root, 0
+        full_blocks: list[int] = []
+        full_nodes: list[_Node] = []
+        # a full-page step must leave at least one tail token to prefill
+        while len(prompt) - pos > ps:
+            child = node.children.get(token_digest(prompt[pos:pos + ps]))
+            if child is None:
+                break
+            full_blocks.append(child.block)
+            full_nodes.append(child)
+            node, pos = child, pos + ps
+        cap = min(ps, len(prompt) - 1 - pos)
+        best, best_r = None, 0
+        if cap > 0 and node.children:
+            rem = prompt[pos:pos + cap]
+            for child in node.children.values():
+                r = _common_prefix_len(child.tokens, rem)
+                if r > best_r:
+                    best, best_r = child, r
+        return PrefixMatch(
+            matched_len=pos + best_r,
+            full_blocks=full_blocks,
+            full_nodes=full_nodes,
+            partial_block=best.block if best is not None else None,
+            partial_len=best_r,
+            partial_node=best)
+
+    def pin(self, m: PrefixMatch) -> None:
+        """Take the slot-side reference on every matched block and bump the
+        path's LRU clocks.  Pinned blocks cannot be evicted (refcount >= 2)
+        and survive trie eviction of their nodes' siblings."""
+        if m.pinned or m.matched_len == 0:
+            m.pinned = m.matched_len > 0
+            return
+        self.allocator.share(m.blocks)
+        self._clock += 1
+        for node in m.full_nodes:
+            node.last_used = self._clock
+        if m.partial_node is not None:
+            m.partial_node.last_used = self._clock
+        m.pinned = True
+
+    def unpin(self, m: PrefixMatch) -> None:
+        """Drop the references :meth:`pin` took (admission backed out)."""
+        if not m.pinned:
+            return
+        self.allocator.release(m.blocks)
+        m.pinned = False
+
+    def note(self, m: PrefixMatch | None, prompt_len: int) -> None:
+        """Record one admitted request against the hit-rate counters."""
+        self.requests += 1
+        self.queried_tokens += int(prompt_len)
+        if m is not None and m.matched_len > 0:
+            self.hits += 1
+            self.hit_tokens += int(m.matched_len)
+
+    # ----------------------------------------------------------- adoption --
+    def adopt(self, prompt: TypingSequence[int], table_row) -> int:
+        """Insert ``prompt``'s full pages after its prefill, adopting the
+        slot's physical blocks (from ``table_row``) for pages the trie does
+        not hold yet.  Each adopted page takes one allocator reference —
+        the trie's own — and returns the number adopted so the scheduler
+        can transfer that many units from the sequence's charge to the
+        trie's residency (the sum is conserved)."""
+        ps = self.page_size
+        prompt = tuple(int(t) for t in prompt)
+        node, adopted = self.root, 0
+        self._clock += 1
+        for p in range(len(prompt) // ps):
+            page = prompt[p * ps:(p + 1) * ps]
+            key = token_digest(page)
+            child = node.children.get(key)
+            if child is None:
+                block = int(table_row[p])
+                if block <= 0:
+                    raise ValueError(
+                        f"page {p} of an adopted prompt is unmapped")
+                child = _Node(page, block, node, key, self._clock)
+                node.children[key] = child
+                self.allocator.share([block])
+                self._resident += 1
+                adopted += 1
+            else:
+                child.last_used = self._clock
+            node = child
+        self.adopted_pages += adopted
+        return adopted
+
+    # ----------------------------------------------------------- eviction --
+    @property
+    def resident_pages(self) -> int:
+        return self._resident
+
+    def evict(self, n_pages: int) -> int:
+        """Return up to ``n_pages`` blocks to the pool by dropping
+        unreferenced (refcount == 1, i.e. trie-only) leaf nodes in LRU
+        order.  Evicting a leaf can expose its parent as the next
+        candidate, so the scan repeats until sated or nothing qualifies."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            for node in self._iter_nodes():
+                if node.children:
+                    continue
+                if self.allocator.refcount(node.block) != 1:
+                    continue
+                if victim is None or node.last_used < victim.last_used:
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            self.allocator.release([victim.block])
+            self._resident -= 1
+            freed += 1
+        self.evicted_pages += freed
+        return freed
+
+    def _iter_nodes(self):
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            yield node
+
+    # -------------------------------------------------------------- stats --
+    def stats(self) -> dict:
+        """Hit-rate counters for ``/stats`` (all plain ints/floats)."""
+        return {
+            "requests": self.requests,
+            "hits": self.hits,
+            "hit_rate": self.hits / self.requests if self.requests else 0.0,
+            "hit_tokens": self.hit_tokens,
+            "queried_tokens": self.queried_tokens,
+            "token_hit_rate": (self.hit_tokens / self.queried_tokens
+                               if self.queried_tokens else 0.0),
+            "resident_pages": self._resident,
+            "adopted_pages": self.adopted_pages,
+            "evicted_pages": self.evicted_pages,
+        }

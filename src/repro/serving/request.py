@@ -87,6 +87,12 @@ class Sequence:
         self.slot: int | None = None
         self.tokens: list[int] = []
         self.finish_reason: FinishReason | None = None
+        # paged-regime accounting: the page units actually charged at
+        # admission (the prefix cache discounts fully shared pages, and
+        # trie adoption transfers units out after prefill) + the trie
+        # match consumed by the prefill path
+        self.charged_units: int | None = None
+        self.prefix_match = None
         self._clock = clock
         self.t_arrival = clock()
         self.t_admitted: float | None = None

@@ -82,6 +82,13 @@ class Scheduler:
         # reserved capacity units: tokens in the fixed regime, pages when
         # page_size is set
         self.reserved_units = 0
+        # optional prefix-cache hook (paged regime only): an object with
+        # match/pin/unpin/note, ``resident_pages`` and ``evict(n)`` —
+        # admission then charges each sequence only its UNSHARED tail and
+        # counts the trie's resident pages against the budget, so
+        # ``reserved_units + resident_pages`` never exceeds ``num_pages``
+        # and lazy block growth still cannot fail
+        self.prefix_hook = None
 
     # ------------------------------------------------------------ units --
     @property
@@ -143,17 +150,42 @@ class Scheduler:
         a prefill before they can decode)."""
         admitted = []
         budget = self.budget
+        hook = self.prefix_hook
         while self.waiting and self._free:
-            need = self.need(self.waiting[0])
-            if budget is not None and self.reserved_units + need > budget:
-                break  # strict FIFO: never admit past a blocked head
+            head = self.waiting[0]
+            match = hook.match(head.request.prompt) if hook is not None \
+                else None
+            need = self.need(head)
+            if match is not None:
+                # fully shared pages are already resident (counted below
+                # via resident_pages); charge only the unshared tail — the
+                # COW copy of a partially matched page stays in the charge
+                need -= match.full_pages
+                # pin BEFORE any eviction below: matched nodes must not be
+                # reclaimed while this admission is deciding to use them
+                hook.pin(match)
+            if budget is not None:
+                resident = hook.resident_pages if hook is not None else 0
+                over = self.reserved_units + need + resident - budget
+                if over > 0 and hook is not None:
+                    hook.evict(over)
+                    resident = hook.resident_pages
+                    over = self.reserved_units + need + resident - budget
+                if over > 0:
+                    if match is not None:
+                        hook.unpin(match)
+                    break  # strict FIFO: never admit past a blocked head
             seq = self.waiting.popleft()
             slot = self._free.pop()
             seq.slot = slot
             seq.state = SequenceState.RUNNING
             seq.t_admitted = seq.now()
+            seq.prefix_match = match
+            seq.charged_units = need
             self.active[slot] = seq
             self.reserved_units += need
+            if hook is not None:
+                hook.note(match, head.prompt_len)
             admitted.append(seq)
         return admitted
 
@@ -163,10 +195,26 @@ class Scheduler:
             raise ValueError(f"{seq.request_id} is not active in slot {seq.slot}")
         del self.active[seq.slot]
         self._free.append(seq.slot)
-        self.reserved_units -= self.need(seq)
+        # release what the sequence is charged NOW: the admission charge
+        # minus any pages since transferred to the prefix trie
+        self.reserved_units -= (seq.charged_units
+                                if seq.charged_units is not None
+                                else self.need(seq))
         seq.slot = None
         seq.state = SequenceState.FINISHED
         seq.t_finished = seq.now()
+
+    def transfer_to_shared(self, seq: Sequence, pages: int) -> None:
+        """Move ``pages`` units of ``seq``'s admission charge to the prefix
+        trie's residency (called after trie adoption).  The trie's
+        ``resident_pages`` grew by the same amount, so the admission-check
+        sum ``reserved_units + resident_pages`` is conserved exactly."""
+        if pages < 0 or seq.charged_units is None or pages > seq.charged_units:
+            raise ValueError(
+                f"{seq.request_id}: cannot transfer {pages} of "
+                f"{seq.charged_units} charged pages")
+        seq.charged_units -= pages
+        self.reserved_units -= pages
 
     # ------------------------------------------------------------- views --
     @property

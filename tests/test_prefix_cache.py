@@ -1,0 +1,358 @@
+"""Refcounted PageAllocator property tests + prefix-trie unit tests.
+
+The allocator suite extends tests/test_paged_cache.py's alloc/free
+interleavings with sharing: hypothesis (seeded-random fallback) drives
+random alloc/share/release sequences against a host-side refcount model
+and asserts, after every transition:
+  * a block is NEVER on the free list while its refcount is > 0 (no free
+    while shared — the abort-survivor bug class),
+  * releasing a freed block raises (no double release),
+  * conservation with sharing: ``num_free + num_live == num_pages`` where
+    ``num_live`` counts UNIQUE live blocks, however many references each
+    holds,
+  * ``refcount`` agrees with the model exactly.
+
+The cache suite checks the copy-on-write contract at the device level: a
+COW copy of a shared block plus tail writes into the copying slot leave
+the original reader's gathered K/V bit-identical.  The trie suite covers
+match/pin/adopt/evict/LRU and the stable blake2b keying (satellite: never
+Python ``hash()``).
+"""
+import random
+
+import pytest
+
+from repro.serving.cache import PageAllocator
+from repro.serving.prefix_cache import PrefixCache, token_digest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+
+# -------------------------------------------------- refcounted allocator ----
+
+
+def _run_shared_ops(num_pages, ops):
+    """Apply (kind, amount) ops — kind 0 alloc, 1 share, 2 release —
+    asserting every refcount invariant along the way."""
+    alloc = PageAllocator(num_pages)
+    refs = {}  # model: block -> count
+    for kind, amount in ops:
+        live = sorted(refs)
+        if kind == 0:
+            n = amount % (num_pages + 2)
+            if n > alloc.num_free:
+                with pytest.raises(MemoryError):
+                    alloc.alloc(n)
+            else:
+                got = alloc.alloc(n)
+                assert not (set(got) & set(live)), (
+                    "allocated a block that still holds references")
+                for p in got:
+                    refs[p] = 1
+        elif kind == 1 and live:
+            p = live[amount % len(live)]
+            alloc.share([p])
+            refs[p] += 1
+        elif kind == 2 and live:
+            p = live[amount % len(live)]
+            alloc.release([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+        # invariants against the model
+        assert alloc.num_live == len(refs), "unique-live count diverged"
+        assert alloc.num_free + alloc.num_live == num_pages, "not conserved"
+        for p in range(1, num_pages + 1):
+            assert alloc.refcount(p) == refs.get(p, 0), f"refcount({p})"
+    # drain: release every remaining reference; blocks free only at zero
+    for p, count in sorted(refs.items()):
+        for i in range(count):
+            alloc.release([p])
+            want = count - 1 - i
+            assert alloc.refcount(p) == want
+            if want > 0:
+                # still referenced: must NOT be allocatable
+                taken = alloc.alloc(alloc.num_free)
+                assert p not in taken
+                alloc.release(taken)
+    assert alloc.num_free == num_pages
+    # no dangling reference resurrects: a full drain reallocates everything
+    assert sorted(alloc.alloc(num_pages)) == list(range(1, num_pages + 1))
+
+
+if HAVE_HYPOTHESIS:
+    @given(num_pages=st.integers(1, 32),
+           ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 200)),
+                        max_size=60))
+    @settings(max_examples=200, deadline=None)
+    def test_refcount_invariants_hypothesis(num_pages, ops):
+        _run_shared_ops(num_pages, ops)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_refcount_invariants_seeded(trial):
+    rng = random.Random(1000 + trial)
+    num_pages = rng.randint(1, 32)
+    ops = [(rng.randint(0, 2), rng.randint(0, 200))
+           for _ in range(rng.randint(0, 60))]
+    _run_shared_ops(num_pages, ops)
+
+
+def test_shared_block_survives_one_release():
+    """The abort-survivor scenario in miniature: two holders, one lets go,
+    the block must stay live for the other."""
+    alloc = PageAllocator(4)
+    (p,) = alloc.alloc(1)
+    alloc.share([p])
+    assert alloc.refcount(p) == 2
+    alloc.release([p])  # first reader aborts
+    assert alloc.refcount(p) == 1
+    assert alloc.num_live == 1, "block freed while still shared"
+    assert p not in alloc.alloc(alloc.num_free), "shared block re-handed out"
+
+
+def test_release_and_share_validations():
+    alloc = PageAllocator(4)
+    (p,) = alloc.alloc(1)
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.share([p + 1])  # never allocated
+    with pytest.raises(ValueError, match="duplicate"):
+        alloc.release([p, p])
+    alloc.release([p])
+    with pytest.raises(ValueError, match="not allocated"):
+        alloc.release([p])  # double release
+    # free is an alias of release: same refcount semantics
+    (q,) = alloc.alloc(1)
+    alloc.share([q])
+    alloc.free([q])
+    assert alloc.refcount(q) == 1
+
+
+# ----------------------------------------------------------------- digest ----
+
+
+def test_token_digest_is_stable_across_int_types():
+    import numpy as np
+
+    base = token_digest([3, 1, 4, 1, 5])
+    assert token_digest((3, 1, 4, 1, 5)) == base
+    assert token_digest(np.asarray([3, 1, 4, 1, 5], np.int64)) == base
+    assert token_digest(np.asarray([3, 1, 4, 1, 5], np.int32)) == base
+    assert token_digest([3, 1, 4, 1, 6]) != base
+    assert token_digest([3, 1, 4, 1]) != base
+    assert len(base) == 16
+
+
+# ------------------------------------------------------------------- trie ----
+
+
+MAX_LEN, PAGE = 12, 4
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+
+    cfg = reduced(get_config("qwen3-4b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _cache(cfg, num_pages=9, num_slots=3):
+    from repro.serving import PagedSlotCache
+
+    return PagedSlotCache(cfg, num_slots=num_slots, max_len=MAX_LEN,
+                          num_pages=num_pages, page_size=PAGE)
+
+
+def _prefill_into(cfg, params, cache, slot, prompt):
+    import jax.numpy as jnp
+    from repro.models import prefill
+
+    toks = jnp.asarray([list(prompt)], jnp.int32)
+    _, dense = prefill(params, cfg, toks, MAX_LEN)
+    cache.insert([slot], dense, lengths=[len(prompt)])
+    return dense
+
+
+def test_trie_match_adopt_and_matched_len_cap(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    prompt = tuple(range(10, 19))  # 9 tokens: 2 full pages + 1 partial
+    _prefill_into(cfg, params, cache, 0, prompt)
+    assert trie.adopt(prompt, cache.table[0]) == 2  # only FULL pages enter
+    assert trie.resident_pages == 2
+
+    # same head, longer prompt: both full pages match
+    m = trie.match(prompt + (99, 98))
+    assert m.matched_len == 2 * PAGE and m.full_pages == 2
+    assert m.full_blocks == [int(b) for b in cache.table[0][:2]]
+    # the EXACT adopted prompt: cap at len - 1 forces the second page to
+    # surface as a partial (3-token) match, never a full 8-token one
+    m = trie.match(prompt[:8])
+    assert m.matched_len == 7
+    assert m.full_pages == 1 and m.partial_len == 3
+    assert m.partial_block == int(cache.table[0][1])
+    # diverging first token: no match at all
+    m = trie.match((999,) + prompt[1:])
+    assert m.matched_len == 0 and m.full_pages == 0
+    # re-adopting the same prompt is a no-op (pages already resident)
+    assert trie.adopt(prompt, cache.table[0]) == 0
+
+
+def test_trie_partial_match_picks_longest_child(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    a = (1, 2, 3, 4, 5)   # page (1,2,3,4)
+    b = (1, 2, 9, 9, 5)   # page (1,2,9,9): shares 2 tokens with the query
+    _prefill_into(cfg, params, cache, 0, a)
+    _prefill_into(cfg, params, cache, 1, b)
+    trie.adopt(a, cache.table[0])
+    trie.adopt(b, cache.table[1])
+    m = trie.match((1, 2, 3, 9, 7))  # 3 common with a's page, 2 with b's
+    assert m.partial_len == 3 and m.partial_block == int(cache.table[0][0])
+
+
+def test_pin_unpin_toggle_allocator_references(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    prompt = tuple(range(1, 10))
+    _prefill_into(cfg, params, cache, 0, prompt)
+    trie.adopt(prompt, cache.table[0])
+    blocks = [int(b) for b in cache.table[0][:2]]
+    cache.evict([0])  # slot lets go; trie's refs keep the pages live
+    assert all(cache.allocator.refcount(b) == 1 for b in blocks)
+
+    m = trie.match(prompt + (50,))
+    trie.pin(m)
+    assert all(cache.allocator.refcount(b) == 2 for b in blocks)
+    trie.pin(m)  # idempotent: no double reference
+    assert all(cache.allocator.refcount(b) == 2 for b in blocks)
+    trie.unpin(m)
+    assert all(cache.allocator.refcount(b) == 1 for b in blocks)
+    trie.unpin(m)  # idempotent as well
+    assert all(cache.allocator.refcount(b) == 1 for b in blocks)
+    # a zero-length match pins nothing
+    m0 = trie.match((777, 778))
+    trie.pin(m0)
+    assert all(cache.allocator.refcount(b) == 1 for b in blocks)
+
+
+def test_evict_lru_leaf_only_then_exposed_parent(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    prompt = tuple(range(1, 10))  # pages (1..4) -> (5..8), a 2-node chain
+    _prefill_into(cfg, params, cache, 0, prompt)
+    trie.adopt(prompt, cache.table[0])
+    parent_b, leaf_b = int(cache.table[0][0]), int(cache.table[0][1])
+    cache.evict([0])
+
+    # one page of pressure: only the LEAF qualifies (the parent is interior)
+    assert trie.evict(1) == 1
+    assert trie.resident_pages == 1
+    assert cache.allocator.refcount(leaf_b) == 0
+    assert cache.allocator.refcount(parent_b) == 1
+    # the parent is now an evictable leaf
+    assert trie.evict(5) == 1  # asked for 5, only 1 qualifies
+    assert trie.resident_pages == 0
+    assert cache.allocator.refcount(parent_b) == 0
+    assert trie.evicted_pages == 2
+
+
+def test_evict_skips_pinned_and_slot_mapped_nodes(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    held = tuple(range(1, 6))    # 1 full page, kept mapped by slot 0
+    loose = tuple(range(40, 45))  # 1 full page, trie-only
+    _prefill_into(cfg, params, cache, 0, held)
+    _prefill_into(cfg, params, cache, 1, loose)
+    trie.adopt(held, cache.table[0])
+    trie.adopt(loose, cache.table[1])
+    held_b, loose_b = int(cache.table[0][0]), int(cache.table[1][0])
+    cache.evict([1])  # loose page becomes refcount-1 (trie-only)
+
+    assert trie.evict(10) == 1  # only the loose page may go
+    assert cache.allocator.refcount(loose_b) == 0
+    assert cache.allocator.refcount(held_b) == 2  # slot + trie, untouched
+    assert trie.resident_pages == 1
+
+
+def test_evict_lru_order_tracks_pin_recency(paged_setup):
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    old = tuple(range(1, 6))
+    new = tuple(range(60, 65))
+    _prefill_into(cfg, params, cache, 0, old)
+    _prefill_into(cfg, params, cache, 1, new)
+    trie.adopt(old, cache.table[0])
+    trie.adopt(new, cache.table[1])  # adopted later: younger by clock
+    old_b, new_b = int(cache.table[0][0]), int(cache.table[1][0])
+    cache.evict([0])
+    cache.evict([1])
+    # touch OLD via a pin: it becomes the most recently used
+    m = trie.match(old + (9,))
+    trie.pin(m)
+    trie.unpin(m)
+    assert trie.evict(1) == 1
+    assert cache.allocator.refcount(new_b) == 0, "evicted the recently used"
+    assert cache.allocator.refcount(old_b) == 1
+
+
+# ------------------------------------------------------------------- COW ----
+
+
+def test_cow_never_mutates_the_shared_block(paged_setup):
+    """Device-level COW contract: after a second slot COWs a shared partial
+    page and overwrites its own copy's rows, the ORIGINAL slot's gathered
+    K/V is bit-identical to before."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import prefill
+
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    prompt = tuple(range(1, 7))  # 6 tokens: 1 full + 1 partial page
+    dense = _prefill_into(cfg, params, cache, 0, prompt)
+    del dense
+    full_b, part_b = int(cache.table[0][0]), int(cache.table[0][1])
+    snap = jax.tree.map(jnp.copy, cache.gather_slot(0, 6))
+
+    # a "hit" on slot 1: share both pages (the pin), map the full one,
+    # COW the partial one
+    cache.allocator.share([full_b, part_b])
+    cache.map_prefix(1, [full_b])
+    new_b = cache.cow_block(1, 1, part_b)
+    assert new_b != part_b
+    assert cache.allocator.refcount(part_b) == 1  # pin consumed, slot 0 only
+    assert cache.allocator.refcount(full_b) == 2  # both slots read it
+
+    # slot 1 diverges at position 5 (it matched 4 full-page tokens + 1 of
+    # the partial page): overwrite positions [5, 8) of ITS copy with its
+    # own prompt's rows
+    other = (1, 2, 3, 4, 5, 50, 51, 52)  # shares the first 5 tokens
+    _, od = prefill(params, cfg, jnp.asarray([other], jnp.int32), MAX_LEN)
+    tails = tuple({k: v[:, :, 5:8] for k, v in leaf.items()}
+                  if isinstance(leaf, dict) else leaf for leaf in od)
+    cache.write_tails([1], tails, starts=[5], lengths=[8])
+
+    # the shared reader is bit-for-bit untouched
+    got = cache.gather_slot(0, 6)
+    assert all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(snap), jax.tree.leaves(got)))
+    # and the COW copy still carries slot 0's matched partial-page row
+    # (position 4) ahead of slot 1's own divergent tail
+    got1 = cache.gather_slot(1, 8)
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(got1)):
+        assert bool(jnp.array_equal(a[:, :, 4:5], b[:, :, 4:5]))

@@ -1,0 +1,253 @@
+"""Golden prefix-cache parity: the radix-trie engine must be token-for-
+token equal to the uncached paged engine (itself parity-tested against the
+fixed engine and the seed loop) for dense / butterfly / mixed policies,
+greedy and sampled, on one device and on a 2x2 mesh (subprocess).
+
+Also covers the refcount lifecycle end to end:
+  * abort-survivor regression (satellite): aborting one of two sequences
+    reading the same shared pages must not free them under the survivor,
+  * admission charges only the unshared tail of a hit, and the invariant
+    ``reserved_units + resident_pages <= num_pages`` holds at every step,
+  * trie eviction under admission pressure frees exactly the unreferenced
+    pages a blocked head needs,
+  * at drain the pool holds exactly the trie's resident pages and the
+    scheduler's page accounting returns to zero.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import recommended_policy
+from repro.core.policy import uniform_policy
+from repro.models import init_params
+from repro.serving import Engine, Request, SamplingParams
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH = "qwen3-4b"
+PAGE = 4
+PRE, TAIL, MAX_NEW = 8, 3, 4   # prefix = 2 full pages; 11-token prompts
+MAX_LEN = PRE + TAIL + MAX_NEW  # 15: non-pow2 on purpose
+
+pytestmark = pytest.mark.slow
+
+
+def _cfg(policy_name: str):
+    cfg = reduced(get_config(ARCH))
+    if policy_name == "butterfly":
+        cfg = cfg.with_fact(uniform_policy("butterfly", block_size=16))
+    elif policy_name == "mixed":
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+    else:
+        assert policy_name == "dense"
+    return cfg
+
+
+def _shared_prefix_requests(cfg, seed=42, n=3, sampling=None):
+    """n requests sharing a PRE-token head, each with its own TAIL."""
+    rng = np.random.default_rng(seed)
+    prefix = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, PRE))
+    return [Request(f"r{i}",
+                    prefix + tuple(int(x) for x in
+                                   rng.integers(0, cfg.vocab_size, TAIL)),
+                    MAX_NEW, sampling=sampling or SamplingParams())
+            for i in range(n)]
+
+
+def _engines(cfg, params, prefix: bool, **kw):
+    return Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=PAGE,
+                  num_pages=24, prefix_cache=prefix, **kw)
+
+
+@pytest.mark.parametrize("policy_name", ["dense", "butterfly", "mixed"])
+def test_prefix_engine_matches_uncached_and_fixed(policy_name):
+    """Sequential requests sharing a prompt head: request 0 misses and
+    populates the trie, requests 1..n-1 hit and skip the shared prefill —
+    every stream bit-identical to the uncached paged AND fixed engines."""
+    cfg = _cfg(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _shared_prefix_requests(cfg)
+
+    fixed = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+    ref_fixed = [fixed.run([r])[0].tokens for r in reqs]
+    plain = _engines(cfg, params, prefix=False)
+    ref = [plain.run([r])[0].tokens for r in reqs]
+    assert ref == ref_fixed  # paged-vs-fixed parity is the baseline
+
+    eng = _engines(cfg, params, prefix=True)
+    outs = [eng.run([r])[0].tokens for r in reqs]
+    for i, (got, want) in enumerate(zip(outs, ref)):
+        assert got == want, f"{policy_name}: request {i} diverged cached"
+    st = eng.prefix.stats()
+    assert st["requests"] == len(reqs)
+    assert st["hits"] == len(reqs) - 1, "later requests must hit the trie"
+    assert st["hit_tokens"] == (len(reqs) - 1) * PRE
+    assert eng.decode_compile_count() in (None, 1)
+    # drain: only the trie's residency is live, accounting back to zero
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+
+
+def test_prefix_parity_same_wave_and_sampled():
+    """Hits inside one admission wave (both slots prefill together, the
+    second wave hits the pages the first adopted) and a sampled stream
+    (temperature/top_k/seed): both bit-identical to the uncached engine."""
+    cfg = _cfg("mixed")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sampling = SamplingParams(temperature=0.8, top_k=8, seed=123)
+    reqs = _shared_prefix_requests(cfg, seed=7, n=4, sampling=sampling)
+
+    plain = _engines(cfg, params, prefix=False)
+    ref = [o.tokens for o in plain.run(reqs)]
+    eng = _engines(cfg, params, prefix=True)
+    outs = [o.tokens for o in eng.run(reqs)]  # waves of 2 across 2 slots
+    assert outs == ref
+    # the first wave all missed; at least the second wave hit
+    assert eng.prefix.stats()["hits"] >= 2
+    assert eng.decode_compile_count() in (None, 1)
+
+
+def test_abort_one_sharer_never_frees_the_survivors_pages():
+    """Satellite regression: two RUNNING sequences read the same shared
+    prefix pages; aborting one mid-decode must release only ITS references
+    — the survivor keeps decoding on live pages, token-for-token equal to
+    its uncached run."""
+    cfg = _cfg("dense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _shared_prefix_requests(cfg, seed=3, n=3)
+    seed_miss, victim, survivor = reqs
+
+    plain = _engines(cfg, params, prefix=False)
+    ref = plain.run([survivor])[0].tokens
+
+    eng = _engines(cfg, params, prefix=True)
+    eng.run([seed_miss])  # populate the trie
+    eng.submit(victim)
+    surv_seq = eng.submit(survivor)
+    eng.step()  # prefill: both hit, both map the shared pages
+    assert all(s.prefix_match.matched_len == PRE
+               for s in eng.scheduler.active.values())
+    shared = [b for b in
+              {int(b) for s in eng.scheduler.active.values()
+               for b in eng.cache.table[s.slot][:PRE // PAGE]}]
+    assert all(eng.cache.allocator.refcount(b) == 3 for b in shared), (
+        "trie + two readers must each hold a reference")
+    eng.step()  # one decode step for both
+    eng.abort(victim.request_id)
+    for b in shared:
+        assert eng.cache.allocator.refcount(b) == 2, (
+            "abort of one sharer dropped the survivor's/trie's reference")
+    while eng.scheduler.has_work:
+        eng.step()
+    assert surv_seq.to_output().tokens == ref, (
+        "survivor diverged after the sharer's abort")
+    for b in shared:
+        assert eng.cache.allocator.refcount(b) == 1  # trie-only again
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+
+
+def test_admission_charges_only_the_unshared_tail():
+    """A hit's admission charge must exclude its fully shared pages, and
+    ``reserved_units + resident_pages`` never exceeds the pool."""
+    cfg = _cfg("dense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _shared_prefix_requests(cfg, seed=11, n=2)
+    eng = _engines(cfg, params, prefix=True)
+    eng.run([reqs[0]])
+    # the miss charged every page, then transferred the adopted ones
+    full_need = -(-(PRE + TAIL + MAX_NEW) // PAGE)
+    assert eng.prefix.resident_pages == PRE // PAGE
+    assert eng.scheduler.reserved_units == 0
+
+    eng.submit(reqs[1])
+    eng.step()  # prefill the hit
+    (seq,) = eng.scheduler.active.values()
+    assert seq.prefix_match.matched_len == PRE
+    # charged = worst case minus the PRE // PAGE fully shared pages, minus
+    # anything adoption has since transferred to the trie
+    assert seq.charged_units <= full_need - PRE // PAGE
+    assert (eng.scheduler.reserved_units + eng.prefix.resident_pages
+            <= eng.scheduler.num_pages)
+    while eng.scheduler.has_work:
+        eng.step()
+    assert eng.scheduler.reserved_units == 0
+
+
+def test_trie_eviction_under_admission_pressure():
+    """A pool sized so a non-matching request fits ONLY if the trie gives
+    pages back: admission evicts unreferenced LRU pages, the request runs,
+    and its tokens are unaffected."""
+    cfg = _cfg("dense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)  # NOT the trie seed: must match nothing
+    other = Request("big", tuple(int(x) for x in
+                                 rng.integers(0, cfg.vocab_size, PRE + TAIL)),
+                    MAX_NEW)
+    plain = Engine(params, cfg, max_len=MAX_LEN, num_slots=1, page_size=PAGE,
+                   num_pages=5)
+    ref = plain.run([other])[0].tokens
+
+    eng = Engine(params, cfg, max_len=MAX_LEN, num_slots=1, page_size=PAGE,
+                 num_pages=5, prefix_cache=True)
+    seedreq = _shared_prefix_requests(cfg, seed=5)[0]
+    eng.run([seedreq])
+    assert eng.prefix.resident_pages == 2  # trie holds the seed's prefix
+    # "big" needs ceil(15/4) = 4 of 5 pages and matches nothing: the trie
+    # must give one back for it to admit
+    out = eng.run([other])[0]
+    assert out.tokens == ref
+    assert eng.prefix.stats()["evicted_pages"] >= 1
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+
+
+@pytest.mark.mesh
+def test_mesh_prefix_engine_matches_single_device():
+    """Prefix-cache engine on a 2x2 ("data", "model") mesh: shared pages
+    in the sharded pool, tail prefill dispatched across the mesh — token-
+    for-token equal to the single-device uncached engine, decode compiled
+    once (subprocess: the main process is pinned to 1 device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.configs.base import recommended_policy
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models import init_params
+        from repro.serving import Engine, Request
+
+        cfg = reduced(get_config('qwen3-4b'))
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(42)
+        prefix = tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 8))
+        reqs = lambda: [Request(f'r{i}', prefix + tuple(
+                            int(x) for x in rng.integers(0, cfg.vocab_size, 3)),
+                            4) for i in range(3)]
+
+        batch = reqs()
+        single = Engine(params, cfg, max_len=15, num_slots=2, page_size=4)
+        ref = [single.run([r])[0].tokens for r in batch]
+
+        mesh = make_debug_mesh(2, 2)
+        eng = Engine(params, cfg, max_len=15, num_slots=2, page_size=4,
+                     num_pages=24, mesh=mesh, prefix_cache=True)
+        outs = [eng.run([r])[0].tokens for r in batch]
+        assert outs == ref, (outs, ref)
+        assert eng.prefix.stats()['hits'] == 2
+        assert eng.decode_compile_count() in (None, 1)
+        assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+        print('MESH_PREFIX_OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH_PREFIX_OK" in out.stdout
