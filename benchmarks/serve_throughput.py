@@ -20,6 +20,15 @@ Rows (trajectory JSONs track these):
                             via Engine.submit/step), same engine shape,
                             decode compiled exactly once; also reports the
                             streamed requests' TTFT/ITL aggregates
+  serve/overcommit/admission — heavy-tailed length mix on a pool at a
+                            fraction of the worst-case demand: peak
+                            concurrent SHORT requests while a long one is
+                            running, worst-case reservation vs overcommit
+                            + preemption (asserts >= --min-overcommit-ratio,
+                            bit-exact parity against an unpressured
+                            reference, >= 1 preemption, zero deadlocks, and
+                            decode compiled exactly once across preemption
+                            cycles)
 
 The acceptance bars are engine prefill >= 3x seed prefill tokens/sec on a
 reduced config, (with --paged) the paged admission ratio, and (with
@@ -348,6 +357,102 @@ def run_shared_prefix(arch: str = "qwen3-4b", prefix_len: int = 192,
             "ttft_ratio": ratio, "decode_compiles": compiles}
 
 
+def run_overcommit(arch: str = "qwen3-4b", page_size: int = 4,
+                   swap: bool = False) -> dict:
+    """What optimistic admission buys a heavy-tailed length mix.
+
+    One long request (worst case 10 pages), four shorts (3 pages each),
+    then a second long — a 12-page pool at well under the 28-page
+    worst-case demand.  Worst-case reservation admits the first long
+    alone (10/12 pages) and the strict-FIFO queue blocks behind it: ZERO
+    shorts run beside it.  Overcommit charges current footprint + a
+    fraction of the growth, so shorts run concurrently with the long
+    from the start; when the long's true footprint catches up the engine
+    preempts the youngest sequence and recomputes it later (or restores
+    it from a host swap with ``swap=True``) — bit-exactly, without ever
+    recompiling the decode step.  The measured ratio is the peak number
+    of concurrently RUNNING shorts while a long is running, overcommit
+    vs worst-case (floored at 1)."""
+    section(f"page overcommit: {arch} reduced, page_size={page_size}, "
+            f"swap={swap}")
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ps, prompt_len = page_size, 2 * page_size
+    max_new_long, max_new_short = 32, 4
+    max_len = prompt_len + max_new_long  # 40: long worst case = 10 pages
+    slots, pool = 6, 12
+
+    def reqs():
+        rng = np.random.default_rng(0)  # identical prompts every call
+        mk = lambda: tuple(int(x)
+                           for x in rng.integers(0, cfg.vocab_size,
+                                                 prompt_len))
+        out = [Request("long-0", mk(), max_new_long)]
+        out += [Request(f"short-{i}", mk(), max_new_short) for i in range(4)]
+        out.append(Request("long-1", mk(), max_new_long))
+        return out
+
+    def drive(engine):
+        """submit/step loop; returns (outputs, peak shorts beside a long,
+        steps).  The step bound converts a scheduling deadlock into a
+        failure instead of a hang."""
+        batch = reqs()
+        seqs = [engine.submit(r) for r in batch]
+        peak, steps, max_steps = 0, 0, 60 * len(batch) + 200
+        while engine.scheduler.has_work:
+            steps += 1
+            if steps > max_steps:
+                raise SystemExit(
+                    f"overcommit drain exceeded {max_steps} steps: deadlock")
+            engine.step()
+            active = list(engine.scheduler.active.values())
+            if any(s.request_id.startswith("long") for s in active):
+                peak = max(peak, sum(
+                    1 for s in active if s.request_id.startswith("short")))
+        return {s.request_id: tuple(s.tokens) for s in seqs}, peak, steps
+
+    # unpressured reference: pool big enough to never preempt
+    ref = Engine(params, cfg, max_len=max_len, num_slots=slots,
+                 page_size=ps, num_pages=64)
+    ref_out, _, _ = drive(ref)
+    # worst-case reservation on the pressure pool
+    wc = Engine(params, cfg, max_len=max_len, num_slots=slots,
+                page_size=ps, num_pages=pool)
+    wc_out, wc_peak, _ = drive(wc)
+    # overcommitted admission on the SAME pool, backed by preemption
+    oc = Engine(params, cfg, max_len=max_len, num_slots=slots,
+                page_size=ps, num_pages=pool, overcommit=4.0, swap=swap)
+    oc_out, oc_peak, oc_steps = drive(oc)
+
+    if wc_out != ref_out:
+        raise SystemExit("worst-case pressure run diverged from reference")
+    if oc_out != ref_out:
+        raise SystemExit(
+            "preempted-then-resumed tokens diverge from the uninterrupted "
+            "reference — recompute/restore parity is broken")
+    if oc.stats.preemptions < 1:
+        raise SystemExit("pressure pool never preempted: the bar measured "
+                         "nothing (shrink the pool or raise overcommit)")
+    compiles = oc.decode_compile_count()
+    if compiles is not None and compiles != 1:
+        raise SystemExit(
+            f"decode recompiled across preemption cycles: {compiles} "
+            "compilations (expected 1)")
+    if oc.cache.allocator.num_live != 0 or oc.scheduler.reserved_units != 0:
+        raise SystemExit("pool/accounting not drained after the run")
+
+    ratio = oc_peak / max(1, wc_peak)
+    emit(f"serve/overcommit/admission/{arch}", 0.0,
+         f"pool_pages={pool};wc_peak_shorts={wc_peak};"
+         f"oc_peak_shorts={oc_peak};ratio={ratio:.2f};"
+         f"preemptions={oc.stats.preemptions};recomputed={oc.stats.recomputed};"
+         f"swapped={oc.stats.swapped_out};steps={oc_steps};"
+         f"decode_compiles={compiles}")
+    return {"ratio": ratio, "wc_peak": wc_peak, "oc_peak": oc_peak,
+            "preemptions": oc.stats.preemptions,
+            "decode_compiles": compiles}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -383,6 +488,19 @@ def main():
     ap.add_argument("--min-prefix-ttft-ratio", type=float, default=3.0,
                     help="fail (exit 1) if the shared-prefix request's TTFT "
                          "is not at least this many times better than cold")
+    ap.add_argument("--overcommit", action="store_true",
+                    help="also run the overcommit mode: peak short-request "
+                         "concurrency beside a long request on a pressure "
+                         "pool, optimistic admission + preemption vs "
+                         "worst-case reservation, with bit-exact parity and "
+                         "zero-recompile checks")
+    ap.add_argument("--swap", action="store_true",
+                    help="with --overcommit: resume preempted sequences from "
+                         "a host swap instead of drop-and-recompute")
+    ap.add_argument("--min-overcommit-ratio", type=float, default=1.3,
+                    help="fail (exit 1) if overcommit admits fewer than this "
+                         "multiple of the worst-case plan's concurrent "
+                         "shorts")
     args = ap.parse_args()
     r = run(args.arch, args.batch, args.prompt_len, args.max_new,
             args.dp, args.tp)
@@ -408,6 +526,13 @@ def main():
               f"hit {x['ttft_hit']:.4f}s = {x['ttft_ratio']:.2f}x "
               f"(bar: {args.min_prefix_ttft_ratio:.1f}x)")
         ok = ok and x["ttft_ratio"] >= args.min_prefix_ttft_ratio
+    if args.overcommit:
+        o = run_overcommit(args.arch, swap=args.swap)
+        print(f"overcommit admission: worst-case {o['wc_peak']} vs "
+              f"overcommitted {o['oc_peak']} concurrent shorts = "
+              f"{o['ratio']:.2f}x (bar: {args.min_overcommit_ratio:.1f}x), "
+              f"{o['preemptions']} preemptions")
+        ok = ok and o["ratio"] >= args.min_overcommit_ratio
     if not ok:
         raise SystemExit(1)
 

@@ -81,6 +81,11 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
     if prefix and page_size is None:
         raise SystemExit("--prefix-cache needs the paged KV cache; drop "
                          "--fixed-slots / set --page-size")
+    overcommit = float(getattr(args, "overcommit", 1.0) or 1.0)
+    swap = bool(getattr(args, "swap", False))
+    if (overcommit > 1.0 or swap) and page_size is None:
+        raise SystemExit("--overcommit/--swap need the paged KV cache; drop "
+                         "--fixed-slots / set --page-size")
     try:
         if args.memory_budget_mb:  # derived sizing; explicit flags conflict
             if args.slots or args.token_budget:
@@ -88,7 +93,8 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                                  "budget; drop --slots/--token-budget")
             budget = int(args.memory_budget_mb * 1e6)
             plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
-                                      page_size=page_size)
+                                      page_size=page_size,
+                                      overcommit=overcommit)
             log.info("plan (per device): params %.2f MB, kv %.2f MB, "
                      "%d slots x %d shards -> %d total, token budget %s"
                      "%s",
@@ -105,11 +111,13 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                                         else plan.token_budget),
                           page_size=plan.page_size,
                           num_pages=plan.num_pages, mesh=mesh,
-                          prefix_cache=prefix)
+                          prefix_cache=prefix, overcommit=overcommit,
+                          swap=swap)
         return Engine(params, cfg, max_len=max_len,
                       num_slots=(args.slots or min(args.batch, 8)),
                       token_budget=args.token_budget or None,
-                      page_size=page_size, mesh=mesh, prefix_cache=prefix)
+                      page_size=page_size, mesh=mesh, prefix_cache=prefix,
+                      overcommit=overcommit, swap=swap)
     except ValueError as e:
         # e.g. --prefix-cache on a recurrent arch (needs pure attention)
         raise SystemExit(str(e))
@@ -206,6 +214,14 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             "waiting": len(engine.scheduler.waiting),
             "free_slots": engine.scheduler.free_slots,
         },
+        # overcommit/preemption counters (all zero at overcommit 1.0)
+        "preemption": {
+            "overcommit": engine.overcommit,
+            "preemptions": st.preemptions,
+            "recomputed": st.recomputed,
+            "swapped_out": st.swapped_out,
+            "swapped_in": st.swapped_in,
+        },
         "completed": len(done),
         # trie hit-rate counters; None when --prefix-cache is off
         "prefix_cache": (engine.prefix.stats()
@@ -232,6 +248,8 @@ def healthz_payload(engine: Engine) -> dict:
         "active": len(engine.scheduler.active),
         "waiting": len(engine.scheduler.waiting),
         "free_pages": alloc.num_free if alloc is not None else None,
+        # a router can weigh preemption churn when picking a replica
+        "preemptions": engine.stats.preemptions,
     }
 
 
@@ -415,6 +433,15 @@ def main():
                     help="radix-tree prefix cache over the paged pool: "
                          "repeated prompt heads skip prefill (needs "
                          "--page-size, conflicts with --fixed-slots)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="page overcommit factor >= 1.0: admission charges "
+                         "current footprints instead of worst cases; pool "
+                         "exhaustion preempts the youngest sequence "
+                         "(drop-and-recompute, or --swap)")
+    ap.add_argument("--swap", action="store_true",
+                    help="undo preemptions by restoring the victim's KV "
+                         "blocks from a host copy instead of recomputing "
+                         "them (pinned host memory when available)")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
                          "budget (params priced under the active policy; "

@@ -10,7 +10,13 @@ from repro.serving.budget import (
     plan_engine_report,
     slot_state_bytes,
 )
-from repro.serving.cache import PageAllocator, PagedSlotCache, SlotCache
+from repro.serving.cache import (
+    PageAllocator,
+    PagedSlotCache,
+    PoolExhausted,
+    SlotCache,
+    SwapState,
+)
 from repro.serving.engine import Engine, EngineStats
 from repro.serving.events import StepEvent, TokenDelta
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch, token_digest
@@ -35,6 +41,7 @@ __all__ = [
     "FinishReason",
     "PageAllocator",
     "PagedSlotCache",
+    "PoolExhausted",
     "PrefixCache",
     "PrefixMatch",
     "Request",
@@ -45,6 +52,7 @@ __all__ = [
     "SequenceState",
     "SlotCache",
     "StepEvent",
+    "SwapState",
     "TokenDelta",
     "cache_bytes_per_token",
     "make_requests",

@@ -114,6 +114,10 @@ class AsyncEngine:
     def _fan_out(self, events: list[TokenDelta]) -> None:
         # runs on the event loop thread; queues were registered there too
         for ev in events:
+            if ev.token is None and ev.finish_reason is None:
+                # informational (preemption) — the sequence will resume and
+                # re-deliver real deltas; clients see an unchanged stream
+                continue
             q = self._queues.get(ev.request_id)
             if q is not None:
                 q.put_nowait(ev)

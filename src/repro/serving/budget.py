@@ -131,6 +131,7 @@ class EnginePlan:
     slot_state_bytes_per_device: int
     page_size: int | None = None
     num_pages: int | None = None
+    overcommit: float = 1.0
 
 
 def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
@@ -138,7 +139,8 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
                        max_slots: int = 256,
                        mesh=None, dp: tuple[str, ...] = ("data",),
                        fsdp: bool | None = None,
-                       page_size: int | None = None) -> EnginePlan:
+                       page_size: int | None = None,
+                       overcommit: float = 1.0) -> EnginePlan:
     """Full per-device budget breakdown; ``plan_engine`` is the tuple view.
 
     Fixed-slot regime (``page_size=None``): slots are sized for
@@ -167,6 +169,15 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
     idle pool capacity for hit rate rather than consuming a separate
     budget (DESIGN.md section 12).
 
+    ``overcommit`` (paged regime only, >= 1.0) scales the SLOT count: at
+    1.0 a plan sizes slots so every admitted sequence could reserve its
+    worst case; above it, slots are multiplied by the factor — admission
+    charges current footprints instead of worst cases (the scheduler's
+    ``overcommit``), so more sequences fit the same pool, backed by the
+    engine's preemption path when the gamble loses.  Fixed per-slot state
+    stays physical (never overcommitted): the slot count is capped so the
+    recurrent state plus at least one pool block still fit.
+
     The token budget is ``None`` (unlimited) for recurrent stacks whose
     per-slot state is O(1) — paging is a no-op there and the plan falls
     back to the fixed regime.  With a mesh the budget is per-device and
@@ -174,6 +185,8 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
     the scheduler enforces the total, relying on the slot axis (and the
     paged pool's block axis) being evenly sharded over "data".
     """
+    if overcommit < 1.0:
+        raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
     mean = mean_seq_tokens or max(1, max_len // 2)
     dp_size = axes_product(mesh, dp) if mesh is not None else 1
     pb = param_bytes(cfg, mesh=mesh, fsdp=fsdp)
@@ -206,9 +219,16 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
                 f"scratch block plus one minimal paged sequence "
                 f"({fixed + 2 * page_bytes} B) on each device")
         # each admitted sequence needs its fixed state + >= 1 block; the
-        # pool, not a per-slot stripe, is what the remaining bytes buy
-        local_slots = max(1, min(cap,
-                                 (avail - scratch) // (fixed + page_bytes)))
+        # pool, not a per-slot stripe, is what the remaining bytes buy.
+        # overcommit multiplies the slot count (more concurrent sequences
+        # admitted against current footprints), but fixed slot state is
+        # physical — cap so it plus one block still fit the budget.
+        local_slots = (avail - scratch) // (fixed + page_bytes)
+        local_slots = int(local_slots * overcommit)
+        if fixed > 0:
+            local_slots = min(local_slots,
+                              (avail - scratch - page_bytes) // fixed)
+        local_slots = max(1, min(cap, local_slots))
         local_pages = int((avail - scratch - local_slots * fixed)
                           // page_bytes)
         max_pages_per_seq = math.ceil(max_len / page_size)
@@ -218,7 +238,8 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
         num_pages = local_pages * dp_size
         return EnginePlan(slots, num_pages * page_size, dp_size, local_slots,
                           pb, avail, per_tok, fixed,
-                          page_size=page_size, num_pages=num_pages)
+                          page_size=page_size, num_pages=num_pages,
+                          overcommit=float(overcommit))
 
     per_slot = fixed + per_tok * mean
     local_slots = int(avail // per_slot) if per_slot else cap
@@ -237,11 +258,12 @@ def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
                 max_slots: int = 256,
                 mesh=None, dp: tuple[str, ...] = ("data",),
                 fsdp: bool | None = None,
-                page_size: int | None = None) -> tuple[int, int | None]:
+                page_size: int | None = None,
+                overcommit: float = 1.0) -> tuple[int, int | None]:
     """(num_slots, token_budget) that fit ``memory_bytes`` (per device when
     a mesh is given) — see :func:`plan_engine_report` for the breakdown
     (including ``num_pages`` for paged plans)."""
     plan = plan_engine_report(cfg, memory_bytes, max_len, mean_seq_tokens,
                               max_slots, mesh=mesh, dp=dp, fsdp=fsdp,
-                              page_size=page_size)
+                              page_size=page_size, overcommit=overcommit)
     return plan.num_slots, plan.token_budget

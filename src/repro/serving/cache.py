@@ -24,6 +24,7 @@ stays slot-indexed in both layouts.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Sequence as TypingSequence
 
@@ -33,6 +34,36 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_caches, init_paged_caches
+
+
+class PoolExhausted(MemoryError):
+    """The block pool cannot satisfy an allocation right now.
+
+    Subclasses MemoryError (the allocator's historical contract) but is
+    RECOVERABLE: under overcommit the engine catches it, reclaims pages
+    (trie eviction, then preemption of the youngest running sequence) and
+    retries.  ``shortfall`` is how many pages short the request fell —
+    what a reclaim pass must free for the same request to succeed.
+    """
+
+    def __init__(self, requested: int, free: int, total: int):
+        super().__init__(
+            f"asked for {requested} pages but only {free} of {total} are free")
+        self.requested = int(requested)
+        self.free = int(free)
+        self.shortfall = int(requested) - int(free)
+
+
+def host_copy(x):
+    """Device -> host copy for swap-out: pinned host memory when the
+    backend supports the memory kind (keeps the eventual restore a cheap
+    DMA), plain numpy otherwise (CPU backend, older runtimes)."""
+    try:
+        sharding = jax.sharding.SingleDeviceSharding(
+            jax.devices()[0], memory_kind="pinned_host")
+        return jax.block_until_ready(jax.device_put(x, sharding))
+    except Exception:
+        return np.asarray(x)
 
 
 def _check_slots(slots: TypingSequence[int], num_slots: int) -> None:
@@ -161,14 +192,13 @@ class PageAllocator:
 
     def alloc(self, n: int) -> list[int]:
         """Take ``n`` blocks off the free list at refcount 1; raises
-        MemoryError when the pool cannot satisfy the request (nothing is
-        partially allocated)."""
+        :class:`PoolExhausted` (a MemoryError) when the pool cannot satisfy
+        the request (nothing is partially allocated) — recoverable under
+        overcommit, where the engine reclaims pages and retries."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
-            raise MemoryError(
-                f"asked for {n} pages but only {len(self._free)} of "
-                f"{self.num_pages} are free")
+            raise PoolExhausted(n, len(self._free), self.num_pages)
         out = [self._free.pop() for _ in range(n)]
         for p in out:
             self._refs[p] = 1
@@ -215,6 +245,20 @@ class PageAllocator:
             "block count not conserved")
         assert all(c >= 1 for c in self._refs.values()), (
             "live block with refcount < 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapState:
+    """Host-side copy of one preempted slot: per-period leaves (``{"k",
+    "v"}`` arrays shaped ``(P, num_pages, page_size, ...)`` for attention
+    periods, the full slot-state pytree sliced to batch 1 otherwise) plus
+    how many pages were mapped when the sequence was swapped out."""
+
+    blocks: tuple
+    num_pages: int
+
+    def nbytes(self) -> int:
+        return sum(np.asarray(x).nbytes for x in jax.tree.leaves(self.blocks))
 
 
 class PagedSlotCache:
@@ -344,8 +388,11 @@ class PagedSlotCache:
     # ------------------------------------------------------------ growth --
     def ensure_mapped(self, slot: int, pos: int) -> None:
         """Map the block holding position ``pos`` if the slot's table does
-        not cover it yet (called before each decode write; admission
-        reserved the worst case, so the alloc cannot fail)."""
+        not cover it yet (called before each decode write).  At overcommit
+        1.0 admission reserved the worst case and the alloc cannot fail;
+        above it the alloc may raise :class:`PoolExhausted`, which the
+        engine answers by reclaiming pages (trie eviction, then preempting
+        the youngest running sequence) and retrying."""
         page = int(pos) // self.page_size
         if page >= self.max_pages:
             raise IndexError(
@@ -395,8 +442,9 @@ class PagedSlotCache:
     def alloc_tail(self, slot: int, start: int, length: int) -> None:
         """Map private blocks for every page covering positions
         [``start``, ``length``) that the prefix mapping (and any COW block)
-        left unmapped.  Admission charged the unshared tail, so the alloc
-        cannot fail under the scheduler's invariant."""
+        left unmapped.  At overcommit 1.0 admission charged the unshared
+        tail and the alloc cannot fail; above it :class:`PoolExhausted`
+        may surface and the engine reclaims + retries."""
         self._check_slots([slot])
         if not 0 <= int(start) < int(length) <= self.max_len:
             raise ValueError(f"slot {slot}: tail [{start}, {length}) out of "
@@ -484,6 +532,63 @@ class PagedSlotCache:
                                          blank.shape[:1] + (len(slots),)
                                          + blank.shape[2:])),
                     self.data[i], self._blank[i]))
+        self.data = tuple(new)
+        self._commit()
+
+    # ------------------------------------------------------------- swap --
+    def swap_out(self, slot: int) -> "SwapState":
+        """Copy ``slot``'s mapped blocks (attention K/V) and its recurrent
+        row to host memory (pinned when available) so a preemption can be
+        undone by restore instead of recompute.  Read-only: the caller
+        still owns the device pages and releases them via ``evict``.
+        Shared prefix blocks are copied too — on restore the sequence gets
+        PRIVATE pages (it no longer holds trie pins), which is correct but
+        forgoes sharing until the pages are re-adopted."""
+        self._check_slots([slot])
+        mapped = self.table[slot][self.table[slot] > 0]
+        n = int(len(mapped))
+        if n == 0:
+            raise ValueError(f"slot {slot}: nothing mapped to swap out")
+        if (self.table[slot, :n] == 0).any():
+            raise ValueError(f"slot {slot}: mapped pages are not a "
+                             "contiguous prefix of the table")
+        b_idx = jnp.asarray(mapped, jnp.int32)
+        leaves = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                leaves.append({key: host_copy(
+                    jnp.take(self.data[i][key], b_idx, axis=1))
+                    for key in ("k", "v")})
+            else:
+                leaves.append(jax.tree.map(
+                    lambda x: host_copy(x[:, slot:slot + 1]), self.data[i]))
+        return SwapState(blocks=tuple(leaves), num_pages=n)
+
+    def swap_in(self, slot: int, state: "SwapState") -> None:
+        """Restore a swapped-out sequence into a fresh slot: allocate
+        ``state.num_pages`` private blocks (may raise :class:`PoolExhausted`
+        — the engine reclaims and retries), scatter the host copies back
+        into the pool, and rewrite the recurrent row."""
+        self._check_slots([slot])
+        if self.table[slot].any():
+            raise ValueError(f"slot {slot} still holds mapped pages; "
+                             "evict before swapping in")
+        blocks = self.allocator.alloc(state.num_pages)
+        self.table[slot, :state.num_pages] = blocks
+        b_idx = jnp.asarray(blocks, jnp.int32)
+        s_idx = jnp.asarray([slot], jnp.int32)
+        new = []
+        for i, is_attn in enumerate(self._attn):
+            if is_attn:
+                new.append({key: self.data[i][key].at[:, b_idx].set(
+                    jnp.asarray(state.blocks[i][key]).astype(
+                        self.data[i][key].dtype))
+                    for key in ("k", "v")})
+            else:
+                new.append(jax.tree.map(
+                    lambda dst, src: dst.at[:, s_idx].set(
+                        jnp.asarray(src).astype(dst.dtype)),
+                    self.data[i], state.blocks[i]))
         self.data = tuple(new)
         self._commit()
 

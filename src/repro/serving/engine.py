@@ -60,7 +60,7 @@ from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill, prefill_with_prefix
 from repro.parallel import context as pctx
 from repro.serving.budget import plan_engine_report
-from repro.serving.cache import PagedSlotCache, SlotCache
+from repro.serving.cache import PagedSlotCache, PoolExhausted, SlotCache
 from repro.serving.events import StepEvent
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import (Request, RequestOutput, Sequence,
@@ -78,6 +78,12 @@ class EngineStats:
     decode_tokens: int = 0
     decode_time: float = 0.0
     decode_steps: int = 0
+    # overcommit accounting: how often pool pressure preempted a running
+    # sequence, and how each preemption was undone (recompute vs swap)
+    preemptions: int = 0
+    recomputed: int = 0
+    swapped_out: int = 0
+    swapped_in: int = 0
 
     @property
     def prefill_tps(self) -> float:
@@ -170,6 +176,22 @@ class Engine:
     budget, evicting unreferenced LRU nodes under pressure.  Token
     streams stay bit-identical to the uncached engine.
 
+    ``overcommit`` (paged only, >= 1.0) admits optimistically: each
+    sequence is charged its CURRENT page footprint plus ``1/overcommit``
+    of its remaining worst-case growth instead of the full worst case
+    (DESIGN.md section 13).  When the pool genuinely runs dry the engine
+    reclaims — unreferenced trie pages first, then PREEMPTS the youngest
+    running sequence: its pages are released refcount-correctly (shared
+    prefix pages survive for their other readers), it re-enters the
+    waiting queue at the head (FIFO preserved), and a later admission
+    resumes it by drop-and-recompute through the batched prefill path
+    (prefill is cheap post-PR-2; the recomputed stream is bit-identical
+    because the resume prefill's sample is discarded and decode re-samples
+    at the original fold positions).  ``swap=True`` instead copies the
+    victim's mapped blocks to host memory (pinned when available) at
+    preemption and restores them at re-admission — trading host transfer
+    for recompute FLOPs, the right side of the trade for long contexts.
+
     ``mesh`` (axes named by ``dp``/``tp``, default "data"/"model") turns the
     engine SPMD: see the module docstring.  ``memory_budget_bytes`` is then
     a PER-DEVICE budget and ``num_slots`` is rounded up to a multiple of the
@@ -189,13 +211,18 @@ class Engine:
                  max_top_k: int = MAX_TOP_K,
                  page_size: int | None = None,
                  num_pages: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 overcommit: float = 1.0,
+                 swap: bool = False):
         if cfg.input_mode != "tokens":
             raise ValueError(
                 f"{cfg.name} takes frontend embeddings; the engine serves "
                 "token models (see examples/serve_decode.py for the stub flow)")
         if num_pages is not None and page_size is None:
             raise ValueError("num_pages only makes sense with page_size")
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
+        requested_paging = page_size is not None
         if num_pages is not None and token_budget is not None:
             raise ValueError(
                 "pass either token_budget (converted to pages) or an "
@@ -221,7 +248,8 @@ class Engine:
                     "or explicit num_slots/token_budget/num_pages, not both")
             plan = plan_engine_report(cfg, memory_budget_bytes, max_len,
                                       mesh=mesh, dp=self.dp,
-                                      page_size=page_size)
+                                      page_size=page_size,
+                                      overcommit=overcommit)
             num_slots, token_budget = plan.num_slots, plan.token_budget
             num_pages, page_size = plan.num_pages, plan.page_size
         self.cfg = cfg
@@ -249,6 +277,17 @@ class Engine:
                 num_pages = dp_size * math.ceil(
                     (num_pages + 1) / dp_size) - 1
         self.num_pages = num_pages
+        if page_size is None and (overcommit > 1.0 or swap):
+            if requested_paging:
+                # pure-recurrent stack: paging was silently dropped (O(1)
+                # state, nothing to page) — overcommit/swap are no-ops too
+                overcommit, swap = 1.0, False
+            else:
+                raise ValueError(
+                    "overcommit > 1 / swap need the paged KV cache; pass "
+                    "page_size")
+        self.overcommit = float(overcommit)
+        self.swap_enabled = bool(swap)
 
         if mesh is not None:
             from repro.parallel.sharding import (guard_spec, partition_caches,
@@ -282,7 +321,8 @@ class Engine:
         if page_size is not None:
             self.scheduler = Scheduler(self.num_slots, max_len=max_len,
                                        page_size=page_size,
-                                       num_pages=num_pages)
+                                       num_pages=num_pages,
+                                       overcommit=self.overcommit)
         else:
             self.scheduler = Scheduler(self.num_slots, token_budget,
                                        max_len=max_len)
@@ -309,6 +349,9 @@ class Engine:
         # request_id -> Sequence for everything submitted and not yet
         # retired/aborted: what ``abort`` looks up between steps
         self._live: dict[str, Sequence] = {}
+        # request_ids preempted during the CURRENT step (reported as
+        # informational tokenless events, then cleared)
+        self._preempted_now: list[str] = []
 
         # per-slot host state fed to the jitted step each iteration; the
         # scheduler and these arrays live on the host, replicated from the
@@ -459,19 +502,27 @@ class Engine:
         event per sequence that progressed (empty when idle)."""
         if not self.scheduler.has_work:
             return []
+        self._preempted_now = []
         admitted = self.scheduler.admit()
         if admitted:
+            before = {s.request_id: len(s.tokens) for s in admitted}
             self._prefill_admitted(admitted)
-            progressed = admitted
+            # resumed sequences (recompute/swap restore) append no token on
+            # their re-admission step — their next token comes from decode —
+            # so only sequences whose token count grew produce a delta
+            progressed = [s for s in admitted
+                          if len(s.tokens) > before[s.request_id]]
         else:
-            progressed = list(self.scheduler.active.values())
-            if not progressed:
+            active = list(self.scheduler.active.values())
+            if not active:
                 raise RuntimeError(
                     "scheduler stalled: waiting requests but nothing active")
-            self._decode_once(progressed)
-        events = [StepEvent(s.request_id, s.tokens[-1], len(s.tokens) - 1,
-                            s.finish_reason)
-                  for s in progressed]
+            progressed = self._decode_once(active)
+        events = [StepEvent(rid, token=None, index=None, preempted=True)
+                  for rid in self._preempted_now]
+        events += [StepEvent(s.request_id, s.tokens[-1], len(s.tokens) - 1,
+                             s.finish_reason)
+                   for s in progressed]
         self._retire_finished()
         return events
 
@@ -491,8 +542,26 @@ class Engine:
         for s in seqs:
             self.scheduler.add(s)
             self._live[s.request_id] = s
-        while self.scheduler.has_work:
-            self.step()
+        try:
+            while self.scheduler.has_work:
+                self.step()
+        except BaseException:
+            # a failed STEP must give the same no-ghost guarantee as a
+            # failed validation: retire anything that finished, then abort
+            # this run's still-live sequences so nothing lingers in _live /
+            # the queue / the slots to poison the next run.  Best-effort —
+            # the original error propagates.
+            try:
+                self._retire_finished()
+            except Exception:
+                pass
+            for s in seqs:
+                if self._live.get(s.request_id) is s:
+                    try:
+                        self.abort(s.request_id)
+                    except Exception:
+                        pass
+            raise
         return [s.to_output() for s in seqs]
 
     # ------------------------------------------------------------ prefill --
@@ -503,29 +572,54 @@ class Engine:
         never per token.  With the prefix cache on, trie hits split off into
         their own tail-only dispatch (the matched pages are already
         resident) and misses take the full path; both adopt their prompt
-        pages into the trie afterwards."""
+        pages into the trie afterwards.
+
+        Resumed sequences ride the same dispatches: a preempted sequence's
+        ``prefill_tokens`` (prompt + generated-so-far minus the pending
+        last token) replace its prompt, rebuilding the exact KV state it
+        lost.  Swap-mode sequences skip prefill entirely and restore their
+        saved blocks.  The whole admitted wave is protected from being
+        preempted by its own prefill allocations — admission reserved the
+        wave's charges, so after reclaiming everyone else the wave always
+        fits (the no-deadlock argument in DESIGN.md section 13)."""
+        protect = frozenset(s.request_id for s in admitted)
         hits, misses = [], []
         for s in admitted:
-            if s.prefix_match is not None and s.prefix_match.matched_len > 0:
+            if s.swap_state is not None:
+                self._swap_in(s, protect)
+            elif s.prefix_match is not None and s.prefix_match.matched_len > 0:
                 hits.append(s)
             else:
                 misses.append(s)
         if misses:
-            lengths = {s.prompt_len for s in misses}
+            lengths = {s.prefill_len for s in misses}
             if self._attn_only or len(lengths) == 1:
                 groups = [misses]
             else:
                 by_len: dict[int, list[Sequence]] = {}
                 for s in misses:
-                    by_len.setdefault(s.prompt_len, []).append(s)
+                    by_len.setdefault(s.prefill_len, []).append(s)
                 groups = list(by_len.values())
             for group in groups:
-                self._prefill_group(group)
+                self._prefill_group(group, protect)
         if hits:
-            self._prefill_prefix_group(hits)
+            self._prefill_prefix_group(hits, protect)
 
-    def _prefill_group(self, group: list[Sequence]) -> None:
-        width = max(s.prompt_len for s in group)
+    def _with_reclaim(self, fn, protect: frozenset):
+        """Run a pool-allocating operation, reclaiming pages (trie
+        eviction first, then preemption of the youngest unprotected
+        running sequence) and retrying until it succeeds or nothing more
+        can be reclaimed."""
+        while True:
+            try:
+                return fn()
+            except PoolExhausted as e:
+                if not self._reclaim(e.shortfall, protect):
+                    raise
+
+    def _prefill_group(self, group: list[Sequence],
+                       protect: frozenset = frozenset()) -> None:
+        width = max(s.prefill_len for s in group)
         rows = len(group)
         if self._attn_only:
             # bucket (rows, width) to powers of two so a long-lived engine
@@ -544,11 +638,13 @@ class Engine:
         topk = np.zeros((rows,), np.int32)
         seeds = np.zeros((rows,), np.uint32)
         for j, s in enumerate(group):
-            prompts[j, : s.prompt_len] = s.request.prompt
-            lens[j] = s.prompt_len
+            prompts[j, : s.prefill_len] = s.prefill_tokens
+            lens[j] = s.prefill_len
             temps[j] = s.request.sampling.temperature
             topk[j] = s.request.sampling.top_k
             seeds[j] = s.request.sampling.seed
+            if s.tokens:
+                self.stats.recomputed += 1
         ragged = bool((lens != width).any())
 
         dpa = (self.dp if len(self.dp) > 1 else self.dp[0]) if self.mesh else None
@@ -562,8 +658,10 @@ class Engine:
         jax.block_until_ready((first, caches))
         slots = [s.slot for s in group]
         if self.page_size is not None:
-            self.cache.insert(slots, caches,
-                              lengths=[s.prompt_len for s in group])
+            self._with_reclaim(
+                lambda: self.cache.insert(
+                    slots, caches, lengths=[s.prefill_len for s in group]),
+                protect)
         else:
             self.cache.insert(slots, caches)
         self.stats.prefill_time += time.perf_counter() - t0
@@ -572,21 +670,31 @@ class Engine:
 
         first = np.asarray(first)
         for j, s in enumerate(group):
-            s.append_token(int(first[j]), self.eos_id)
+            if not s.tokens:
+                s.append_token(int(first[j]), self.eos_id)
+            # resumed recompute: the prefill's sample is DISCARDED — it was
+            # drawn at fold position prefill_len, but the sequence's next
+            # token belongs to fold position prefill_len + 1, which the
+            # next decode step samples.  The pending last token goes back
+            # into the step buffer; either way _tok holds tokens[-1].
             slot = s.slot
-            self._tok[slot, 0] = first[j]
-            self._pos[slot] = s.prompt_len
+            self._tok[slot, 0] = s.tokens[-1]
+            self._pos[slot] = s.prefill_len
             self._temps[slot] = temps[j]
             self._topk[slot] = topk[j]
             self._seeds[slot] = seeds[j]
         self._adopt_group(group)
 
-    def _prefill_prefix_group(self, group: list[Sequence]) -> None:
+    def _prefill_prefix_group(self, group: list[Sequence],
+                              protect: frozenset = frozenset()) -> None:
         """Tail-only prefill for trie hits: map the matched full pages
         read-only, copy-on-write the partially matched page, allocate the
         private tail pages, then run ONE bucketed ``prefill_with_prefix``
         dispatch and scatter the tail K/V into the mapped blocks.  The
-        matched tokens are never recomputed — that is the TTFT win."""
+        matched tokens are never recomputed — that is the TTFT win.
+        Resumed sequences prefill prompt + generated tail against the same
+        matched prefix (the match is on the PROMPT, whose length bounds
+        ``matched_len``, so the tail always covers the generated part)."""
         ps = self.page_size
         for s in group:
             m = s.prefix_match
@@ -595,15 +703,21 @@ class Engine:
                 # the COW copy consumes the pin reference on the shared
                 # partial block; its content is identical, so the gather
                 # below may read either copy
-                self.cache.cow_block(s.slot, m.full_pages, m.partial_block)
-            self.cache.alloc_tail(s.slot, m.matched_len, s.prompt_len)
+                self._with_reclaim(
+                    lambda s=s, m=m: self.cache.cow_block(
+                        s.slot, m.full_pages, m.partial_block), protect)
+            self._with_reclaim(
+                lambda s=s, m=m: self.cache.alloc_tail(
+                    s.slot, m.matched_len, s.prefill_len), protect)
+            if s.tokens:
+                self.stats.recomputed += 1
 
         # bucket rows / tail width / prefix pages to powers of two so the
         # compile cache stays O(log^3) for a long-lived engine; dummy rows
         # carry a zero prefix + length-1 tail and are never scattered
         rows = _pow2_bucket(len(group), self.num_slots)
         tailw = _pow2_bucket(
-            max(s.prompt_len - s.prefix_match.matched_len for s in group),
+            max(s.prefill_len - s.prefix_match.matched_len for s in group),
             self.max_len)
         npref = _pow2_bucket(
             max(math.ceil(s.prefix_match.matched_len / ps) for s in group),
@@ -619,10 +733,10 @@ class Engine:
             m = s.prefix_match
             pages = math.ceil(m.matched_len / ps)
             tables[j, :pages] = self.cache.table[s.slot, :pages]
-            tails[j, : s.prompt_len - m.matched_len] = \
-                s.request.prompt[m.matched_len:]
+            tails[j, : s.prefill_len - m.matched_len] = \
+                s.prefill_tokens[m.matched_len:]
             plens[j] = m.matched_len
-            tlens[j] = s.prompt_len - m.matched_len
+            tlens[j] = s.prefill_len - m.matched_len
             temps[j] = s.request.sampling.temperature
             topk[j] = s.request.sampling.top_k
             seeds[j] = s.request.sampling.seed
@@ -643,17 +757,20 @@ class Engine:
         # decode step needs, not the client
         first = np.asarray(first)
         for j, s in enumerate(group):
-            s.append_token(int(first[j]), self.eos_id)
+            if not s.tokens:
+                s.append_token(int(first[j]), self.eos_id)
+            # resumed recompute: discard the prefill sample (wrong fold
+            # position for the NEXT token — see _prefill_group)
             slot = s.slot
-            self._tok[slot, 0] = first[j]
-            self._pos[slot] = s.prompt_len
+            self._tok[slot, 0] = s.tokens[-1]
+            self._pos[slot] = s.prefill_len
             self._temps[slot] = temps[j]
             self._topk[slot] = topk[j]
             self._seeds[slot] = seeds[j]
         self.cache.write_tails(
             [s.slot for s in group], tail_caches,
             starts=[s.prefix_match.matched_len for s in group],
-            lengths=[s.prompt_len for s in group],
+            lengths=[s.prefill_len for s in group],
             rows=list(range(len(group))))
         self.stats.prefill_time += time.perf_counter() - t0
         self.stats.prefill_tokens += int(tlens[: len(group)].sum())
@@ -675,15 +792,33 @@ class Engine:
                 self.scheduler.transfer_to_shared(s, adopted)
 
     # ------------------------------------------------------------- decode --
-    def _decode_once(self, active: list[Sequence]) -> None:
+    def _decode_once(self, active: list[Sequence]) -> list[Sequence]:
+        """One decode dispatch over all slots.  Returns the sequences that
+        actually progressed — under overcommit, growing a page table can
+        exhaust the pool, in which case the engine reclaims (trie eviction,
+        then preempting the youngest running sequence, possibly one from
+        ``active``) and retries; preempted sequences drop out of the
+        dispatch (their slots ride along idle) and resume later."""
         table = None
         if self.page_size is not None:
             # grow page tables before the dispatch: each active slot whose
             # write position crosses into an unmapped block gets one from
-            # the free list (admission reserved the worst case, so this
-            # cannot fail); values-only change — never a recompile
+            # the free list.  At overcommit 1.0 admission reserved the
+            # worst case and this cannot fail; above it PoolExhausted
+            # triggers reclaim.  Values-only change — never a recompile.
             for s in active:
-                self.cache.ensure_mapped(s.slot, int(self._pos[s.slot]))
+                while s.state is SequenceState.RUNNING:
+                    try:
+                        self.cache.ensure_mapped(s.slot,
+                                                 int(self._pos[s.slot]))
+                        break
+                    except PoolExhausted as e:
+                        if not self._reclaim(e.shortfall, frozenset()):
+                            raise
+            active = [s for s in active
+                      if s.state is SequenceState.RUNNING]
+            if not active:
+                return []
             table = self.cache.table_device()
         t0 = time.perf_counter()
         with self._trace_ctx():
@@ -700,6 +835,62 @@ class Engine:
             s.append_token(int(nxt[slot]), self.eos_id)
             self._tok[slot, 0] = nxt[slot]
             self._pos[slot] += 1
+        return active
+
+    # --------------------------------------------------------- preemption --
+    def _reclaim(self, shortfall: int, protect: frozenset) -> bool:
+        """Free pool pages for an allocation that just failed: evict
+        unreferenced prefix-trie pages first (cheapest — nothing loses
+        state), then preempt the YOUNGEST running sequence outside
+        ``protect`` (it has the least KV to rebuild and its victimization
+        cannot starve older work).  Returns False when nothing could be
+        reclaimed — the caller's retry would loop forever, so it re-raises."""
+        freed = 0
+        if self.prefix is not None:
+            freed = self.prefix.evict(shortfall)
+            if freed >= shortfall:
+                return True
+        victims = [s for s in self.scheduler.active.values()
+                   if s.request_id not in protect]
+        if not victims:
+            return freed > 0
+        self._preempt(max(victims, key=lambda s: s.admit_seqno))
+        return True
+
+    def _preempt(self, victim: Sequence) -> None:
+        """Take ``victim``'s pages and slot back: swap-mode saves its
+        mapped blocks to host first; eviction releases one reference per
+        mapped page (shared prefix pages stay live for the trie and any
+        other reader); the scheduler returns its reservation and requeues
+        it at the head of the waiting queue."""
+        slot = victim.slot
+        if self.swap_enabled:
+            victim.swap_state = self.cache.swap_out(slot)
+            self.stats.swapped_out += 1
+        self.cache.evict([slot])
+        self.scheduler.preempt(victim)
+        self._clear_slot(slot)
+        self.stats.preemptions += 1
+        self._preempted_now.append(victim.request_id)
+
+    def _swap_in(self, s: Sequence, protect: frozenset) -> None:
+        """Restore a swapped-out sequence: allocate fresh blocks (reclaim
+        + retry on exhaustion), scatter the host copies back, and rebuild
+        the slot's host-side sampling state.  No prefill runs and no token
+        is appended — the pending last token goes back into the step
+        buffer and the next decode step continues the stream exactly where
+        it stopped."""
+        self._with_reclaim(lambda: self.cache.swap_in(s.slot, s.swap_state),
+                           protect)
+        s.swap_state = None
+        slot = s.slot
+        self._tok[slot, 0] = s.tokens[-1]
+        self._pos[slot] = s.prefill_len
+        self._temps[slot] = s.request.sampling.temperature
+        self._topk[slot] = s.request.sampling.top_k
+        self._seeds[slot] = s.request.sampling.seed
+        self.stats.swapped_in += 1
+        self._adopt_group([s])
 
     # ------------------------------------------------------------- retire --
     def _clear_slot(self, slot: int) -> None:

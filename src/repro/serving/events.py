@@ -24,15 +24,23 @@ from repro.serving.request import FinishReason
 class StepEvent:
     """One sequence's progress in one engine step.
 
-    token / index are ``None`` only for tokenless retirements (abort);
-    ``finish_reason`` is ``None`` while the sequence keeps running and set
-    exactly once, on the event that retires it.
+    token / index are ``None`` only for tokenless events: terminal aborts
+    (``finish_reason`` set) and informational preemption notices
+    (``preempted`` set — the sequence lost its pages to pool pressure and
+    went back to the head of the waiting queue; it will resume and keep
+    producing tokens).  ``finish_reason`` is ``None`` while the sequence
+    keeps running and set exactly once, on the event that retires it.
+    Streaming fronts drop non-terminal tokenless events (AsyncEngine
+    filters them), so the client-visible TokenDelta stream is unchanged
+    by preemption — preempted-then-resumed requests deliver exactly the
+    tokens an uninterrupted run would have.
     """
 
     request_id: str
     token: int | None
     index: int | None
     finish_reason: FinishReason | None = None
+    preempted: bool = False
 
     @property
     def finished(self) -> bool:
@@ -44,6 +52,8 @@ class StepEvent:
              "index": self.index}
         if self.finish_reason is not None:
             d["finish_reason"] = self.finish_reason.value
+        if self.preempted:
+            d["preempted"] = True
         return d
 
 

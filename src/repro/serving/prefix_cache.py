@@ -152,19 +152,30 @@ class PrefixCache:
             partial_node=best)
 
     def pin(self, m: PrefixMatch) -> None:
-        """Take the slot-side reference on every matched block and bump the
-        path's LRU clocks.  Pinned blocks cannot be evicted (refcount >= 2)
-        and survive trie eviction of their nodes' siblings."""
+        """Take the slot-side reference on every matched block.  Pinned
+        blocks cannot be evicted (refcount >= 2) and survive trie eviction
+        of their nodes' siblings.  Pinning deliberately does NOT bump the
+        path's LRU clocks: a blocked queue head re-runs match+pin every
+        scheduler step, and letting those speculative pins refresh recency
+        would protect the head's own prefix from eviction while starving
+        every other resident path.  Recency moves only on :meth:`touch`,
+        which the scheduler calls on successful admission."""
         if m.pinned or m.matched_len == 0:
             m.pinned = m.matched_len > 0
             return
         self.allocator.share(m.blocks)
+        m.pinned = True
+
+    def touch(self, m: PrefixMatch | None) -> None:
+        """Bump the LRU clocks along a match's path — called once per
+        ADMITTED request, never for speculative blocked-head lookups."""
+        if m is None or m.matched_len == 0:
+            return
         self._clock += 1
         for node in m.full_nodes:
             node.last_used = self._clock
         if m.partial_node is not None:
             m.partial_node.last_used = self._clock
-        m.pinned = True
 
     def unpin(self, m: PrefixMatch) -> None:
         """Drop the references :meth:`pin` took (admission backed out)."""
@@ -174,12 +185,14 @@ class PrefixCache:
         m.pinned = False
 
     def note(self, m: PrefixMatch | None, prompt_len: int) -> None:
-        """Record one admitted request against the hit-rate counters."""
+        """Record one admitted request against the hit-rate counters and
+        refresh the matched path's LRU recency (see :meth:`touch`)."""
         self.requests += 1
         self.queried_tokens += int(prompt_len)
         if m is not None and m.matched_len > 0:
             self.hits += 1
             self.hit_tokens += int(m.matched_len)
+        self.touch(m)
 
     # ----------------------------------------------------------- adoption --
     def adopt(self, prompt: TypingSequence[int], table_row) -> int:

@@ -66,9 +66,13 @@ class Request:
 
 
 class SequenceState(enum.Enum):
-    WAITING = "waiting"    # queued, no slot
-    RUNNING = "running"    # admitted into a decode slot
-    FINISHED = "finished"  # retired; slot released
+    WAITING = "waiting"      # queued, no slot
+    RUNNING = "running"      # admitted into a decode slot
+    PREEMPTED = "preempted"  # pages reclaimed under pool pressure; back at
+    #                          the HEAD of the waiting queue (it arrived
+    #                          before everything still waiting, so FIFO
+    #                          order is preserved) awaiting re-admission
+    FINISHED = "finished"    # retired; slot released
 
 
 class FinishReason(enum.Enum):
@@ -93,6 +97,12 @@ class Sequence:
         # match consumed by the prefill path
         self.charged_units: int | None = None
         self.prefix_match = None
+        # preemption bookkeeping: admission recency (youngest-victim
+        # selection), how often this sequence was preempted, and — in swap
+        # mode — the host-side copy of its KV pages awaiting restore
+        self.admit_seqno: int = -1
+        self.preemptions: int = 0
+        self.swap_state = None
         self._clock = clock
         self.t_arrival = clock()
         self.t_admitted: float | None = None
@@ -113,6 +123,20 @@ class Sequence:
     @property
     def prompt_len(self) -> int:
         return len(self.request.prompt)
+
+    @property
+    def prefill_tokens(self) -> tuple[int, ...]:
+        """Tokens the prefill pass must process to (re)build this sequence's
+        KV state: the prompt, plus — after a preemption — every generated
+        token except the last.  The last token is excluded because it is the
+        *input* of the next decode step, not cached history: an uninterrupted
+        run caches positions ``0..prompt_len+k-2`` after k tokens, with
+        ``tokens[-1]`` sitting in the step buffer."""
+        return self.request.prompt + tuple(self.tokens[:-1])
+
+    @property
+    def prefill_len(self) -> int:
+        return self.prompt_len + max(0, len(self.tokens) - 1)
 
     @property
     def reserved_tokens(self) -> int:
@@ -169,6 +193,7 @@ class Sequence:
             latency=self._since_arrival(self.t_finished),
             itl_mean=sum(itl) / len(itl) if itl else None,
             itl_p99=percentile(itl, 99.0) if itl else None,
+            preemptions=self.preemptions,
         )
 
 
@@ -203,6 +228,7 @@ class RequestOutput:
     latency: float | None
     itl_mean: float | None = None
     itl_p99: float | None = None
+    preemptions: int = 0
 
 
 def make_requests(prompts: TypingSequence[TypingSequence[int]], max_new: int,

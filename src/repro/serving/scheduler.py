@@ -14,10 +14,19 @@ The budget is counted in one of two units:
   * pages (``page_size``/``num_pages``): the PagedSlotCache regime — a
     sequence reserves ``ceil((prompt + max_new) / page_size)`` blocks.
     Physical blocks are handed out lazily (prompt pages at insert, one
-    block per boundary crossing during decode), but admission reserves the
-    worst case, so on-demand growth can never fail and the head blocks
-    only when reservations genuinely exhaust the pool — preemption/swap
-    (ROADMAP) is what it would take to admit more optimistically.
+    block per boundary crossing during decode).  At ``overcommit=1.0``
+    admission reserves the worst case, so on-demand growth can never
+    fail; above it admission charges only the sequence's CURRENT
+    footprint plus ``1/overcommit`` of its remaining worst-case growth
+    (vLLM-style optimistic admission), and the engine backs the gamble
+    with preemption: when the pool genuinely runs dry mid-decode, the
+    youngest running sequence is preempted (:meth:`Scheduler.preempt`) —
+    pages released refcount-correctly, sequence re-enqueued at the HEAD
+    of the waiting queue — and later resumed by drop-and-recompute
+    through the batched prefill path (or restored from a host swap).
+    Head re-enqueue preserves FIFO: the victim arrived before everything
+    still waiting, so putting it back at the head keeps admission order
+    equal to arrival order.
 
 ``add`` rejects up front anything that could NEVER be admitted — both the
 budget bound and the per-sequence capacity bound (``max_len``): a direct
@@ -54,13 +63,16 @@ class Scheduler:
     def __init__(self, num_slots: int, token_budget: int | None = None,
                  max_len: int | None = None,
                  page_size: int | None = None,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 overcommit: float = 1.0):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if token_budget is not None and token_budget < 1:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         if (page_size is None) != (num_pages is None):
             raise ValueError("page_size and num_pages come together")
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1.0, got {overcommit}")
         if page_size is not None:
             if token_budget is not None:
                 raise ValueError(
@@ -70,11 +82,17 @@ class Scheduler:
                 raise ValueError(
                     f"page_size/num_pages must be >= 1, got "
                     f"{page_size}/{num_pages}")
+        elif overcommit > 1.0:
+            raise ValueError(
+                "overcommit > 1 needs the paged regime (page_size/num_pages):"
+                " the fixed-slot cache preallocates max_len stripes, so "
+                "there is nothing to overcommit")
         self.num_slots = num_slots
         self.token_budget = token_budget
         self.max_len = max_len
         self.page_size = page_size
         self.num_pages = num_pages
+        self.overcommit = float(overcommit)
         self.waiting: deque[Sequence] = deque()
         self.active: dict[int, Sequence] = {}  # slot -> sequence
         # stack of free slots; reversed so pop() hands out slot 0 first
@@ -82,6 +100,10 @@ class Scheduler:
         # reserved capacity units: tokens in the fixed regime, pages when
         # page_size is set
         self.reserved_units = 0
+        # lifetime counters + a monotonic admission stamp (victim selection
+        # preempts the YOUNGEST admission, deterministically)
+        self.preemptions = 0
+        self._admit_seqno = 0
         # optional prefix-cache hook (paged regime only): an object with
         # match/pin/unpin/note, ``resident_pages`` and ``evict(n)`` —
         # admission then charges each sequence only its UNSHARED tail and
@@ -97,10 +119,29 @@ class Scheduler:
         return self.num_pages if self.page_size is not None else self.token_budget
 
     def need(self, seq: Sequence) -> int:
-        """Worst-case units ``seq`` must reserve to be admitted."""
+        """Worst-case units ``seq`` must reserve to be admitted.
+        :meth:`validate` always uses this bound — a request that cannot fit
+        the budget even alone would deadlock the FIFO queue no matter how
+        optimistic admission is."""
         if self.page_size is not None:
             return math.ceil(seq.reserved_tokens / self.page_size)
         return seq.reserved_tokens
+
+    def charge(self, seq: Sequence) -> int:
+        """Units actually reserved at admission.  At ``overcommit=1.0``
+        this is the worst case (= :meth:`need`); above it, the sequence's
+        CURRENT footprint — prompt plus generated tokens plus the next
+        decode write — rounded up to pages, plus ``1/overcommit`` of the
+        remaining worst-case growth.  A resumed (preempted) sequence is
+        charged for the tokens it already produced, so re-admission always
+        covers its recompute/restore allocation."""
+        worst = self.need(seq)
+        if self.page_size is None or self.overcommit <= 1.0:
+            return worst
+        cur = seq.prompt_len + max(1, len(seq.tokens))
+        cur_pages = min(worst, math.ceil(cur / self.page_size))
+        margin = math.ceil((worst - cur_pages) / self.overcommit)
+        return min(worst, cur_pages + margin)
 
     @property
     def reserved_tokens(self) -> int:
@@ -153,9 +194,12 @@ class Scheduler:
         hook = self.prefix_hook
         while self.waiting and self._free:
             head = self.waiting[0]
-            match = hook.match(head.request.prompt) if hook is not None \
-                else None
-            need = self.need(head)
+            # a swapped-out head restores its pages verbatim — no prefill
+            # runs, so a trie match could never be consumed; skip the
+            # lookup rather than leak its pins
+            match = hook.match(head.request.prompt) \
+                if hook is not None and head.swap_state is None else None
+            need = self.charge(head)
             if match is not None:
                 # fully shared pages are already resident (counted below
                 # via resident_pages); charge only the unshared tail — the
@@ -167,8 +211,14 @@ class Scheduler:
             if budget is not None:
                 resident = hook.resident_pages if hook is not None else 0
                 over = self.reserved_units + need + resident - budget
-                if over > 0 and hook is not None:
-                    hook.evict(over)
+                if hook is not None and 0 < over <= resident:
+                    # eviction can only help when the shortfall is covered
+                    # by trie-resident pages: ``over > resident`` means the
+                    # head blocks on RESERVATIONS, and flushing the trie
+                    # would trash every cached prefix without unblocking
+                    # anything (it would repeat every step the head stays
+                    # blocked).  Ask for exactly the shortfall, never more.
+                    hook.evict(min(over, resident))
                     resident = hook.resident_pages
                     over = self.reserved_units + need + resident - budget
                 if over > 0:
@@ -182,24 +232,64 @@ class Scheduler:
             seq.t_admitted = seq.now()
             seq.prefix_match = match
             seq.charged_units = need
+            seq.admit_seqno = self._admit_seqno
+            self._admit_seqno += 1
             self.active[slot] = seq
             self.reserved_units += need
             if hook is not None:
+                # counters + LRU recency move ONLY on successful admission;
+                # a blocked head re-running match/pin every step must not
+                # refresh its own path's clocks (it would protect itself
+                # from eviction while starving other residents)
                 hook.note(match, head.prompt_len)
             admitted.append(seq)
         return admitted
+
+    # -------------------------------------------------------- preemption --
+    def preempt(self, seq: Sequence) -> None:
+        """Take an ACTIVE sequence's slot and reservation back and requeue
+        it at the HEAD of the waiting queue for re-admission.  The caller
+        (the engine) releases the physical pages; this method is the pure
+        accounting inverse of :meth:`admit`, so arbitrary admit/preempt/
+        retire interleavings leave ``reserved_units`` consistent.  Head
+        re-enqueue preserves FIFO: the victim arrived before every
+        still-waiting sequence (it was admitted from this same queue), so
+        admission order still equals arrival order."""
+        if self.active.get(seq.slot) is not seq:
+            raise ValueError(
+                f"{seq.request_id} is not active in slot {seq.slot}")
+        assert seq.charged_units is not None, (
+            f"{seq.request_id}: admitted without charged_units — admission "
+            "accounting is corrupt")
+        del self.active[seq.slot]
+        self._free.append(seq.slot)
+        self.reserved_units -= seq.charged_units
+        seq.charged_units = None
+        seq.slot = None
+        seq.prefix_match = None  # pins were consumed by its prefill
+        seq.state = SequenceState.PREEMPTED
+        seq.preemptions += 1
+        self.waiting.appendleft(seq)
+        self.preemptions += 1
 
     # -------------------------------------------------------- retirement --
     def retire(self, seq: Sequence) -> None:
         if self.active.get(seq.slot) is not seq:
             raise ValueError(f"{seq.request_id} is not active in slot {seq.slot}")
+        # charged_units is authoritative: set at every admission, zeroed
+        # only here and at preempt.  Recomputing ``need`` as a fallback
+        # would desynchronize accounting for prefix hits (charged only the
+        # unshared tail) and for re-admissions at a different footprint —
+        # a live leak, not a safety net.
+        assert seq.charged_units is not None, (
+            f"{seq.request_id}: retired without charged_units — admission "
+            "accounting is corrupt")
         del self.active[seq.slot]
         self._free.append(seq.slot)
         # release what the sequence is charged NOW: the admission charge
         # minus any pages since transferred to the prefix trie
-        self.reserved_units -= (seq.charged_units
-                                if seq.charged_units is not None
-                                else self.need(seq))
+        self.reserved_units -= seq.charged_units
+        seq.charged_units = None
         seq.slot = None
         seq.state = SequenceState.FINISHED
         seq.t_finished = seq.now()

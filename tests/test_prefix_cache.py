@@ -288,7 +288,7 @@ def test_evict_skips_pinned_and_slot_mapped_nodes(paged_setup):
     assert trie.resident_pages == 1
 
 
-def test_evict_lru_order_tracks_pin_recency(paged_setup):
+def test_evict_lru_order_tracks_touch_recency(paged_setup):
     cfg, params = paged_setup
     cache = _cache(cfg)
     trie = PrefixCache(cache)
@@ -301,13 +301,60 @@ def test_evict_lru_order_tracks_pin_recency(paged_setup):
     old_b, new_b = int(cache.table[0][0]), int(cache.table[1][0])
     cache.evict([0])
     cache.evict([1])
-    # touch OLD via a pin: it becomes the most recently used
+    # an ADMITTED request touches OLD: it becomes the most recently used
     m = trie.match(old + (9,))
-    trie.pin(m)
-    trie.unpin(m)
+    trie.touch(m)
     assert trie.evict(1) == 1
     assert cache.allocator.refcount(new_b) == 0, "evicted the recently used"
     assert cache.allocator.refcount(old_b) == 1
+
+
+def test_pin_does_not_bump_lru_blocked_head_starvation(paged_setup):
+    """Satellite regression: a blocked queue head re-runs match+pin every
+    scheduler step.  Those speculative pins must NOT refresh the path's
+    LRU recency — otherwise the head's own prefix is immortal under
+    pressure while every other resident path starves.  Only ``touch``
+    (called on successful admission via ``note``) moves the clocks."""
+    cfg, params = paged_setup
+    cache = _cache(cfg)
+    trie = PrefixCache(cache)
+    old = tuple(range(1, 6))
+    new = tuple(range(60, 65))
+    _prefill_into(cfg, params, cache, 0, old)
+    _prefill_into(cfg, params, cache, 1, new)
+    trie.adopt(old, cache.table[0])
+    trie.adopt(new, cache.table[1])  # younger by adoption clock
+    old_b, new_b = int(cache.table[0][0]), int(cache.table[1][0])
+    cache.evict([0])
+    cache.evict([1])
+
+    # a blocked head hammers match+pin on OLD many steps in a row...
+    for _ in range(5):
+        m = trie.match(old + (9,))
+        trie.pin(m)
+        trie.unpin(m)
+    # ...yet OLD is still the LRU victim: pin left the clocks alone
+    assert trie.evict(1) == 1
+    assert cache.allocator.refcount(old_b) == 0, (
+        "speculative pins refreshed LRU recency — blocked-head starvation")
+    assert cache.allocator.refcount(new_b) == 1
+
+    # note() on admission IS a touch: counters + recency move together
+    cache2 = _cache(cfg)
+    trie2 = PrefixCache(cache2)
+    _prefill_into(cfg, params, cache2, 0, old)
+    _prefill_into(cfg, params, cache2, 1, new)
+    trie2.adopt(old, cache2.table[0])
+    trie2.adopt(new, cache2.table[1])
+    old2_b, new2_b = int(cache2.table[0][0]), int(cache2.table[1][0])
+    cache2.evict([0])
+    cache2.evict([1])
+    m = trie2.match(old + (9,))
+    trie2.note(m, len(old))  # admitted: recency refreshed
+    assert trie2.evict(1) == 1
+    assert cache2.allocator.refcount(new2_b) == 0
+    assert cache2.allocator.refcount(old2_b) == 1
+    assert trie2.hits == 1
 
 
 # ------------------------------------------------------------------- COW ----

@@ -501,3 +501,50 @@ def test_plan_engine_mesh_rejects_budget_below_sharded_params():
     with pytest.raises(ValueError, match="exceed the memory budget"):
         plan_engine(cfg, param_bytes(cfg, mesh=mesh) - 1, max_len=16,
                     mesh=mesh)
+
+
+# ----------------------------------------------- failed-step ghost state ----
+
+
+@pytest.mark.parametrize("fail_in", ["prefill", "decode"])
+def test_failed_step_leaves_no_ghost_state(attn_setup, fail_in):
+    """Satellite regression: if step() raises mid-run, the failed run must
+    abort its own still-live sequences — otherwise they linger in _live /
+    the queue / the slots and poison every later run (duplicate-id
+    rejections, leaked slots, stuck accounting).  The engine must be fully
+    reusable afterwards, bit-exactly."""
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=4,
+                    num_pages=16)
+    reqs = [Request("g0", (5, 6, 7), 4), Request("g1", (8, 9), 3)]
+    reference = {o.request_id: o.tokens for o in engine.run(reqs)}
+    assert engine.cache.allocator.num_live == 0
+
+    class _Boom(RuntimeError):
+        pass
+
+    # prefill failure: sequences already ADMITTED (slots + charges held);
+    # decode failure: sequences already carry generated tokens
+    if fail_in == "prefill":
+        orig, name = engine._prefill_admitted, "_prefill_admitted"
+    else:
+        orig, name = engine._decode_once, "_decode_once"
+
+    def exploding(*a, **k):
+        raise _Boom("injected step failure")
+
+    setattr(engine, name, exploding)
+    with pytest.raises(_Boom):
+        engine.run(reqs)
+
+    # no ghosts: live map, queue, slots, pages, and accounting all reset
+    assert engine._live == {}
+    assert not engine.scheduler.has_work
+    assert engine.scheduler.free_slots == 2
+    assert engine.scheduler.reserved_units == 0
+    assert engine.cache.allocator.num_live == 0
+
+    # the engine is reusable with the SAME ids, bit-exactly
+    setattr(engine, name, orig)
+    again = {o.request_id: o.tokens for o in engine.run(reqs)}
+    assert again == reference

@@ -1,0 +1,306 @@
+"""Page overcommit + preemption: property suite and engine parity.
+
+Host-level suite (fast, no model): a miniature engine loop drives the
+real ``Scheduler`` + ``PageAllocator`` through the overcommit regime — a
+heavy-tailed ``max_new`` mix whose worst-case page demand exceeds the
+pool (> 1x nominal capacity), with preemption of the youngest running
+sequence whenever an allocation genuinely fails.  Hypothesis (seeded
+fallback) asserts, at every transition:
+  * zero deadlocks: the drain completes within a bounded step count,
+  * no slot is ever double-assigned, no physical block has two owners,
+  * allocator conservation (``num_free + num_live == num_pages``),
+  * ``reserved_units`` equals the sum of live admission charges and
+    returns to exactly 0 at drain,
+  * every request finishes despite arbitrary preemption interleavings.
+
+Engine-level suite (slow, golden parity): a preempted-then-recomputed
+sequence must be TOKEN-FOR-TOKEN equal to an uninterrupted run of the
+same request — for dense / butterfly / mixed policies, for the host-swap
+restore path, and for a victim whose prefix pages are shared with a
+surviving sequence (the refcount-correct release case).  The decode step
+must compile exactly once across preemption cycles: preempted slots ride
+along as idle rows, the page table is a value-only input.
+"""
+import random
+
+import pytest
+
+from repro.serving.cache import PageAllocator, PoolExhausted
+from repro.serving.request import Request, Sequence, SequenceState
+from repro.serving.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+slow = pytest.mark.slow
+
+
+# ------------------------------------------------- host-level simulation ----
+
+
+def _mini_engine_drain(shapes, num_slots, pool_frac, overcommit):
+    """Drive Scheduler + PageAllocator exactly the way the engine does —
+    prefill allocation for admitted waves (wave-protected reclaim), one
+    lazy block per page-boundary crossing during decode, preempt-youngest
+    on exhaustion — and assert every invariant along the way.  Returns
+    the lifetime preemption count."""
+    ps = 4
+    seqs = [Sequence(Request(f"r{i}", tuple(range(1, p + 1)), m))
+            for i, (p, m) in enumerate(shapes)]
+    need = lambda s: -(-s.reserved_tokens // ps)
+    worst_total = sum(need(s) for s in seqs)
+    # a pool at pool_frac of the worst-case demand (but always >= the
+    # largest single request): overcommit pressure whenever pool_frac < 1
+    num_pages = max(max(need(s) for s in seqs),
+                    int(worst_total * pool_frac))
+    sched = Scheduler(num_slots, page_size=ps, num_pages=num_pages,
+                      max_len=max(s.reserved_tokens for s in seqs),
+                      overcommit=overcommit)
+    alloc = PageAllocator(num_pages)
+    owned: dict[str, list[int]] = {}  # rid -> physical blocks
+    pos: dict[str, int] = {}          # rid -> next KV write position
+
+    def check():
+        assert alloc.num_free + alloc.num_live == num_pages, "not conserved"
+        slots = [s.slot for s in sched.active.values()]
+        assert len(slots) == len(set(slots)), "slot double-assigned"
+        blocks = [b for bs in owned.values() for b in bs]
+        assert len(blocks) == len(set(blocks)), "block double-owned"
+        assert alloc.num_live == len(blocks)
+        assert sched.reserved_units == sum(
+            s.charged_units for s in sched.active.values())
+        assert sched.reserved_units <= num_pages
+
+    def preempt_youngest(protect=frozenset()):
+        victims = [s for s in sched.active.values()
+                   if s.request_id not in protect]
+        assert victims, "pool exhausted with no preemptable victim (deadlock)"
+        v = max(victims, key=lambda s: s.admit_seqno)
+        alloc.release(owned.pop(v.request_id))
+        pos.pop(v.request_id)
+        sched.preempt(v)
+        return v
+
+    def alloc_with_reclaim(n, protect):
+        while True:
+            try:
+                return alloc.alloc(n)
+            except PoolExhausted:
+                preempt_youngest(protect)
+
+    sched.add_all(seqs)
+    finished = set()
+    for _ in range(80 * len(seqs) + 80):  # bounded: fail instead of hanging
+        check()
+        if not sched.has_work:
+            break
+        admitted = sched.admit()
+        if admitted:
+            # the engine protects the whole admitted wave during prefill:
+            # the sum of its charges covers the sum of its allocations
+            wave = frozenset(s.request_id for s in admitted)
+            for s in admitted:
+                n = -(-max(s.prefill_len, 1) // ps)
+                owned[s.request_id] = list(alloc_with_reclaim(n, wave))
+                pos[s.request_id] = s.prefill_len
+                if not s.tokens:
+                    s.append_token(7)  # prefill samples the first token
+            check()
+            continue
+        assert sched.active, "waiting requests but nothing active (deadlock)"
+        # one decode step over every active slot, lazy growth at boundaries
+        for s in sorted(sched.active.values(), key=lambda x: x.request_id):
+            while s.state is SequenceState.RUNNING:
+                rid = s.request_id
+                needed = -(-(pos[rid] + 1) // ps)
+                if needed <= len(owned[rid]):
+                    break
+                try:
+                    owned[rid].extend(alloc.alloc(1))
+                except PoolExhausted:
+                    preempt_youngest()  # may preempt s itself
+            if s.state is not SequenceState.RUNNING:
+                continue
+            pos[s.request_id] += 1
+            s.append_token(7)
+            if s.done:
+                alloc.release(owned.pop(s.request_id))
+                pos.pop(s.request_id)
+                sched.retire(s)
+                finished.add(s.request_id)
+        check()
+
+    assert not sched.has_work, "drain did not complete (deadlock)"
+    assert finished == {s.request_id for s in seqs}
+    assert sched.reserved_units == 0
+    assert alloc.num_live == 0 and alloc.num_free == num_pages
+    return sched.preemptions
+
+
+# heavy-tailed mix: mostly short generations, a fat tail of long ones
+_heavy_tailed_shapes = lambda rng, n: [
+    (rng.randint(1, 8),
+     rng.randint(16, 40) if rng.random() < 0.3 else rng.randint(1, 4))
+    for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+    _shape = st.tuples(st.integers(1, 8),
+                       st.one_of(st.integers(1, 4), st.integers(16, 40)))
+
+    @given(shapes=st.lists(_shape, min_size=1, max_size=14),
+           num_slots=st.integers(1, 6),
+           pool_frac=st.sampled_from([0.35, 0.5, 0.75, 1.0]),
+           overcommit=st.sampled_from([1.0, 1.5, 2.0, 4.0, 8.0]))
+    @settings(max_examples=150, deadline=None)
+    def test_overcommit_drain_invariants_hypothesis(shapes, num_slots,
+                                                    pool_frac, overcommit):
+        _mini_engine_drain(shapes, num_slots, pool_frac, overcommit)
+
+
+@pytest.mark.parametrize("trial", range(30))
+def test_overcommit_drain_invariants_seeded(trial):
+    rng = random.Random(9000 + trial)
+    shapes = _heavy_tailed_shapes(rng, rng.randint(1, 14))
+    _mini_engine_drain(shapes, rng.randint(1, 6),
+                       rng.choice([0.35, 0.5, 0.75, 1.0]),
+                       rng.choice([1.0, 1.5, 2.0, 4.0, 8.0]))
+
+
+def test_overcommit_pressure_actually_preempts():
+    """Sanity that the property suite exercises the interesting regime:
+    a pool well under the worst-case demand with aggressive overcommit
+    must produce at least one preemption (and still drain losslessly)."""
+    shapes = [(4, 28)] * 2 + [(4, 4)] * 4  # 2 long + 4 short requests
+    preemptions = _mini_engine_drain(shapes, num_slots=6, pool_frac=0.5,
+                                     overcommit=8.0)
+    assert preemptions >= 1
+
+
+# ----------------------------------------------- engine parity under oc ----
+
+
+ARCH = "qwen3-4b"
+PAGE = 4
+
+
+def _cfg(policy_name: str):
+    from repro.configs import get_config, reduced
+    from repro.configs.base import recommended_policy
+    from repro.core.policy import uniform_policy
+
+    cfg = reduced(get_config(ARCH))
+    if policy_name == "butterfly":
+        cfg = cfg.with_fact(uniform_policy("butterfly", block_size=16))
+    elif policy_name == "mixed":
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+    else:
+        assert policy_name == "dense"
+    return cfg
+
+
+def _mixed_requests():
+    """2 long + 4 short greedy requests, worst-case 28 pages at PAGE=4 —
+    far past the 12-page pressure pool, so longs must be preempted."""
+    P = 8
+    out = [Request("long-0", tuple(range(1, P + 1)), 24),
+           Request("long-1", tuple(range(11, 11 + P)), 24)]
+    out += [Request(f"short-{i}", tuple(range(31 + i, 31 + i + P)), 4)
+            for i in range(4)]
+    return out
+
+
+def _run_pair(cfg, params, *, swap=False, prefix=False, requests=None,
+              num_pages=12, overcommit=4.0, num_slots=6, max_len=32):
+    """Reference run (pool big enough to never preempt) vs pressure run
+    (overcommitted small pool); returns (ref_tokens, engine, outputs)."""
+    from repro.serving import Engine
+
+    reqs = requests if requests is not None else _mixed_requests
+    ref = Engine(params, cfg, max_len=max_len, num_slots=num_slots,
+                 page_size=PAGE, num_pages=64, prefix_cache=prefix)
+    ref_out = {o.request_id: o.tokens for o in ref.run(reqs())}
+    eng = Engine(params, cfg, max_len=max_len, num_slots=num_slots,
+                 page_size=PAGE, num_pages=num_pages, overcommit=overcommit,
+                 swap=swap, prefix_cache=prefix)
+    outs = eng.run(reqs())
+    return ref_out, eng, outs
+
+
+@slow
+@pytest.mark.parametrize("policy_name", ["dense", "butterfly", "mixed"])
+def test_preempted_recompute_is_bit_exact(policy_name):
+    """A preempted-then-recomputed sequence equals the uninterrupted run
+    token for token, across the factorization policies; decode compiles
+    exactly once across preemption cycles; the pool drains to zero."""
+    import jax
+    from repro.models import init_params
+
+    cfg = _cfg(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ref_out, eng, outs = _run_pair(cfg, params)
+    got = {o.request_id: o.tokens for o in outs}
+    assert got == ref_out, f"{policy_name}: preempted run diverged"
+    assert eng.stats.preemptions >= 1, "pressure pool never preempted"
+    assert eng.stats.recomputed >= 1
+    assert eng.decode_compile_count() in (None, 1), (
+        "preemption forced a decode recompile")
+    assert eng.cache.allocator.num_live == 0
+    assert eng.scheduler.reserved_units == 0
+    # the preempted request reports its preemption count to the client
+    assert any(o.preemptions >= 1 for o in outs)
+
+
+@slow
+def test_preempted_swap_restore_is_bit_exact():
+    """--swap: the victim's mapped pages round-trip through pinned host
+    memory and restore verbatim (no recompute prefill), bit-exactly."""
+    import jax
+    from repro.models import init_params
+
+    cfg = _cfg("dense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ref_out, eng, outs = _run_pair(cfg, params, swap=True)
+    got = {o.request_id: o.tokens for o in outs}
+    assert got == ref_out, "swap restore diverged"
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.swapped_out >= 1
+    assert eng.stats.swapped_in == eng.stats.swapped_out
+    assert eng.decode_compile_count() in (None, 1)
+    assert eng.cache.allocator.num_live == 0
+    assert eng.scheduler.reserved_units == 0
+
+
+@slow
+def test_preempted_victim_with_shared_prefix_pages():
+    """The refcount-correct release case: the victim's prompt pages are
+    shared (via the prefix trie) with a SURVIVING sequence — preemption
+    must not free them under the survivor, and the victim's recompute
+    re-matches the shared head.  Token parity + only trie-resident pages
+    live at drain."""
+    import jax
+    from repro.models import init_params
+
+    cfg = _cfg("mixed")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    head = tuple(range(1, 9))  # shared 8-token head = 2 full pages
+
+    def reqs():
+        return [Request("a", head + (21, 22), 20),
+                Request("b", head + (23, 24), 20),
+                Request("c", tuple(range(41, 49)), 4),
+                Request("d", tuple(range(51, 59)), 4)]
+
+    ref_out, eng, outs = _run_pair(cfg, params, prefix=True, requests=reqs,
+                                   num_pages=14, num_slots=4)
+    got = {o.request_id: o.tokens for o in outs}
+    assert got == ref_out, "shared-prefix preemption diverged"
+    assert eng.stats.preemptions >= 1
+    assert eng.decode_compile_count() in (None, 1)
+    assert eng.scheduler.reserved_units == 0
+    # shared prefix pages survive their holder's preemption: at drain the
+    # only live blocks are the trie's residents, refcounted exactly once
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages

@@ -200,3 +200,266 @@ def test_retire_rejects_non_active_sequence():
     sched.add(a)
     with pytest.raises(ValueError):
         sched.retire(a)  # still waiting, not active
+
+
+# ------------------------------------------------------------- overcommit ----
+
+
+def test_overcommit_constructor_validations():
+    with pytest.raises(ValueError, match=">= 1.0"):
+        Scheduler(2, page_size=4, num_pages=8, overcommit=0.5)
+    with pytest.raises(ValueError, match="paged regime"):
+        Scheduler(2, token_budget=100, overcommit=2.0)
+    with pytest.raises(ValueError, match="paged regime"):
+        Scheduler(2, overcommit=2.0)  # no budget at all: nothing to overcommit
+
+
+def test_overcommit_charge_formula():
+    """charge = current footprint (pages) + 1/overcommit of the remaining
+    worst-case growth, capped at the worst case; reduces to need() at 1.0."""
+    sched = Scheduler(2, page_size=4, num_pages=16, max_len=100,
+                      overcommit=2.0)
+    s = _seq(0, 4, 28)  # worst = ceil(32/4) = 8 pages
+    assert sched.need(s) == 8
+    # fresh: cur = 4 prompt + 1 next-write = 5 tokens -> 2 pages; margin
+    # = ceil((8-2)/2) = 3
+    assert sched.charge(s) == 5
+    s.tokens.extend([7] * 10)  # resumed mid-flight: 14 tokens -> 4 pages
+    assert sched.charge(s) == 6  # 4 + ceil(4/2)
+    s.tokens.extend([7] * 17)  # 31 tokens -> 8 pages: at the worst case
+    assert sched.charge(s) == 8  # never above need()
+    # overcommit = 1.0 is exactly the worst-case reservation
+    ref = Scheduler(2, page_size=4, num_pages=16, max_len=100)
+    assert ref.charge(_seq(1, 4, 28)) == ref.need(_seq(1, 4, 28)) == 8
+
+
+def test_overcommit_admits_more_than_worst_case_reservation():
+    """The point of the feature: requests whose worst cases sum past the
+    pool are co-resident when charged by current footprint."""
+    # two requests, each worst-case 8 pages, pool of 10: worst-case
+    # reservation can hold only one at a time...
+    wc = Scheduler(2, page_size=4, num_pages=10, max_len=100)
+    wc.add_all([_seq(0, 4, 28), _seq(1, 4, 28)])
+    assert len(wc.admit()) == 1
+    # ...overcommit=2 charges 5 each and runs both
+    oc = Scheduler(2, page_size=4, num_pages=10, max_len=100, overcommit=2.0)
+    oc.add_all([_seq(0, 4, 28), _seq(1, 4, 28)])
+    assert len(oc.admit()) == 2
+    assert oc.reserved_units == 10
+
+
+def test_preempt_requeues_at_head_and_restores_accounting():
+    sched = Scheduler(num_slots=2, page_size=4, num_pages=10, max_len=100)
+    a, b, c = _seq(0, 8, 8), _seq(1, 8, 8), _seq(2, 4, 4)
+    sched.add_all([a, b, c])
+    assert sched.admit() == [a, b]  # 4 + 4 pages; c waits on a slot
+    assert sched.reserved_units == 8
+    sched.preempt(b)
+    assert b.state is SequenceState.PREEMPTED
+    assert b.slot is None and b.charged_units is None
+    assert b.preemptions == 1 and sched.preemptions == 1
+    assert sched.reserved_units == 4
+    # FIFO preserved: the victim re-admits BEFORE the younger waiter c
+    assert sched.admit() == [b]
+    assert sched.reserved_units == 8
+    sched.retire(a), sched.retire(b)
+    assert sched.admit() == [c]
+    sched.retire(c)
+    assert sched.reserved_units == 0 and sched.free_slots == 2
+
+
+def test_preempt_rejects_non_active_sequence():
+    sched = Scheduler(num_slots=1, page_size=4, num_pages=4, max_len=16)
+    a = _seq(0, 2, 2)
+    sched.add(a)
+    with pytest.raises(ValueError):
+        sched.preempt(a)  # waiting, not active
+
+
+def test_resumed_sequence_charged_for_generated_tokens():
+    """Re-admission must cover the recompute/restore allocation: a victim
+    that already produced k tokens is charged its grown footprint."""
+    sched = Scheduler(num_slots=1, page_size=4, num_pages=16, max_len=100,
+                      overcommit=4.0)
+    s = _seq(0, 4, 28)
+    sched.add(s)
+    sched.admit()
+    first_charge = s.charged_units
+    s.tokens.extend([7] * 12)  # 16 tokens of state when preempted
+    sched.preempt(s)
+    assert sched.reserved_units == 0
+    sched.admit()
+    assert s.charged_units > first_charge  # footprint grew while running
+    assert s.charged_units >= 4  # >= ceil(16/4): recompute alloc covered
+
+
+# ------------------------------- satellite: futile trie eviction on block ----
+
+
+class _FakeHook:
+    """Minimal prefix_hook: no matches, a resident-page counter, and an
+    evict() that records every call (the futile-eviction regression's
+    probe)."""
+
+    def __init__(self, resident: int):
+        self.resident_pages = resident
+        self.evict_calls: list[int] = []
+        self.noted = 0
+
+    def match(self, prompt):
+        return None
+
+    def pin(self, m):
+        raise AssertionError("pin without a match")
+
+    def unpin(self, m):
+        raise AssertionError("unpin without a match")
+
+    def note(self, m, prompt_len):
+        self.noted += 1
+
+    def evict(self, n):
+        self.evict_calls.append(n)
+        freed = min(n, self.resident_pages)
+        self.resident_pages -= freed
+        return freed
+
+
+def test_blocked_head_never_triggers_futile_trie_eviction():
+    """Satellite regression: when the head's shortfall exceeds the trie's
+    resident pages (it blocks on RESERVATIONS, not cached prefixes),
+    eviction cannot unblock it — the scheduler must leave the trie alone
+    instead of flushing every cached prefix once per step."""
+    hook = _FakeHook(resident=2)
+    sched = Scheduler(num_slots=4, page_size=4, num_pages=10, max_len=100)
+    sched.prefix_hook = hook
+    big = _seq(0, 16, 16)   # 8 pages; + 2 resident = the whole pool
+    head = _seq(1, 10, 10)  # 5 pages: over = 8+5+2-10 = 5 > resident 2
+    sched.add_all([big, head])
+    assert sched.admit() == [big]
+    for _ in range(5):  # head re-evaluated every step while blocked
+        assert sched.admit() == []
+    assert hook.evict_calls == [], "futile eviction fired on a blocked head"
+    assert hook.resident_pages == 2, "trie residency trashed for nothing"
+    assert hook.noted == 1  # counters moved only for the ADMITTED sequence
+    sched.retire(big)
+    assert sched.admit() == [head]
+
+
+def test_blocked_head_evicts_exactly_the_shortfall():
+    """When eviction CAN unblock the head, the scheduler asks the trie for
+    exactly the shortfall — never a full flush."""
+    hook = _FakeHook(resident=3)
+    sched = Scheduler(num_slots=4, page_size=4, num_pages=10, max_len=100)
+    sched.prefix_hook = hook
+    first = _seq(0, 10, 10)  # 5 pages; over = 5+3-10 < 0: no eviction
+    head = _seq(1, 8, 8)     # 4 pages: over = 5+4+3-10 = 2 <= resident 3
+    sched.add_all([first, head])
+    assert sched.admit() == [first, head]
+    assert hook.evict_calls == [2], "asked for more than the shortfall"
+    assert hook.resident_pages == 1
+
+
+# ------------------- satellite: admit/preempt/retire accounting property ----
+
+
+def _drain_with_preemption(shapes, num_slots, num_pages, overcommit,
+                           actions):
+    """Run a paged scheduler through an arbitrary admit/decode/preempt/
+    retire interleaving; assert accounting invariants at every transition
+    and ``reserved_units == 0`` once drained.  ``actions(active_sorted,
+    rng_like) -> list of (op, seq)`` with op in {'grow', 'preempt',
+    'retire'}."""
+    ps = 4
+    seqs = [_seq(i, p, m) for i, (p, m) in enumerate(shapes)]
+    worst = max((s.reserved_tokens + ps - 1) // ps for s in seqs)
+    pages = max(num_pages, worst)  # every request must be feasible
+    sched = Scheduler(num_slots, page_size=ps, num_pages=pages,
+                      max_len=max(s.reserved_tokens for s in seqs),
+                      overcommit=overcommit)
+    sched.add_all(seqs)
+
+    def check():
+        assert sched.reserved_units == sum(
+            s.charged_units for s in sched.active.values())
+        assert sched.reserved_units <= pages
+        assert all(s.charged_units is not None
+                   for s in sched.active.values())
+        slots = [s.slot for s in sched.active.values()]
+        assert len(slots) == len(set(slots))
+
+    finished = set()
+    for _ in range(60 * len(seqs) + 60):
+        sched.admit()
+        check()
+        if not sched.has_work:
+            break
+        assert sched.active, "waiting but nothing active (deadlock)"
+        active = sorted(sched.active.values(), key=lambda s: s.request_id)
+        progressed = False
+        for op, s in actions(active):
+            if sched.active.get(s.slot) is not s:
+                continue  # already acted on this round
+            if op == "grow" and len(s.tokens) < s.request.max_new - 1:
+                s.tokens.append(7)
+            elif op == "preempt":
+                before = sched.reserved_units
+                charge = s.charged_units
+                sched.preempt(s)
+                assert sched.reserved_units == before - charge
+                assert s.charged_units is None
+                assert sched.waiting[0] is s  # head re-enqueue
+            elif op == "retire":
+                sched.retire(s)
+                finished.add(s.request_id)
+                progressed = True
+            check()
+        if not progressed and sched.active:
+            # guarantee forward progress: retire the oldest active
+            oldest = min(sched.active.values(), key=lambda s: s.admit_seqno)
+            sched.retire(oldest)
+            finished.add(oldest.request_id)
+            check()
+
+    assert not sched.has_work
+    assert finished == {s.request_id for s in seqs}
+    # THE satellite invariant: arbitrary interleavings drain to exactly 0
+    assert sched.reserved_units == 0
+    assert sched.free_slots == num_slots
+
+
+if HAVE_HYPOTHESIS:
+    @given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 24)),
+                           min_size=1, max_size=12),
+           num_slots=st.integers(1, 6),
+           num_pages=st.integers(4, 24),
+           overcommit=st.sampled_from([1.0, 1.5, 2.0, 4.0]),
+           data=st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_preempt_accounting_invariants_hypothesis(
+            shapes, num_slots, num_pages, overcommit, data):
+        def actions(active):
+            ops = data.draw(st.lists(
+                st.tuples(st.sampled_from(["grow", "preempt", "retire"]),
+                          st.sampled_from(active)),
+                min_size=0, max_size=len(active) + 2))
+            return ops
+
+        _drain_with_preemption(shapes, num_slots, num_pages, overcommit,
+                               actions)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_preempt_accounting_invariants_seeded(trial):
+    rng = random.Random(4200 + trial)
+    shapes = [(rng.randint(1, 12), rng.randint(2, 24))
+              for _ in range(rng.randint(1, 12))]
+    overcommit = rng.choice([1.0, 1.5, 2.0, 4.0])
+
+    def actions(active):
+        return [(rng.choice(["grow", "preempt", "retire"]),
+                 rng.choice(active))
+                for _ in range(rng.randint(0, len(active) + 2))]
+
+    _drain_with_preemption(shapes, rng.randint(1, 6), rng.randint(4, 24),
+                           overcommit, actions)
