@@ -50,9 +50,18 @@ from repro.configs import get_config, reduced
 from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
 from repro.models import prefill as model_prefill
-from repro.serving import (Engine, Request, make_requests, param_bytes,
-                           percentile)
+from repro.serving import (Engine, LocalExecutor, Request, make_requests,
+                           param_bytes, percentile, resolve_engine_spec)
 from repro.serving.budget import plan_engine_report
+
+
+def _build_engine(params, cfg, max_len, **kw):
+    """Construct through the Executor seam — the same spec -> LocalExecutor
+    -> facade path serve.py uses, so the benchmarks measure the production
+    construction path, not a parallel one."""
+    mesh = kw.pop("mesh", None)
+    spec = resolve_engine_spec(cfg, max_len, mesh=mesh, **kw)
+    return Engine.from_executor(LocalExecutor(params, cfg, spec, mesh=mesh))
 
 
 def _seed_prefill(params, cfg, prompts, max_len):
@@ -96,11 +105,11 @@ def run(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
          f"tok_per_s={eng_tps:.1f};speedup_vs_seed={eng_tps / seed_tps:.2f}")
 
     # steady-state decode + end-to-end through the engine API
-    engine = Engine(params, cfg, max_len=max_len, num_slots=batch)
+    engine = _build_engine(params, cfg, max_len, num_slots=batch)
     reqs = make_requests([np.asarray(prompts[i]) for i in range(batch)],
                          max_new=max_new)
     engine.run(reqs)  # warm compile
-    engine2 = Engine(params, cfg, max_len=max_len, num_slots=batch)
+    engine2 = _build_engine(params, cfg, max_len, num_slots=batch)
     t0 = bench(lambda: engine2.run(reqs), reps=3, warmup=1)
     st = engine2.stats
     emit(f"serve/decode/engine/{arch}", 0.0, f"tok_per_s={st.decode_tps:.1f}")
@@ -109,8 +118,8 @@ def run(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
 
     if dp * tp > 1:  # --mesh mode: one SPMD decode dispatch across dp x tp
         mesh = make_serving_mesh(dp, tp)
-        mesh_engine = Engine(params, cfg, max_len=max_len, num_slots=batch,
-                             mesh=mesh)
+        mesh_engine = _build_engine(params, cfg, max_len, num_slots=batch,
+                                    mesh=mesh)
         mesh_engine.run(reqs)  # warm compile
         t_mesh = bench(lambda: mesh_engine.run(reqs), reps=3, warmup=0)
         compiles = mesh_engine.decode_compile_count()
@@ -165,8 +174,8 @@ def run_paged(arch: str = "qwen3-4b", batch: int = 4, prompt_len: int = 32,
          f"ratio={ratio:.2f}")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(params, cfg, max_len=max_len, num_slots=batch,
-                    page_size=page_size)
+    engine = _build_engine(params, cfg, max_len, num_slots=batch,
+                           page_size=page_size)
     rng = np.random.default_rng(0)
     # prompts fill their first block exactly and generate >= 2 tokens, so
     # the first decode write crosses a page boundary — on-demand table
@@ -225,7 +234,7 @@ def run_streaming(arch: str = "qwen3-4b", batch: int = 4,
         engine.run([short_req(tag)])
 
     # --- closed batch: the late request waits for the whole run ---------
-    closed = Engine(params, cfg, max_len=max_len, num_slots=slots)
+    closed = _build_engine(params, cfg, max_len, num_slots=slots)
     warm(closed, "warm-c")
     t_arrival = time.perf_counter()  # the short request "arrives" now...
     closed.run(long_reqs("c"))       # ...but the closed batch must drain
@@ -237,7 +246,7 @@ def run_streaming(arch: str = "qwen3-4b", batch: int = 4,
                                           - out.time_to_first_token)
 
     # --- streaming: submit mid-flight, watch for its first delta --------
-    stream = Engine(params, cfg, max_len=max_len, num_slots=slots)
+    stream = _build_engine(params, cfg, max_len, num_slots=slots)
     warm(stream, "warm-s")
     seqs = [stream.submit(r) for r in long_reqs("s")]
     finished = 0
@@ -308,15 +317,16 @@ def run_shared_prefix(arch: str = "qwen3-4b", prefix_len: int = 192,
                 Request(f"{tag}-warm", prefix + mk(tail_len), max_new))
 
     try:
-        engine = Engine(params, cfg, max_len=max_len, num_slots=2,
-                        page_size=page_size, num_pages=96, prefix_cache=True)
+        engine = _build_engine(params, cfg, max_len, num_slots=2,
+                               page_size=page_size, num_pages=96,
+                               prefix_cache=True)
     except ValueError as e:
         # recurrent stack: no KV pages to share
         print(f"{arch}: {e} — skipping the shared-prefix mode")
         return {"ttft_cold": 0.0, "ttft_hit": 0.0,
                 "ttft_ratio": float("inf"), "decode_compiles": None}
-    ref = Engine(params, cfg, max_len=max_len, num_slots=2,
-                 page_size=page_size, num_pages=96)
+    ref = _build_engine(params, cfg, max_len, num_slots=2,
+                        page_size=page_size, num_pages=96)
 
     # warm BOTH graphs before timing: the cold request pays the full-prompt
     # prefill + decode compiles, the warm one the tail-prefill graph
@@ -412,16 +422,17 @@ def run_overcommit(arch: str = "qwen3-4b", page_size: int = 4,
         return {s.request_id: tuple(s.tokens) for s in seqs}, peak, steps
 
     # unpressured reference: pool big enough to never preempt
-    ref = Engine(params, cfg, max_len=max_len, num_slots=slots,
-                 page_size=ps, num_pages=64)
+    ref = _build_engine(params, cfg, max_len, num_slots=slots,
+                        page_size=ps, num_pages=64)
     ref_out, _, _ = drive(ref)
     # worst-case reservation on the pressure pool
-    wc = Engine(params, cfg, max_len=max_len, num_slots=slots,
-                page_size=ps, num_pages=pool)
+    wc = _build_engine(params, cfg, max_len, num_slots=slots,
+                       page_size=ps, num_pages=pool)
     wc_out, wc_peak, _ = drive(wc)
     # overcommitted admission on the SAME pool, backed by preemption
-    oc = Engine(params, cfg, max_len=max_len, num_slots=slots,
-                page_size=ps, num_pages=pool, overcommit=4.0, swap=swap)
+    oc = _build_engine(params, cfg, max_len, num_slots=slots,
+                       page_size=ps, num_pages=pool, overcommit=4.0,
+                       swap=swap)
     oc_out, oc_peak, oc_steps = drive(oc)
 
     if wc_out != ref_out:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_serving_mesh
 from repro.models import decode_step, init_caches, init_params
-from repro.serving import AsyncEngine, Engine, SamplingParams, make_requests
+from repro.serving import (AsyncEngine, Engine, LocalExecutor, SamplingParams,
+                           make_requests, resolve_engine_spec)
 
 
 def serve_tokens(cfg, params, args) -> None:
@@ -44,9 +45,12 @@ def serve_tokens(cfg, params, args) -> None:
         max_new=args.max_new,
         sampling=SamplingParams(temperature=args.temperature))
     mesh = make_serving_mesh(args.dp, args.tp) if args.dp * args.tp > 1 else None
-    engine = Engine(params, cfg, max_len=int(lens.max()) + args.max_new,
-                    num_slots=min(args.batch, 4), mesh=mesh,
-                    page_size=args.page_size or None)
+    # construct through the Executor seam (same code path as serve.py):
+    # resolve sizing into a spec, build the local runner, wrap the facade
+    spec = resolve_engine_spec(cfg, int(lens.max()) + args.max_new,
+                               num_slots=min(args.batch, 4), mesh=mesh,
+                               page_size=args.page_size or None)
+    engine = Engine.from_executor(LocalExecutor(params, cfg, spec, mesh=mesh))
     kind = ("O(1) recurrent state" if cfg.sub_quadratic else
             f"paged KV: {engine.num_pages} x {engine.page_size}-token blocks"
             if engine.page_size is not None else "KV cache")

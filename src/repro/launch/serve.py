@@ -54,8 +54,9 @@ from repro.configs import get_config, reduced
 from repro.core.policy import FactorizationPolicy, uniform_policy
 from repro.launch.mesh import make_serving_mesh
 from repro.models import init_params
-from repro.serving import (AsyncEngine, Engine, Request, RequestOutput,
-                           SamplingParams, make_requests, percentile)
+from repro.serving import (AsyncEngine, Engine, LocalExecutor, Request,
+                           RequestOutput, SamplingParams, make_requests,
+                           percentile, resolve_engine_spec)
 from repro.serving.budget import plan_engine_report
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
@@ -74,7 +75,13 @@ def resolve_policy(args) -> FactorizationPolicy | None:
 
 
 def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
-    """Engine construction shared by the closed-batch and HTTP modes."""
+    """Engine construction shared by the closed-batch and HTTP modes.
+
+    Construction goes through the Executor seam: args normalize into an
+    :class:`EngineSpec` via ``resolve_engine_spec`` (the --dp/--tp mesh and
+    single-device paths share this one code path — the spec owns the mesh
+    rounding), a :class:`LocalExecutor` builds the runner, and the Engine
+    facade wraps it."""
     page_size = None if (args.fixed_slots or not args.page_size) \
         else args.page_size
     prefix = bool(getattr(args, "prefix_cache", False))
@@ -103,21 +110,23 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                      plan.dp_size, plan.num_slots, plan.token_budget,
                      f", {plan.num_pages} pages x {plan.page_size} tokens"
                      if plan.num_pages is not None else "")
-            # hand the engine the plan we just logged (num_slots is already a
+            # hand the spec the plan we just logged (num_slots is already a
             # dp multiple) instead of re-deriving it from the budget
-            return Engine(params, cfg, max_len=max_len,
-                          num_slots=plan.num_slots,
-                          token_budget=(None if plan.num_pages is not None
-                                        else plan.token_budget),
-                          page_size=plan.page_size,
-                          num_pages=plan.num_pages, mesh=mesh,
-                          prefix_cache=prefix, overcommit=overcommit,
-                          swap=swap)
-        return Engine(params, cfg, max_len=max_len,
-                      num_slots=(args.slots or min(args.batch, 8)),
-                      token_budget=args.token_budget or None,
-                      page_size=page_size, mesh=mesh, prefix_cache=prefix,
-                      overcommit=overcommit, swap=swap)
+            spec = resolve_engine_spec(
+                cfg, max_len, num_slots=plan.num_slots,
+                token_budget=(None if plan.num_pages is not None
+                              else plan.token_budget),
+                page_size=plan.page_size, num_pages=plan.num_pages,
+                mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
+                swap=swap)
+        else:
+            spec = resolve_engine_spec(
+                cfg, max_len, num_slots=(args.slots or min(args.batch, 8)),
+                token_budget=args.token_budget or None, page_size=page_size,
+                mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
+                swap=swap)
+        executor = LocalExecutor(params, cfg, spec, mesh=mesh)
+        return Engine.from_executor(executor)
     except ValueError as e:
         # e.g. --prefix-cache on a recurrent arch (needs pure attention)
         raise SystemExit(str(e))
@@ -206,7 +215,17 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             "decode_tokens": st.decode_tokens,
             "decode_steps": st.decode_steps,
             "decode_tps": st.decode_tps,
+            # one compile counter per dispatch kind: decode must stay at 1
+            # forever; prefill/prefix grow one per pow2 shape bucket, so a
+            # drift here means the bucketing regressed
             "decode_compile_count": engine.decode_compile_count(),
+            "prefill_compile_count": engine.prefill_compile_count(),
+            "prefix_compile_count": engine.prefix_compile_count(),
+            # host-vs-device wall time: device_time_s is spent inside
+            # compiled dispatches, host_time_s is step() overhead around
+            # them (scheduling, staging, cache bookkeeping)
+            "device_time_s": st.device_time,
+            "host_time_s": st.host_time,
         },
         "scheduler": {
             "num_slots": engine.num_slots,

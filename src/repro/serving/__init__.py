@@ -17,8 +17,15 @@ from repro.serving.cache import (
     SlotCache,
     SwapState,
 )
-from repro.serving.engine import Engine, EngineStats
+from repro.serving.core import EngineCore
+from repro.serving.engine import Engine
 from repro.serving.events import StepEvent, TokenDelta
+from repro.serving.executor import (
+    EngineSpec,
+    Executor,
+    LocalExecutor,
+    resolve_engine_spec,
+)
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch, token_digest
 from repro.serving.reference import token_by_token_greedy
 from repro.serving.request import (
@@ -31,14 +38,23 @@ from repro.serving.request import (
     make_requests,
     percentile,
 )
+from repro.serving.runner import ExecuteInput, ExecuteOutput, ModelRunner
 from repro.serving.scheduler import Scheduler
+from repro.serving.utils import EngineStats
 
 __all__ = [
     "AsyncEngine",
     "Engine",
+    "EngineCore",
     "EnginePlan",
+    "EngineSpec",
     "EngineStats",
+    "ExecuteInput",
+    "ExecuteOutput",
+    "Executor",
     "FinishReason",
+    "LocalExecutor",
+    "ModelRunner",
     "PageAllocator",
     "PagedSlotCache",
     "PoolExhausted",
@@ -60,6 +76,7 @@ __all__ = [
     "percentile",
     "plan_engine",
     "plan_engine_report",
+    "resolve_engine_spec",
     "slot_state_bytes",
     "token_by_token_greedy",
     "token_digest",

@@ -1,0 +1,498 @@
+"""EngineCore: the host-policy layer of the serving stack.
+
+Everything that decides WHAT runs lives here — the Scheduler, the prefix
+trie, admission/preemption/reclaim/resume policy, sequence lifecycle and
+retirement, and StepEvent emission.  The core never touches a device: it
+drives its :class:`repro.serving.executor.Executor` through the typed
+:class:`ExecuteInput`/:class:`ExecuteOutput` contract plus the executor's
+slot-indexed cache/staging operations, so the same policy code runs
+unchanged whether the executor fronts one local runner, a multi-process
+mesh, or (next PR) a disaggregated prefill/decode pair.  The import
+direction is one-way — core imports the runner's contract types, the
+runner imports nothing from here — and ``tools/layering_lint.py`` keeps
+it that way (no ``jax.jit`` outside the runner either).
+
+The public surface (``submit``/``step``/``abort``/``run``) is the same
+re-entrant step loop the monolithic Engine exposed; ``Engine`` in
+:mod:`repro.serving.engine` is now a thin facade over this class.  Every
+wall-clock second a ``step()`` spends OUTSIDE the runner's compiled
+dispatches accumulates into ``stats.host_time`` — the host-vs-device
+split ``/stats`` reports.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.serving.cache import PoolExhausted
+from repro.serving.events import StepEvent
+from repro.serving.executor import Executor
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import (Request, RequestOutput, Sequence,
+                                   SequenceState)
+from repro.serving.runner import ExecuteInput
+from repro.serving.scheduler import Scheduler
+
+
+def _sampling_columns(group: list[Sequence]):
+    """Per-row sampling params for an ExecuteInput, aligned with tokens."""
+    return (tuple(float(s.request.sampling.temperature) for s in group),
+            tuple(int(s.request.sampling.top_k) for s in group),
+            tuple(int(s.request.sampling.seed) for s in group))
+
+
+class EngineCore:
+    """Host state + policy over one Executor.
+
+    Construction is cheap: the executor already owns the compiled
+    dispatches and the cache; the core builds the Scheduler from the
+    executor's resolved :class:`EngineSpec` (paged admission when
+    ``page_size`` is set, token-budget otherwise), wraps the paged pool in
+    a :class:`PrefixCache` when the spec asks for one, and shares the
+    executor's :class:`EngineStats` block.
+    """
+
+    def __init__(self, executor: Executor, *, eos_id: int | None = None):
+        self.executor = executor
+        self.cfg = executor.cfg
+        spec = executor.spec
+        self.spec = spec
+        self.max_len = spec.max_len
+        self.num_slots = spec.num_slots
+        self.page_size = spec.page_size
+        self.num_pages = spec.num_pages
+        self.overcommit = spec.overcommit
+        self.swap_enabled = spec.swap
+        self.max_top_k = spec.max_top_k
+        self.eos_id = eos_id
+        if spec.page_size is not None:
+            self.scheduler = Scheduler(spec.num_slots, max_len=spec.max_len,
+                                       page_size=spec.page_size,
+                                       num_pages=spec.num_pages,
+                                       overcommit=spec.overcommit)
+        else:
+            self.scheduler = Scheduler(spec.num_slots, spec.token_budget,
+                                       max_len=spec.max_len)
+        self.stats = executor.stats
+        # radix-tree prefix cache over the paged pool (DESIGN.md section
+        # 12): admission consults the trie, fully shared prompt pages are
+        # mapped read-only into the slot, and only the unshared tail is
+        # prefilled — bit-identical to the uncached stream
+        self.prefix: PrefixCache | None = None
+        if spec.prefix_cache:
+            self.prefix = PrefixCache(executor.cache)
+            self.scheduler.prefix_hook = self.prefix
+        # request_id -> Sequence for everything submitted and not yet
+        # retired/aborted: what ``abort`` looks up between steps
+        self._live: dict[str, Sequence] = {}
+        # request_ids preempted during the CURRENT step (reported as
+        # informational tokenless events, then cleared)
+        self._preempted_now: list[str] = []
+
+    # ---------------------------------------------------------- lifecycle --
+    def validate(self, seq: Sequence) -> None:
+        """Raise if ``seq`` can never be served: scheduler feasibility
+        (max_len capacity + token/page budget — the scheduler owns those
+        bounds) plus the runner's compiled sampler limits (top_k width,
+        stop-token ids inside the vocabulary)."""
+        self.scheduler.validate(seq)
+        tk = seq.request.sampling.top_k
+        if self.max_top_k < tk < self.cfg.vocab_size:
+            raise ValueError(
+                f"{seq.request_id}: top_k = {tk} exceeds the engine's "
+                f"max_top_k = {self.max_top_k}; construct the Engine "
+                "with a larger max_top_k")
+        # id validation has ONE home, here: out-of-range prompt ids would
+        # otherwise be silently clamped by the jitted embedding gather and
+        # serve garbage instead of erroring (untrusted HTTP clients included)
+        v = self.cfg.vocab_size
+        bad = [t for t in seq.request.prompt if not 0 <= t < v]
+        if bad:
+            raise ValueError(
+                f"{seq.request_id}: prompt ids {bad[:8]} outside the "
+                f"vocabulary [0, {v})")
+        bad = [t for t in seq.request.sampling.stop_tokens
+               if not 0 <= t < v]
+        if bad:
+            raise ValueError(
+                f"{seq.request_id}: stop_tokens {bad} outside the "
+                f"vocabulary [0, {v})")
+
+    def submit(self, request: Request) -> Sequence:
+        """Enqueue one request for the step loop (legal at any time, before
+        or between ``step()`` calls).  Validates up front — an infeasible
+        request raises here and nothing is enqueued.  Returns the live
+        :class:`Sequence` (its ``to_output()`` is the final result once a
+        step retires it)."""
+        if request.request_id in self._live:
+            raise ValueError(f"{request.request_id}: already submitted")
+        seq = Sequence(request)
+        self.validate(seq)
+        self.scheduler.add(seq)
+        self._live[request.request_id] = seq
+        return seq
+
+    def abort(self, request_id: str) -> StepEvent:
+        """Cancel a live request between steps.  A WAITING sequence is
+        dequeued; a RUNNING one releases its slot and (paged) frees its
+        pages immediately — no other slot's state is touched, and the next
+        ``step()`` can admit into the freed capacity.  Returns the terminal
+        (tokenless) event; ``to_output()`` keeps the partial tokens."""
+        seq = self._live.pop(request_id, None)
+        if seq is None:
+            raise KeyError(f"{request_id}: not a live request")
+        if seq.slot is None:  # WAITING: nothing reserved yet
+            self.scheduler.remove_waiting(seq)
+            seq.mark_aborted()
+            seq.state = SequenceState.FINISHED
+            seq.t_finished = seq.now()
+        else:  # RUNNING: release the slot, free pages, clear host state
+            seq.mark_aborted()
+            self.executor.evict([seq.slot])
+            slot = seq.slot
+            self.scheduler.retire(seq)
+            self.executor.clear_slot(slot)
+        return StepEvent(request_id, token=None, index=None,
+                         finish_reason=seq.finish_reason)
+
+    def step(self) -> list[StepEvent]:
+        """ONE admit-or-decode iteration; re-entrant — call until the
+        scheduler drains (or forever, interleaving ``submit``/``abort``
+        between calls).  If the queue head can be admitted this step is a
+        prefill (first token per admitted sequence); otherwise all active
+        slots take one decode step.  Finished sequences are retired before
+        returning, so a freed slot is admissible by the NEXT call — one
+        admission or one decode dispatch per call, never both.  Returns one
+        event per sequence that progressed (empty when idle)."""
+        if not self.scheduler.has_work:
+            return []
+        t0 = time.perf_counter()
+        dev0 = self.stats.device_time
+        try:
+            self._preempted_now = []
+            admitted = self.scheduler.admit()
+            if admitted:
+                before = {s.request_id: len(s.tokens) for s in admitted}
+                self._prefill_admitted(admitted)
+                # resumed sequences (recompute/swap restore) append no token
+                # on their re-admission step — their next token comes from
+                # decode — so only sequences whose token count grew produce
+                # a delta
+                progressed = [s for s in admitted
+                              if len(s.tokens) > before[s.request_id]]
+            else:
+                active = list(self.scheduler.active.values())
+                if not active:
+                    raise RuntimeError(
+                        "scheduler stalled: waiting requests but nothing "
+                        "active")
+                progressed = self._decode_once(active)
+            events = [StepEvent(rid, token=None, index=None, preempted=True)
+                      for rid in self._preempted_now]
+            events += [StepEvent(s.request_id, s.tokens[-1],
+                                 len(s.tokens) - 1, s.finish_reason)
+                       for s in progressed]
+            self._retire_finished()
+            return events
+        finally:
+            # whatever this step spent outside the runner's dispatch
+            # windows is host overhead: scheduling, array staging, cache
+            # bookkeeping, event emission
+            dev = self.stats.device_time - dev0
+            self.stats.host_time += max(
+                0.0, (time.perf_counter() - t0) - dev)
+
+    def run(self, requests: list[Request]) -> list[RequestOutput]:
+        """Closed-batch compatibility wrapper: submit all, step until
+        drained; returns outputs in request order.  The whole batch is
+        validated BEFORE anything is enqueued — a mid-batch rejection must
+        not leave ghost sequences in the queue that eat slots on the next
+        run and whose outputs nobody collects (``submit`` validates per
+        request, which is the same guarantee for a single enqueue)."""
+        seqs = [Sequence(r) for r in requests]
+        ids = [s.request_id for s in seqs]
+        if len(set(ids)) != len(ids) or any(i in self._live for i in ids):
+            raise ValueError("duplicate request_id in batch or already live")
+        for s in seqs:
+            self.validate(s)
+        for s in seqs:
+            self.scheduler.add(s)
+            self._live[s.request_id] = s
+        try:
+            while self.scheduler.has_work:
+                self.step()
+        except BaseException:
+            # a failed STEP must give the same no-ghost guarantee as a
+            # failed validation: retire anything that finished, then abort
+            # this run's still-live sequences so nothing lingers in _live /
+            # the queue / the slots to poison the next run.  Best-effort —
+            # the original error propagates.
+            try:
+                self._retire_finished()
+            except Exception:
+                pass
+            for s in seqs:
+                if self._live.get(s.request_id) is s:
+                    try:
+                        self.abort(s.request_id)
+                    except Exception:
+                        pass
+            raise
+        return [s.to_output() for s in seqs]
+
+    # ------------------------------------------------------------ prefill --
+    def _prefill_admitted(self, admitted: list[Sequence]) -> None:
+        """Batched prefill: pure-attention stacks take mixed lengths in one
+        right-padded dispatch; recurrent stacks are grouped by exact length
+        (pad tokens would pollute O(1) state) — still one dispatch per group,
+        never per token.  With the prefix cache on, trie hits split off into
+        their own tail-only dispatch (the matched pages are already
+        resident) and misses take the full path; both adopt their prompt
+        pages into the trie afterwards.
+
+        Resumed sequences ride the same dispatches: a preempted sequence's
+        ``prefill_tokens`` (prompt + generated-so-far minus the pending
+        last token) replace its prompt, rebuilding the exact KV state it
+        lost.  Swap-mode sequences skip prefill entirely and restore their
+        saved blocks.  The whole admitted wave is protected from being
+        preempted by its own prefill allocations — admission reserved the
+        wave's charges, so after reclaiming everyone else the wave always
+        fits (the no-deadlock argument in DESIGN.md section 13)."""
+        protect = frozenset(s.request_id for s in admitted)
+        hits, misses = [], []
+        for s in admitted:
+            if s.swap_state is not None:
+                self._swap_in(s, protect)
+            elif s.prefix_match is not None and s.prefix_match.matched_len > 0:
+                hits.append(s)
+            else:
+                misses.append(s)
+        if misses:
+            lengths = {s.prefill_len for s in misses}
+            if self.executor.attn_only or len(lengths) == 1:
+                groups = [misses]
+            else:
+                by_len: dict[int, list[Sequence]] = {}
+                for s in misses:
+                    by_len.setdefault(s.prefill_len, []).append(s)
+                groups = list(by_len.values())
+            for group in groups:
+                self._prefill_group(group, protect)
+        if hits:
+            self._prefill_prefix_group(hits, protect)
+
+    def _with_reclaim(self, fn, protect: frozenset):
+        """Run a pool-allocating operation, reclaiming pages (trie
+        eviction first, then preemption of the youngest unprotected
+        running sequence) and retrying until it succeeds or nothing more
+        can be reclaimed."""
+        while True:
+            try:
+                return fn()
+            except PoolExhausted as e:
+                if not self._reclaim(e.shortfall, protect):
+                    raise
+
+    def _prefill_group(self, group: list[Sequence],
+                       protect: frozenset = frozenset()) -> None:
+        """Full prefill for one group: ONE runner dispatch, then the cache
+        insert (retried under reclaim WITHOUT re-dispatching — the dispatch
+        output is already in hand, so a preemption-and-retry costs pages,
+        never a second forward), then first tokens and staging state."""
+        for s in group:
+            if s.tokens:
+                self.stats.recomputed += 1
+        temps, topks, seeds = _sampling_columns(group)
+        out = self.executor.execute(ExecuteInput(
+            kind="prefill",
+            slots=tuple(s.slot for s in group),
+            tokens=tuple(s.prefill_tokens for s in group),
+            temperatures=temps, top_ks=topks, seeds=seeds))
+        slots = [s.slot for s in group]
+        if self.page_size is not None:
+            self._with_reclaim(
+                lambda: self.executor.insert(
+                    slots, out.caches,
+                    lengths=[s.prefill_len for s in group]),
+                protect)
+        else:
+            self.executor.insert(slots, out.caches)
+
+        for j, s in enumerate(group):
+            if not s.tokens:
+                s.append_token(int(out.tokens[j]), self.eos_id)
+            # resumed recompute: the prefill's sample is DISCARDED — it was
+            # drawn at fold position prefill_len, but the sequence's next
+            # token belongs to fold position prefill_len + 1, which the
+            # next decode step samples.  The pending last token goes back
+            # into the step buffer; either way the staging row holds
+            # tokens[-1].
+            self.executor.set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=temps[j], top_k=topks[j], seed=seeds[j])
+        self._adopt_group(group)
+
+    def _prefill_prefix_group(self, group: list[Sequence],
+                              protect: frozenset = frozenset()) -> None:
+        """Tail-only prefill for trie hits: map the matched full pages
+        read-only, copy-on-write the partially matched page, allocate the
+        private tail pages, then ONE bucketed runner dispatch and the tail
+        K/V scatter into the mapped blocks.  The matched tokens are never
+        recomputed — that is the TTFT win.  Resumed sequences prefill
+        prompt + generated tail against the same matched prefix (the match
+        is on the PROMPT, whose length bounds ``matched_len``, so the tail
+        always covers the generated part)."""
+        for s in group:
+            m = s.prefix_match
+            self.executor.map_prefix(s.slot, m.full_blocks)
+            if m.partial_len > 0:
+                # the COW copy consumes the pin reference on the shared
+                # partial block; its content is identical, so the gather
+                # below may read either copy
+                self._with_reclaim(
+                    lambda s=s, m=m: self.executor.cow_block(
+                        s.slot, m.full_pages, m.partial_block), protect)
+            self._with_reclaim(
+                lambda s=s, m=m: self.executor.alloc_tail(
+                    s.slot, m.matched_len, s.prefill_len), protect)
+            if s.tokens:
+                self.stats.recomputed += 1
+
+        temps, topks, seeds = _sampling_columns(group)
+        out = self.executor.execute(ExecuteInput(
+            kind="prefix",
+            slots=tuple(s.slot for s in group),
+            tokens=tuple(s.prefill_tokens[s.prefix_match.matched_len:]
+                         for s in group),
+            prefix_lens=tuple(s.prefix_match.matched_len for s in group),
+            temperatures=temps, top_ks=topks, seeds=seeds))
+        # the first tokens exist the moment the dispatch returns — record
+        # them (this is each request's TTFT stamp) BEFORE the tail-KV
+        # scatter and trie adoption, which are cache maintenance the next
+        # decode step needs, not the client
+        for j, s in enumerate(group):
+            if not s.tokens:
+                s.append_token(int(out.tokens[j]), self.eos_id)
+            # resumed recompute: discard the prefill sample (wrong fold
+            # position for the NEXT token — see _prefill_group)
+            self.executor.set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=temps[j], top_k=topks[j], seed=seeds[j])
+        self.executor.write_tails(
+            [s.slot for s in group], out.caches,
+            starts=[s.prefix_match.matched_len for s in group],
+            lengths=[s.prefill_len for s in group],
+            rows=list(range(len(group))))
+        self._adopt_group(group)
+
+    def _adopt_group(self, group: list[Sequence]) -> None:
+        """Adopt each sequence's full prompt pages into the trie right
+        after its prefill and transfer the adopted units from the
+        sequence's admission charge to the trie's residency — the
+        ``reserved + resident`` sum the admission check bounds is exactly
+        conserved."""
+        if self.prefix is None:
+            return
+        for s in group:
+            adopted = self.prefix.adopt(s.request.prompt,
+                                        self.executor.cache.table[s.slot])
+            if adopted:
+                self.scheduler.transfer_to_shared(s, adopted)
+
+    # ------------------------------------------------------------- decode --
+    def _decode_once(self, active: list[Sequence]) -> list[Sequence]:
+        """One decode dispatch over all slots.  Returns the sequences that
+        actually progressed — under overcommit, growing a page table can
+        exhaust the pool, in which case the core reclaims (trie eviction,
+        then preempting the youngest running sequence, possibly one from
+        ``active``) and retries; preempted sequences drop out of the
+        dispatch (their slots ride along idle) and resume later."""
+        if self.page_size is not None:
+            # grow page tables before the dispatch: each active slot whose
+            # write position crosses into an unmapped block gets one from
+            # the free list.  At overcommit 1.0 admission reserved the
+            # worst case and this cannot fail; above it PoolExhausted
+            # triggers reclaim.  Values-only change — never a recompile.
+            for s in active:
+                while s.state is SequenceState.RUNNING:
+                    try:
+                        self.executor.ensure_mapped(
+                            s.slot, self.executor.position(s.slot))
+                        break
+                    except PoolExhausted as e:
+                        if not self._reclaim(e.shortfall, frozenset()):
+                            raise
+            active = [s for s in active
+                      if s.state is SequenceState.RUNNING]
+            if not active:
+                return []
+        out = self.executor.execute(ExecuteInput(
+            kind="decode", slots=tuple(s.slot for s in active)))
+        for s in active:
+            s.append_token(int(out.tokens[s.slot]), self.eos_id)
+        return active
+
+    # --------------------------------------------------------- preemption --
+    def _reclaim(self, shortfall: int, protect: frozenset) -> bool:
+        """Free pool pages for an allocation that just failed: evict
+        unreferenced prefix-trie pages first (cheapest — nothing loses
+        state), then preempt the YOUNGEST running sequence outside
+        ``protect`` (it has the least KV to rebuild and its victimization
+        cannot starve older work).  Returns False when nothing could be
+        reclaimed — the caller's retry would loop forever, so it re-raises."""
+        freed = 0
+        if self.prefix is not None:
+            freed = self.prefix.evict(shortfall)
+            if freed >= shortfall:
+                return True
+        victims = [s for s in self.scheduler.active.values()
+                   if s.request_id not in protect]
+        if not victims:
+            return freed > 0
+        self._preempt(max(victims, key=lambda s: s.admit_seqno))
+        return True
+
+    def _preempt(self, victim: Sequence) -> None:
+        """Take ``victim``'s pages and slot back: swap-mode saves its
+        mapped blocks to host first; eviction releases one reference per
+        mapped page (shared prefix pages stay live for the trie and any
+        other reader); the scheduler returns its reservation and requeues
+        it at the head of the waiting queue."""
+        slot = victim.slot
+        if self.swap_enabled:
+            victim.swap_state = self.executor.swap_out(slot)
+            self.stats.swapped_out += 1
+        self.executor.evict([slot])
+        self.scheduler.preempt(victim)
+        self.executor.clear_slot(slot)
+        self.stats.preemptions += 1
+        self._preempted_now.append(victim.request_id)
+
+    def _swap_in(self, s: Sequence, protect: frozenset) -> None:
+        """Restore a swapped-out sequence: allocate fresh blocks (reclaim
+        + retry on exhaustion), scatter the host copies back, and rebuild
+        the slot's staging state.  No prefill runs and no token is
+        appended — the pending last token goes back into the step buffer
+        and the next decode step continues the stream exactly where it
+        stopped."""
+        self._with_reclaim(
+            lambda: self.executor.swap_in(s.slot, s.swap_state), protect)
+        s.swap_state = None
+        self.executor.set_slot(
+            s.slot, token=s.tokens[-1], pos=s.prefill_len,
+            temperature=s.request.sampling.temperature,
+            top_k=s.request.sampling.top_k,
+            seed=s.request.sampling.seed)
+        self.stats.swapped_in += 1
+        self._adopt_group([s])
+
+    # ------------------------------------------------------------- retire --
+    def _retire_finished(self) -> None:
+        done = [s for s in self.scheduler.active.values() if s.done]
+        if not done:
+            return
+        self.executor.evict([s.slot for s in done])
+        for s in done:
+            slot = s.slot
+            self.scheduler.retire(s)
+            self.executor.clear_slot(slot)
+            self._live.pop(s.request_id, None)

@@ -13,6 +13,11 @@ import enum
 import time
 from typing import Sequence as TypingSequence
 
+# percentile moved to repro.serving.utils (one home for host-side helpers);
+# re-exported here because serve.py, benchmarks, and tests import it from
+# this module's historical location
+from repro.serving.utils import percentile  # noqa: F401
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -195,21 +200,6 @@ class Sequence:
             itl_p99=percentile(itl, 99.0) if itl else None,
             preemptions=self.preemptions,
         )
-
-
-def percentile(values: TypingSequence[float], q: float) -> float:
-    """Linear-interpolated percentile over a small host-side sample (the
-    per-request ITL lists are tiny; pulling in numpy here would make the
-    request module device-adjacent for no reason)."""
-    if not values:
-        raise ValueError("percentile of an empty sample")
-    xs = sorted(values)
-    if len(xs) == 1:
-        return xs[0]
-    pos = (q / 100.0) * (len(xs) - 1)
-    lo = int(pos)
-    hi = min(lo + 1, len(xs) - 1)
-    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
 
 @dataclasses.dataclass(frozen=True)

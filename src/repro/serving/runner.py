@@ -1,0 +1,476 @@
+"""ModelRunner: the device-execution layer of the serving stack.
+
+Everything that touches a jax device lives here — the three compiled
+dispatches (``step_fn``/``prefill_fn``/``prefix_fn``), sampler
+construction, pow2 shape bucketing, ``device_put``/sharding specs, the
+KV cache and its insert/evict/COW/swap execution, the per-slot staging
+arrays the decode step reads, and the per-dispatch compile + wall-time
+counters.  The runner speaks ARRAYS AND SLOT/PAGE INDICES ONLY: it is
+forbidden from importing ``scheduler``/``request``/``prefix_cache``/
+``events`` (enforced by ``tools/layering_lint.py``), never sees a
+``Sequence``, and makes no policy decisions — admission, preemption,
+reclaim and retirement belong to :class:`repro.serving.core.EngineCore`,
+which drives the runner through the :class:`ExecuteInput` /
+:class:`ExecuteOutput` contract (DESIGN.md section 14).
+
+The decode step is compiled once for ``(num_slots, 1)`` and never
+recompiled as requests come and go — idle slots ride along and their rows
+are fully overwritten at the next insert; the page table is a replicated
+VALUE input, so table growth never retraces.  Prefill dispatch shapes are
+bucketed to powers of two so a long-lived runner compiles
+O(log slots x log max_len) prefill variants, not one per admission shape.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill, prefill_with_prefix
+from repro.parallel import context as pctx
+from repro.serving.cache import PagedSlotCache, SlotCache
+from repro.serving.utils import EngineStats, pow2_bucket
+
+MAX_TOP_K = 64  # static top-k width compiled into the sampler (overridable)
+
+
+def _make_sampler(cfg: ModelConfig, max_top_k: int = MAX_TOP_K):
+    """(logits (N, padded_vocab), temps, top_k, seeds, positions) -> (N,) int32.
+
+    Vocab-pad logits are sliced away exactly once, here.  temperature 0 is
+    greedy argmax; otherwise softmax sampling at that temperature, optionally
+    truncated to the top-k logits.  The k candidates come from
+    ``jax.lax.top_k`` (O(V log k) on the decode hot path, not a full-vocab
+    sort) with its tie rule made explicit: equal logits are ranked by lower
+    index, and EXACTLY k candidates survive — so ``top_k=1`` always equals
+    greedy argmax, even at temperature > 0 and with tied maxima.  The PRNG
+    key for a token at sequence index i is fold_in(PRNGKey(seed), i) —
+    independent of batching/slots.
+    """
+    v = cfg.vocab_size
+    kmax = min(max_top_k, v)
+
+    def sample(logits, temps, top_k, seeds, positions):
+        lg = logits[..., :v].astype(jnp.float32)
+        n = lg.shape[0]
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        # rank-based truncation: keep positions 0..k-1 of the top_k ordering
+        # (ties broken toward lower index by lax.top_k), mask the rest
+        _, idxs = jax.lax.top_k(lg, kmax)  # (N, kmax)
+        keep = jnp.arange(kmax)[None, :] < jnp.minimum(top_k, kmax)[:, None]
+        sel = jnp.zeros(lg.shape, bool).at[
+            jnp.arange(n)[:, None], idxs].set(keep)
+        # top_k >= vocab means no truncation (same as top_k == 0)
+        cut = ((top_k > 0) & (top_k < v))[:, None] & ~sel
+        scaled = jnp.where(cut, -jnp.inf, lg) / jnp.maximum(temps, 1e-6)[:, None]
+        keys = jax.vmap(
+            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+        )(seeds, positions)
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+        return jnp.where(temps > 0, drawn, greedy)
+
+    return sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecuteInput:
+    """What the EngineCore hands the runner for one dispatch — plain host
+    data only (ints/floats/tuples), never a Sequence or any other policy
+    object, so a remote or multi-process runner can take the same payload
+    over a wire.
+
+    ``kind`` selects the dispatch:
+      "decode"   one step over ALL slots; ``slots`` names the rows whose
+                 staging state should advance (idle rows ride along).
+      "prefill"  batched full prefill; ``tokens[j]`` is row j's complete
+                 prefill token stream (prompt, or prompt + generated tail
+                 for a resumed recompute).
+      "prefix"   tail-only prefill against resident prefix pages;
+                 ``tokens[j]`` holds ONLY the unshared tail and
+                 ``prefix_lens[j]`` the matched (already-resident) length.
+
+    Sampling params travel per ROW for prefill/prefix (aligned with
+    ``tokens``); decode reads the staging arrays set at admission.
+    """
+
+    kind: str  # "decode" | "prefill" | "prefix"
+    slots: tuple[int, ...] = ()
+    tokens: tuple[tuple[int, ...], ...] = ()
+    prefix_lens: tuple[int, ...] = ()
+    temperatures: tuple[float, ...] = ()
+    top_ks: tuple[int, ...] = ()
+    seeds: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class ExecuteOutput:
+    """What a dispatch returns to the core.
+
+    ``tokens``: sampled next tokens as a host numpy array — indexed by SLOT
+    for decode (all rows present, idle rows garbage), by ROW for
+    prefill/prefix (bucketed length; rows past the real group are dummies).
+    ``caches``: the dispatch's K/V output when the core must place it —
+    full prefill caches to ``insert`` (fixed and paged alike), tail caches
+    to ``write_tails`` for prefix hits; None for decode (the runner updated
+    its pool in place).  Opaque to the core: it round-trips the pytree into
+    the runner's cache calls without looking inside.
+    """
+
+    tokens: np.ndarray
+    caches: object | None = None
+
+
+def _compiled_count(fn) -> int | None:
+    """Compile count of one jitted dispatch (None when the running jax
+    can't report it, or the fn was monkeypatched by a test spy)."""
+    size = getattr(fn, "_cache_size", None)
+    return int(size()) if size is not None else None
+
+
+class ModelRunner:
+    """Owns one device (or mesh) worth of serving execution state.
+
+    Sizes arrive RESOLVED (see :func:`repro.serving.executor.
+    resolve_engine_spec`): ``num_slots`` is already rounded to a dp
+    multiple on a mesh, ``num_pages`` already includes the mesh rounding,
+    and ``page_size=None`` selects the fixed-stripe :class:`SlotCache`.
+    ``stats`` is the shared :class:`EngineStats` block — the runner
+    accumulates the device-side fields (dispatch wall time + token/dispatch
+    counters) and the core the policy fields.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int,
+                 num_slots: int, page_size: int | None = None,
+                 num_pages: int | None = None,
+                 mesh=None, dp: tuple[str, ...] = ("data",),
+                 tp: str | None = "model",
+                 max_top_k: int = MAX_TOP_K,
+                 stats: EngineStats | None = None):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.mesh = mesh
+        self.dp = tuple(dp)
+        self.tp = tp
+        self.max_top_k = min(max_top_k, cfg.vocab_size)
+        self.stats = stats if stats is not None else EngineStats()
+        self.attn_only = all(m == "attn" for m, _ in cfg.pattern)
+        self._sample = _make_sampler(cfg, self.max_top_k)
+
+        if mesh is not None:
+            from repro.parallel.sharding import (guard_spec, partition_caches,
+                                                 partition_params, to_named)
+            self._param_sh = to_named(mesh, partition_params(cfg, mesh))
+            self.params = jax.device_put(params, self._param_sh)
+            pages = (num_pages + 1, page_size) if page_size is not None \
+                else None
+            cache_sh = to_named(mesh, partition_caches(
+                cfg, mesh, self.dp, num_slots, max_len, pages=pages))
+            if page_size is not None:
+                self.cache = PagedSlotCache(cfg, num_slots, max_len,
+                                            num_pages, page_size,
+                                            shardings=cache_sh)
+            else:
+                self.cache = SlotCache(cfg, num_slots, max_len,
+                                       shardings=cache_sh)
+            dpa = self.dp if len(self.dp) > 1 else self.dp[0]
+            self._slot_sh = NamedSharding(
+                mesh, guard_spec(P(dpa), (num_slots,), mesh))
+            self._tok_sh = NamedSharding(
+                mesh, guard_spec(P(dpa, None), (num_slots, 1), mesh))
+            self._rep_sh = NamedSharding(mesh, P())
+        else:
+            self.params = params
+            if page_size is not None:
+                self.cache = PagedSlotCache(cfg, num_slots, max_len,
+                                            num_pages, page_size)
+            else:
+                self.cache = SlotCache(cfg, num_slots, max_len)
+
+        # per-slot host state fed to the jitted step each iteration; the
+        # staging arrays live on the host, replicated from the mesh's point
+        # of view — every device sees the same admissions
+        ns = num_slots
+        self._tok = np.zeros((ns, 1), np.int32)
+        self._pos = np.zeros((ns,), np.int32)
+        self._temps = np.zeros((ns,), np.float32)
+        self._topk = np.zeros((ns,), np.int32)
+        self._seeds = np.zeros((ns,), np.uint32)
+
+        ps = page_size
+
+        def step_fn(params, data, table, tok, pos, temps, topk, seeds):
+            logits, data = decode_step(params, cfg, tok, data, pos,
+                                       page_table=table, page_size=ps,
+                                       kv_len=max_len if ps else None)
+            nxt = self._sample(logits[:, 0], temps, topk, seeds, pos + 1)
+            return nxt, data
+
+        def prefill_fn(params, prompts, lengths, temps, topk, seeds,
+                       ragged: bool):
+            logits, caches = prefill(params, cfg, prompts, max_len,
+                                     lengths if ragged else None)
+            last = jnp.take_along_axis(
+                logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+            first = self._sample(last, temps, topk, seeds, lengths)
+            return first, caches
+
+        def prefix_fn(params, data, tables, tails, plens, tlens,
+                      temps, topk, seeds):
+            # tail-only prefill against the resident prefix pages; the
+            # first token samples at the FULL prompt position, so the
+            # stream is bit-identical to the uncached fold_in sequence
+            logits, tail_caches = prefill_with_prefix(
+                params, cfg, tails, data, tables, plens)
+            last = jnp.take_along_axis(
+                logits, (tlens - 1)[:, None, None], axis=1)[:, 0]
+            first = self._sample(last, temps, topk, seeds, plens + tlens)
+            return first, tail_caches
+
+        if mesh is not None:
+            row = self._slot_sh
+            # the page table is replicated host state (None when unpaged)
+            self._step = jax.jit(
+                step_fn,
+                in_shardings=(self._param_sh, self.cache.shardings,
+                              self._rep_sh if ps else None, self._tok_sh,
+                              row, row, row, row),
+                out_shardings=(self._rep_sh, self.cache.shardings))
+        else:
+            self._step = jax.jit(step_fn)
+        # prefill shapes vary by (rows, width) bucket, so inputs are placed
+        # per call (_put) and jit infers shardings from the committed args
+        self._prefill = jax.jit(prefill_fn, static_argnames=("ragged",))
+        self._prefix_prefill = jax.jit(prefix_fn)
+
+    # ------------------------------------------------------------- mesh ---
+    def _trace_ctx(self):
+        """Install the runner's mesh for pctx.constrain during tracing."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return pctx.mesh_context(self.mesh, self.dp, self.tp)
+
+    def _put(self, x, spec: P | None = None):
+        """Host array -> device, sharded per ``spec`` (guarded) on a mesh."""
+        x = jnp.asarray(x)
+        if self.mesh is None or spec is None:
+            return x
+        from repro.parallel.sharding import guard_spec
+        return jax.device_put(x, NamedSharding(
+            self.mesh, guard_spec(spec, x.shape, self.mesh)))
+
+    def _dpa(self):
+        if self.mesh is None:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    # ------------------------------------------------------------ execute --
+    def execute(self, inp: ExecuteInput) -> ExecuteOutput:
+        """Run ONE compiled dispatch described by ``inp``.  Pure execution:
+        allocation-policy operations (cache insert with reclaim-on-
+        exhaustion, page-table growth) are separate calls so the core can
+        wrap THEM in its retry loop without ever re-dispatching."""
+        if inp.kind == "decode":
+            return self._execute_decode(inp)
+        if inp.kind == "prefill":
+            return self._execute_prefill(inp)
+        if inp.kind == "prefix":
+            return self._execute_prefix(inp)
+        raise ValueError(f"unknown ExecuteInput kind {inp.kind!r}")
+
+    def _execute_decode(self, inp: ExecuteInput) -> ExecuteOutput:
+        """One decode dispatch over ALL slots; rows named in ``inp.slots``
+        advance their staging state (token fed back, position +1)."""
+        table = self.cache.table_device() \
+            if self.page_size is not None else None
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            nxt, self.cache.data = self._step(
+                self.params, self.cache.data, table, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self._temps),
+                jnp.asarray(self._topk), jnp.asarray(self._seeds))
+        nxt = np.asarray(nxt)
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(inp.slots)
+        for slot in inp.slots:
+            self._tok[slot, 0] = nxt[slot]
+            self._pos[slot] += 1
+        return ExecuteOutput(tokens=nxt)
+
+    def _execute_prefill(self, inp: ExecuteInput) -> ExecuteOutput:
+        """Batched full prefill.  (rows, width) bucket to powers of two so
+        a long-lived runner compiles O(log slots * log max_len) prefill
+        variants, not one per admission shape; dummy rows/columns are
+        masked out by the ragged lengths and never inserted into the
+        cache.  Both caps round through pow2_bucket — clamping width at
+        max_len itself (or rows at num_slots) would reintroduce a non-pow2
+        bucket whenever the cap isn't a power of two; prefill slices the
+        decode-ready K/V back to max_len when width rounds past it."""
+        group_lens = [len(t) for t in inp.tokens]
+        width = max(group_lens)
+        rows = len(inp.tokens)
+        if self.attn_only:
+            width = pow2_bucket(width, self.max_len)
+            rows = pow2_bucket(rows, self.num_slots)
+        prompts = np.zeros((rows, width), np.int32)
+        lens = np.ones((rows,), np.int32)  # dummy rows: length-1 stub
+        temps = np.zeros((rows,), np.float32)
+        topk = np.zeros((rows,), np.int32)
+        seeds = np.zeros((rows,), np.uint32)
+        for j, toks in enumerate(inp.tokens):
+            prompts[j, : len(toks)] = toks
+            lens[j] = len(toks)
+            temps[j] = inp.temperatures[j]
+            topk[j] = inp.top_ks[j]
+            seeds[j] = inp.seeds[j]
+        ragged = bool((lens != width).any())
+
+        dpa = self._dpa()
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            first, caches = self._prefill(
+                self.params, self._put(prompts, P(dpa, None)),
+                self._put(lens, P(dpa)), self._put(temps, P(dpa)),
+                self._put(topk, P(dpa)), self._put(seeds, P(dpa)),
+                ragged=ragged)
+        jax.block_until_ready((first, caches))
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += int(sum(group_lens))
+        self.stats.prefill_dispatches += 1
+        return ExecuteOutput(tokens=np.asarray(first), caches=caches)
+
+    def _execute_prefix(self, inp: ExecuteInput) -> ExecuteOutput:
+        """Tail-only prefill for prefix hits: the matched pages are already
+        mapped into each slot's table (the core did map_prefix/cow_block/
+        alloc_tail first), so ONE bucketed ``prefill_with_prefix`` dispatch
+        computes just the tails.  Rows / tail width / prefix pages bucket
+        to powers of two so the compile cache stays O(log^3) for a
+        long-lived runner; dummy rows carry a zero prefix + length-1 tail
+        and are never scattered."""
+        ps = self.page_size
+        group = len(inp.slots)
+        tail_lens = [len(t) for t in inp.tokens]
+        rows = pow2_bucket(group, self.num_slots)
+        tailw = pow2_bucket(max(tail_lens), self.max_len)
+        npref = pow2_bucket(
+            max(math.ceil(p / ps) for p in inp.prefix_lens),
+            self.cache.max_pages)
+        tails = np.zeros((rows, tailw), np.int32)
+        tables = np.zeros((rows, npref), np.int32)
+        plens = np.zeros((rows,), np.int32)
+        tlens = np.ones((rows,), np.int32)
+        temps = np.zeros((rows,), np.float32)
+        topk = np.zeros((rows,), np.int32)
+        seeds = np.zeros((rows,), np.uint32)
+        for j in range(group):
+            pages = math.ceil(inp.prefix_lens[j] / ps)
+            tables[j, :pages] = self.cache.table[inp.slots[j], :pages]
+            tails[j, : tail_lens[j]] = inp.tokens[j]
+            plens[j] = inp.prefix_lens[j]
+            tlens[j] = tail_lens[j]
+            temps[j] = inp.temperatures[j]
+            topk[j] = inp.top_ks[j]
+            seeds[j] = inp.seeds[j]
+
+        dpa = self._dpa()
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            first, tail_caches = self._prefix_prefill(
+                self.params, self.cache.data,
+                self._put(tables, P(dpa, None)),
+                self._put(tails, P(dpa, None)), self._put(plens, P(dpa)),
+                self._put(tlens, P(dpa)), self._put(temps, P(dpa)),
+                self._put(topk, P(dpa)), self._put(seeds, P(dpa)))
+        jax.block_until_ready((first, tail_caches))
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefill_tokens += int(sum(tail_lens))
+        self.stats.prefill_dispatches += 1
+        return ExecuteOutput(tokens=np.asarray(first), caches=tail_caches)
+
+    # ----------------------------------------------- cache execution ops --
+    # The core decides WHEN to allocate/evict/swap (and how to reclaim on
+    # PoolExhausted); the runner executes the device-side movement.  All of
+    # these speak slot/page indices and cache pytrees only.
+    def insert(self, slots, caches, lengths=None) -> None:
+        """Scatter a prefill dispatch's K/V into the cache rows.  Paged
+        callers pass ``lengths`` (real token counts) so only the mapped
+        blocks are written; may raise PoolExhausted for the core to
+        reclaim-and-retry WITHOUT re-dispatching."""
+        if lengths is None:
+            self.cache.insert(slots, caches)
+        else:
+            self.cache.insert(slots, caches, lengths=lengths)
+
+    def write_tails(self, slots, tail_caches, *, starts, lengths, rows):
+        self.cache.write_tails(slots, tail_caches, starts=starts,
+                               lengths=lengths, rows=rows)
+
+    def map_prefix(self, slot: int, blocks) -> None:
+        self.cache.map_prefix(slot, blocks)
+
+    def cow_block(self, slot: int, page_index: int, src_block: int) -> None:
+        self.cache.cow_block(slot, page_index, src_block)
+
+    def alloc_tail(self, slot: int, matched_len: int, prefill_len: int):
+        return self.cache.alloc_tail(slot, matched_len, prefill_len)
+
+    def ensure_mapped(self, slot: int, pos: int) -> None:
+        self.cache.ensure_mapped(slot, pos)
+
+    def evict(self, slots) -> None:
+        self.cache.evict(slots)
+
+    def swap_out(self, slot: int):
+        return self.cache.swap_out(slot)
+
+    def swap_in(self, slot: int, state) -> None:
+        self.cache.swap_in(slot, state)
+
+    # ---------------------------------------------------------- staging ---
+    def set_slot(self, slot: int, *, token: int, pos: int,
+                 temperature: float, top_k: int, seed: int) -> None:
+        """(Re)arm one slot's decode staging row: the token to feed the
+        next step, its position, and the row's sampling params."""
+        self._tok[slot, 0] = token
+        self._pos[slot] = pos
+        self._temps[slot] = temperature
+        self._topk[slot] = top_k
+        self._seeds[slot] = seed
+
+    def clear_slot(self, slot: int) -> None:
+        """Reset one slot's staging row after its sequence left (retired
+        or aborted); the cache row was already evicted."""
+        self._tok[slot, 0] = 0
+        self._pos[slot] = 0
+        self._temps[slot] = 0.0
+        self._topk[slot] = 0
+        self._seeds[slot] = 0
+
+    def position(self, slot: int) -> int:
+        """The slot's current write position (next token index)."""
+        return int(self._pos[slot])
+
+    # -------------------------------------------------------------- views --
+    def decode_compile_count(self) -> int | None:
+        """Number of decode-step compilations so far.  Stays at 1 across
+        admissions/evictions — the mesh throughput benchmark asserts this."""
+        return _compiled_count(self._step)
+
+    def prefill_compile_count(self) -> int | None:
+        """Number of prefill-bucket compilations (one per (rows, width,
+        ragged) bucket a long-lived runner has seen)."""
+        return _compiled_count(self._prefill)
+
+    def prefix_compile_count(self) -> int | None:
+        """Number of prefix-prefill bucket compilations."""
+        return _compiled_count(self._prefix_prefill)

@@ -1,0 +1,246 @@
+"""Runner contract suite: the EngineCore <-> ModelRunner boundary.
+
+The layering refactor (DESIGN.md section 14) is only real if the contract
+holds under test: the page table must be a VALUE input (growth never
+recompiles the decode step), the same ``ExecuteInput`` must drive the
+fixed and paged cache layouts symmetrically, compile counters must move
+exactly once per pow2 shape bucket, and the runner must never receive a
+``Sequence`` (or any other host-policy object) — only plain host data an
+eventual remote executor could serialize.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving import (
+    Engine,
+    ExecuteInput,
+    LocalExecutor,
+    ModelRunner,
+    Request,
+    Sequence,
+    make_requests,
+    resolve_engine_spec,
+)
+
+MAX_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def attn_setup():
+    cfg = reduced(get_config("qwen3-4b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prefill_input(rng, cfg, lens, slots=None):
+    toks = tuple(tuple(int(t) for t in rng.integers(0, cfg.vocab_size, n))
+                 for n in lens)
+    n = len(lens)
+    return ExecuteInput(
+        kind="prefill",
+        slots=tuple(slots) if slots is not None else tuple(range(n)),
+        tokens=toks,
+        temperatures=(0.0,) * n, top_ks=(0,) * n, seeds=(0,) * n)
+
+
+# ----------------------------------------------------- value-only tables ----
+
+
+def test_page_table_growth_never_recompiles_decode(attn_setup):
+    """Decode across page-table growth: tables are replicated VALUE inputs,
+    so mapping new blocks as sequences cross page boundaries — and a whole
+    second admission wave — must leave the decode dispatch compiled once."""
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=2)
+    rng = np.random.default_rng(0)
+    # prompts fill their first block exactly; every other decode step then
+    # crosses into an unmapped page -> repeated on-demand growth
+    wave = lambda tag: [
+        Request(f"{tag}-{i}", tuple(int(t) for t in
+                                    rng.integers(0, cfg.vocab_size, 2)),
+                max_new=MAX_LEN - 4) for i in range(2)]
+    engine.run(wave("a"))
+    count = engine.decode_compile_count()
+    engine.run(wave("b"))
+    assert engine.decode_compile_count() == count
+    if count is not None:
+        assert count == 1
+
+
+# -------------------------------------------------- fixed/paged symmetry ----
+
+
+def test_fixed_and_paged_runners_agree_through_same_execute_input(attn_setup):
+    """The SAME ExecuteInput stream drives a fixed-stripe and a paged
+    runner to identical token streams — the cache layout is invisible
+    through the contract."""
+    cfg, params = attn_setup
+    fixed = ModelRunner(params, cfg, max_len=MAX_LEN, num_slots=2)
+    paged = ModelRunner(params, cfg, max_len=MAX_LEN, num_slots=2,
+                        page_size=4, num_pages=8)
+    rng = np.random.default_rng(1)
+    lens = [5, 3]
+    inp = _prefill_input(rng, cfg, lens)
+
+    out_f = fixed.execute(inp)
+    out_p = paged.execute(inp)
+    assert np.array_equal(out_f.tokens[:2], out_p.tokens[:2])
+
+    fixed.insert([0, 1], out_f.caches)
+    paged.insert([0, 1], out_p.caches, lengths=lens)
+    for j, slot in enumerate(inp.slots):
+        for r, out in ((fixed, out_f), (paged, out_p)):
+            r.set_slot(slot, token=int(out.tokens[j]), pos=lens[j],
+                       temperature=0.0, top_k=0, seed=0)
+
+    step = ExecuteInput(kind="decode", slots=(0, 1))
+    for _ in range(6):
+        for slot in step.slots:  # paged: on-demand table growth
+            paged.ensure_mapped(slot, paged.position(slot))
+        nf = fixed.execute(step).tokens
+        np_ = paged.execute(step).tokens
+        assert np.array_equal(nf[:2], np_[:2]), \
+            "fixed and paged decode diverged through the same ExecuteInput"
+    assert fixed.position(0) == paged.position(0) == lens[0] + 6
+
+
+# ------------------------------------------------------- compile buckets ----
+
+
+def test_prefill_compile_counters_move_once_per_bucket(attn_setup):
+    """Prefill shapes bucket to pow2 (rows, width, ragged): shapes landing
+    in an already-compiled bucket must not retrace; a new width bucket
+    compiles exactly one more variant."""
+    cfg, params = attn_setup
+    r = ModelRunner(params, cfg, max_len=MAX_LEN, num_slots=4)
+    rng = np.random.default_rng(2)
+
+    r.execute(_prefill_input(rng, cfg, [3, 4]))   # bucket (2, 4, ragged)
+    first = r.prefill_compile_count()
+    if first is None:
+        pytest.skip("running jax cannot report jit cache sizes")
+    assert first == 1
+    r.execute(_prefill_input(rng, cfg, [2, 4]))   # same bucket, new shape
+    assert r.prefill_compile_count() == 1
+    r.execute(_prefill_input(rng, cfg, [5, 6]))   # width bucket 8: one more
+    assert r.prefill_compile_count() == 2
+    assert r.decode_compile_count() == 0          # decode untouched
+    assert r.stats.prefill_dispatches == 3
+
+
+def test_prefix_compile_counter_reports_hit_dispatches(attn_setup):
+    """A trie hit runs the prefix dispatch (tail-only prefill): the third
+    compile counter must see it, and the decode counter must stay at 1."""
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=4,
+                    prefix_cache=True)
+    rng = np.random.default_rng(3)
+    head = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 8))
+    tail = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 4))
+    assert engine.prefix_compile_count() == 0
+    engine.run([Request("cold", head, max_new=2)])
+    assert engine.prefix_compile_count() == 0     # miss: full prefill path
+    engine.run([Request("warm", head + tail, max_new=2)])
+    assert engine.prefix.stats()["hits"] == 1
+    assert engine.prefix_compile_count() == 1
+    assert engine.decode_compile_count() == 1
+
+
+# ------------------------------------------------------ contract payload ----
+
+
+def _assert_plain_payload(inp):
+    assert isinstance(inp, ExecuteInput)
+    assert inp.kind in ("decode", "prefill", "prefix")
+    for slot in inp.slots:
+        assert isinstance(slot, int) and not isinstance(slot, bool)
+    for row in inp.tokens:
+        assert isinstance(row, tuple)
+        for t in row:
+            assert isinstance(t, int), f"token {t!r} is not a plain int"
+    for field in (inp.prefix_lens, inp.temperatures, inp.top_ks, inp.seeds):
+        for v in field:
+            assert isinstance(v, (int, float))
+            assert not isinstance(v, Sequence)
+
+
+def test_runner_never_receives_a_sequence(attn_setup):
+    """Everything crossing the executor seam is plain host data (ints,
+    floats, tuples) — a Sequence (or any policy object) in the payload
+    would make a remote runner impossible.  Exercised across all three
+    dispatch kinds, including a prefix hit."""
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2, page_size=4,
+                    prefix_cache=True)
+    seen = []
+    orig = engine.executor.execute
+
+    def spy(inp):
+        _assert_plain_payload(inp)
+        seen.append(inp.kind)
+        return orig(inp)
+
+    engine.executor.execute = spy
+    rng = np.random.default_rng(4)
+    head = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 8))
+    engine.run(make_requests([head, head[:6]], max_new=3))
+    engine.run([Request("hit", head + (1, 2), max_new=3)])
+    assert {"prefill", "prefix", "decode"} <= set(seen)
+
+
+# ------------------------------------------------------------- plumbing ----
+
+
+def test_local_executor_shares_stats_and_spec(attn_setup):
+    """The construction path serve.py/examples use: spec -> LocalExecutor
+    -> facade.  One EngineStats block is shared by runner (device counters)
+    and core (host_time), and the facade mirrors the resolved spec."""
+    cfg, params = attn_setup
+    spec = resolve_engine_spec(cfg, MAX_LEN, num_slots=3, page_size=4)
+    executor = LocalExecutor(params, cfg, spec)
+    engine = Engine.from_executor(executor)
+    assert engine.stats is executor.stats is executor.runner.stats
+    assert engine.num_slots == 3 and engine.page_size == 4
+    assert engine.num_pages == spec.num_pages
+
+    rng = np.random.default_rng(5)
+    engine.run(make_requests(
+        [rng.integers(0, cfg.vocab_size, 5)], max_new=4))
+    st = engine.stats
+    assert st.prefill_dispatches == 1 and st.decode_steps == 3
+    # host/device split: both sides of every step's wall clock accounted
+    assert st.device_time > 0 and st.host_time > 0
+
+
+def test_stats_payload_reports_compile_counters_and_time_split(attn_setup):
+    """/stats carries the three per-dispatch compile counters and the
+    host-vs-device wall-time split."""
+    from repro.launch.serve import ServerState, stats_payload
+    cfg, params = attn_setup
+    engine = Engine(params, cfg, max_len=MAX_LEN, num_slots=2)
+    rng = np.random.default_rng(6)
+    engine.run(make_requests([rng.integers(0, cfg.vocab_size, 4)],
+                             max_new=2))
+    eng = stats_payload(engine, ServerState())["engine"]
+    assert eng["decode_compile_count"] == 1
+    assert eng["prefill_compile_count"] == 1
+    assert eng["prefix_compile_count"] == 0
+    assert eng["device_time_s"] > 0
+    assert eng["host_time_s"] > 0
+
+
+def test_layering_lint_is_green():
+    """The CI lint itself: runner imports no host-policy module and
+    jax.jit stays confined to the runner."""
+    script = Path(__file__).resolve().parent.parent / "tools" \
+        / "layering_lint.py"
+    res = subprocess.run([sys.executable, str(script)],
+                         capture_output=True, text=True)
+    assert res.returncode == 0, res.stderr

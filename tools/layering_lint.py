@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Layering lint for the serving stack (DESIGN.md section 14).
+
+Two one-way rules keep the EngineCore / ModelRunner / Executor split from
+silently regressing back into a monolith:
+
+1. ``serving/runner.py`` (the device layer) must not import the host-policy
+   modules — ``scheduler``, ``request``, ``prefix_cache``, ``events`` — or
+   the ``repro.serving`` package root (which re-exports them).  The runner
+   speaks arrays and slot/page indices only; a Sequence or Scheduler
+   reaching it means policy leaked across the placement seam.
+
+2. ``jax.jit`` may be CALLED only inside the runner (plus
+   ``reference.py``, the deliberately separate seed-path parity oracle).
+   A jit appearing in ``core.py``/``engine.py``/anywhere else means device
+   execution leaked out of the layer that owns compile counters, sharding
+   specs, and the compiled-once guarantee.
+
+stdlib ``ast`` only — no third-party deps, runs in the fast CI job.
+Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+SERVING = Path(__file__).resolve().parent.parent / "src" / "repro" / "serving"
+
+# modules the runner must never import (host policy + their package root)
+RUNNER_FORBIDDEN = (
+    "repro.serving.scheduler",
+    "repro.serving.request",
+    "repro.serving.prefix_cache",
+    "repro.serving.events",
+    "repro.serving.core",
+    "repro.serving.executor",
+    "repro.serving.engine",
+)
+
+# files allowed to call jax.jit: the device layer, and the seed-path
+# parity oracle (not part of the engine stack)
+JIT_ALLOWED = {"runner.py", "reference.py"}
+
+
+def _imported_modules(tree: ast.AST):
+    """Yield (module_name, lineno) for every import in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield alias.name, node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            if node.module is not None and node.level == 0:
+                yield node.module, node.lineno
+                # `from repro.serving import Scheduler` names the symbol,
+                # not the module — resolve each name as a submodule too so
+                # package-root laundering is caught
+                for alias in node.names:
+                    yield f"{node.module}.{alias.name}", node.lineno
+
+
+def _jit_aliases(tree: ast.AST) -> set[str]:
+    """Local names that resolve to jax.jit (``from jax import jit [as j]``)."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax":
+            for alias in node.names:
+                if alias.name == "jit":
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+def _jit_calls(tree: ast.AST):
+    """Yield linenos of jax.jit(...) / jit(...) call sites."""
+    aliases = _jit_aliases(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "jit" and \
+                isinstance(f.value, ast.Name) and f.value.id == "jax":
+            yield node.lineno
+        elif isinstance(f, ast.Name) and f.id in aliases:
+            yield node.lineno
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    runner = SERVING / "runner.py"
+    tree = ast.parse(runner.read_text(), filename=str(runner))
+    for mod, line in _imported_modules(tree):
+        if mod == "repro.serving" or any(
+                mod == f or mod.startswith(f + ".") for f in RUNNER_FORBIDDEN):
+            errors.append(
+                f"{runner}:{line}: runner.py imports {mod} — the device "
+                "layer must not see host-policy modules (it speaks arrays "
+                "and slot/page indices only)")
+
+    for path in sorted(SERVING.glob("*.py")):
+        if path.name in JIT_ALLOWED:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for line in _jit_calls(tree):
+            errors.append(
+                f"{path}:{line}: jax.jit called outside the runner — "
+                "compiled dispatches belong to serving/runner.py")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"layering-lint: {len(errors)} violation(s)", file=sys.stderr)
+        return 1
+    print("layering-lint: ok (runner imports clean; jax.jit confined to "
+          "the runner)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
