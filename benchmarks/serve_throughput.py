@@ -29,6 +29,18 @@ Rows (trajectory JSONs track these):
                             reference, >= 1 preemption, zero deadlocks, and
                             decode compiled exactly once across preemption
                             cycles)
+  serve/chunked/itl       — a LONG prompt arriving beside running short
+                            decodes: pooled token-level decode ITL p99,
+                            legacy admit-or-decode (one monolithic prefill
+                            stalls every decoder for its whole duration)
+                            vs chunked prefill (--chunk-size budgeted
+                            slices ride the decode dispatch).  Asserts
+                            p99 improves >= --min-chunked-itl-ratio,
+                            throughput within --max-chunked-tput-loss,
+                            short-request + long-first-token parity,
+                            decode compiled exactly once, O(log) pow2
+                            chunk-bucket variants, and zero steady-state
+                            recompiles
 
 The acceptance bars are engine prefill >= 3x seed prefill tokens/sec on a
 reduced config, (with --paged) the paged admission ratio, and (with
@@ -464,6 +476,134 @@ def run_overcommit(arch: str = "qwen3-4b", page_size: int = 4,
             "decode_compiles": compiles}
 
 
+def run_chunked(arch: str = "qwen3-4b", chunk_size: int = 32,
+                page_size: int = 8) -> dict:
+    """What composing prefill into the decode dispatch buys the decoders.
+
+    Four short requests are decoding when a LONG prompt arrives.  Legacy
+    admit-or-decode prefills the whole prompt in ONE dispatch — every
+    decoder's next token waits the full prefill out, a spike the pooled
+    token-level ITL p99 sees directly.  Chunked prefill spends at most
+    ``chunk_size`` prompt tokens per step beside the decode rows, so the
+    spike flattens into slightly-longer steps.  Both engines drain the
+    identical workload fully warmed; the chunked engine must keep the
+    decode step compiled exactly once, hold its chunk variants to O(log)
+    pow2 buckets, and never recompile in steady state.
+
+    Parity: the short requests must match token-for-token, and the long
+    prompt's FIRST token (the chunk-composition product) must match.
+    The long's full greedy stream is NOT compared here: bf16 logits tie
+    bitwise every ~dozen decode steps on random weights (the top-2 gap
+    quantizes to multiples of 2^-6 and lands on exactly 0), and argmax
+    tie-breaking across two DIFFERENT compiled programs (monolithic
+    prefill vs the chunk/prefix dispatch) is not stable over a 256-token
+    horizon.  Bit-exact chunked-vs-unchunked parity is pinned by
+    tests/test_serving_chunked.py at horizons where ties cannot hide a
+    real composition bug."""
+    section(f"chunked prefill ITL: {arch} reduced, chunk_size={chunk_size}")
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    long_len, short_len = 256, 8
+    max_new_long, max_new_short = 16, 32
+    max_len = long_len + max_new_long
+    slots, pages = 5, 96
+
+    def reqs(tag):
+        rng = np.random.default_rng(0)  # identical prompts every call
+        mk = lambda n: tuple(int(x)
+                             for x in rng.integers(0, cfg.vocab_size, n))
+        shorts = [Request(f"{tag}-short-{i}", mk(short_len), max_new_short)
+                  for i in range(4)]
+        return shorts, Request(f"{tag}-long", mk(long_len), max_new_long)
+
+    def drive(engine, tag):
+        """Shorts first; the long arrives after one decode step.  Returns
+        (tag-stripped token streams, pooled short-request ITL gaps, wall
+        seconds, generated tokens)."""
+        shorts, long_req = reqs(tag)
+        seqs = [engine.submit(r) for r in shorts]
+        t0 = time.perf_counter()
+        engine.step()  # shorts prefill
+        engine.step()  # shorts take one decode step
+        seqs.append(engine.submit(long_req))
+        steps, max_steps = 0, 60 * len(seqs) + 300
+        while engine.scheduler.has_work:
+            steps += 1
+            if steps > max_steps:
+                raise SystemExit(
+                    f"chunked drain exceeded {max_steps} steps: deadlock")
+            engine.step()
+        wall = time.perf_counter() - t0
+        outs = [s.to_output() for s in seqs]
+        toks = {o.request_id.split("-", 1)[1]: o.tokens for o in outs}
+        pooled = [g for o in outs[:-1] for g in o.itls]  # decoders only
+        return toks, pooled, wall, sum(len(o.tokens) for o in outs)
+
+    legacy = _build_engine(params, cfg, max_len, num_slots=slots,
+                           page_size=page_size, num_pages=pages)
+    chunked = _build_engine(params, cfg, max_len, num_slots=slots,
+                            page_size=page_size, num_pages=pages,
+                            chunk_size=chunk_size)
+    drive(legacy, "warm")   # pay every compile bucket before timing
+    drive(chunked, "warm")
+    for eng in (legacy, chunked):  # lifetime stats: keep the timed window
+        eng.stats.max_decode_stall = 0.0
+    warm_compiles = (chunked.decode_compile_count(),
+                     chunked.prefix_compile_count())
+
+    gaps_l, gaps_c = [], []
+    wall_l = wall_c = float("inf")
+    toks_l = toks_c = None
+    ntok = 0
+    for t in range(2):
+        toks_l, g, w, ntok = drive(legacy, f"l{t}")
+        gaps_l += g
+        wall_l = min(wall_l, w)
+        toks_c, g, w, _ = drive(chunked, f"c{t}")
+        gaps_c += g
+        wall_c = min(wall_c, w)
+    shorts_l = {k: v for k, v in toks_l.items() if k != "long"}
+    shorts_c = {k: v for k, v in toks_c.items() if k != "long"}
+    if shorts_c != shorts_l:
+        raise SystemExit("chunked short-request tokens diverge from the "
+                         "legacy run — chunk composition parity is broken")
+    if toks_c["long"][:1] != toks_l["long"][:1]:
+        raise SystemExit("the long prompt's first token diverges — chunked "
+                         "prefill does not reproduce the monolithic prefill")
+    compiles = chunked.decode_compile_count()
+    if compiles is not None and compiles != 1:
+        raise SystemExit(f"chunked decode recompiled: {compiles} "
+                         "compilations (expected 1)")
+    variants = chunked.prefix_compile_count()
+    if variants is not None:
+        cap = math.ceil(math.log2(max(chunk_size, 2))) + 3
+        if variants > cap:
+            raise SystemExit(
+                f"chunk dispatch holds {variants} compiled variants "
+                f"(pow2-bucket cap for chunk_size={chunk_size} is {cap})")
+        if (compiles, variants) != warm_compiles:
+            raise SystemExit(
+                f"steady-state recompile: warm counters {warm_compiles} "
+                f"grew to {(compiles, variants)} during the timed drives")
+
+    p99_l, p99_c = percentile(gaps_l, 99), percentile(gaps_c, 99)
+    itl_ratio = p99_l / p99_c
+    tput_ratio = (ntok / wall_c) / (ntok / wall_l)
+    emit(f"serve/chunked/itl/{arch}", p99_c,
+         f"chunk_size={chunk_size};p99_legacy={p99_l:.4f};"
+         f"p99_chunked={p99_c:.4f};ratio={itl_ratio:.2f};"
+         f"tput_ratio={tput_ratio:.2f};"
+         f"chunk_dispatches={chunked.stats.chunk_dispatches};"
+         f"stall_legacy={legacy.stats.max_decode_stall:.4f};"
+         f"stall_chunked={chunked.stats.max_decode_stall:.4f};"
+         f"decode_compiles={compiles};chunk_variants={variants}")
+    return {"itl_ratio": itl_ratio, "tput_ratio": tput_ratio,
+            "p99_legacy": p99_l, "p99_chunked": p99_c,
+            "stall_legacy": legacy.stats.max_decode_stall,
+            "stall_chunked": chunked.stats.max_decode_stall,
+            "decode_compiles": compiles, "chunk_variants": variants}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -512,6 +652,20 @@ def main():
                     help="fail (exit 1) if overcommit admits fewer than this "
                          "multiple of the worst-case plan's concurrent "
                          "shorts")
+    ap.add_argument("--chunked", action="store_true",
+                    help="also run the chunked-prefill mode: pooled decode "
+                         "ITL p99 with a long prompt arriving beside running "
+                         "shorts, legacy admit-or-decode vs --chunk-size "
+                         "slices riding the decode dispatch; bit-exact "
+                         "parity + zero-recompile checks")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="with --chunked: per-step prefill token budget")
+    ap.add_argument("--min-chunked-itl-ratio", type=float, default=2.0,
+                    help="fail (exit 1) if chunking improves the pooled "
+                         "decode ITL p99 by less than this factor")
+    ap.add_argument("--max-chunked-tput-loss", type=float, default=0.10,
+                    help="fail (exit 1) if chunked end-to-end throughput "
+                         "drops more than this fraction below legacy")
     args = ap.parse_args()
     r = run(args.arch, args.batch, args.prompt_len, args.max_new,
             args.dp, args.tp)
@@ -544,6 +698,18 @@ def main():
               f"{o['ratio']:.2f}x (bar: {args.min_overcommit_ratio:.1f}x), "
               f"{o['preemptions']} preemptions")
         ok = ok and o["ratio"] >= args.min_overcommit_ratio
+    if args.chunked:
+        c = run_chunked(args.arch, chunk_size=args.chunk_size,
+                        page_size=args.page_size)
+        print(f"chunked pooled ITL p99: legacy {c['p99_legacy']:.4f}s vs "
+              f"chunked {c['p99_chunked']:.4f}s = {c['itl_ratio']:.2f}x "
+              f"(bar: {args.min_chunked_itl_ratio:.1f}x), throughput "
+              f"{c['tput_ratio']:.2f}x (floor: "
+              f"{1 - args.max_chunked_tput_loss:.2f}x)")
+        print(f"max decode stall: legacy {c['stall_legacy']:.4f} s vs "
+              f"chunked {c['stall_chunked']:.4f} s")
+        ok = ok and c["itl_ratio"] >= args.min_chunked_itl_ratio
+        ok = ok and c["tput_ratio"] >= 1 - args.max_chunked_tput_loss
     if not ok:
         raise SystemExit(1)
 

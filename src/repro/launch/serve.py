@@ -38,6 +38,12 @@ stdlib ``asyncio`` networking only, no web framework.
 ``--prefix-cache`` turns on the radix-tree prefix cache over the paged
 pool (DESIGN.md section 12): repeated prompt heads skip prefill for the
 matched pages, bit-identical to the uncached stream.
+
+``--chunk-size N`` turns on chunked prefill (DESIGN.md section 15): each
+step composes every running slot's decode token with up to N prompt
+tokens from the queue head into ONE mixed dispatch, so a long admission
+no longer stalls running decodes — token streams stay bit-identical to
+the unchunked path.
 """
 from __future__ import annotations
 
@@ -93,6 +99,10 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
     if (overcommit > 1.0 or swap) and page_size is None:
         raise SystemExit("--overcommit/--swap need the paged KV cache; drop "
                          "--fixed-slots / set --page-size")
+    chunk_size = int(getattr(args, "chunk_size", 0) or 0) or None
+    if chunk_size is not None and page_size is None:
+        raise SystemExit("--chunk-size needs the paged KV cache; drop "
+                         "--fixed-slots / set --page-size")
     try:
         if args.memory_budget_mb:  # derived sizing; explicit flags conflict
             if args.slots or args.token_budget:
@@ -118,13 +128,13 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                               else plan.token_budget),
                 page_size=plan.page_size, num_pages=plan.num_pages,
                 mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
-                swap=swap)
+                swap=swap, chunk_size=chunk_size)
         else:
             spec = resolve_engine_spec(
                 cfg, max_len, num_slots=(args.slots or min(args.batch, 8)),
                 token_budget=args.token_budget or None, page_size=page_size,
                 mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
-                swap=swap)
+                swap=swap, chunk_size=chunk_size)
         executor = LocalExecutor(params, cfg, spec, mesh=mesh)
         return Engine.from_executor(executor)
     except ValueError as e:
@@ -132,17 +142,27 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
         raise SystemExit(str(e))
 
 
+def pooled_itls(outputs: list[RequestOutput]) -> list[float]:
+    """Every inter-token gap across all requests, pooled into ONE sample —
+    the true token-level ITL distribution (each token's wait counts once),
+    unlike the per-request-summary aggregation which weights a 2-token
+    request's single gap as heavily as a 500-token request's tail."""
+    return [g for o in outputs for g in o.itls]
+
+
 def _latency_lines(outputs: list[RequestOutput]) -> list[str]:
     """Human-readable TTFT/ITL/latency summary; every stage a sequence
-    never reached is None and skipped, never zero-filled.  The ITL p99 is
-    the p99 of per-request itl_p99 summaries (a conservative tail proxy —
-    see stats_payload)."""
+    never reached is None and skipped, never zero-filled.  The pooled ITL
+    line is the true per-token distribution; the per-request line (mean of
+    request means, p99 of request p99s) is kept beside it for continuity
+    with earlier runs."""
     lines = []
     lat = [o.latency for o in outputs if o.latency is not None]
     ttft = [o.time_to_first_token for o in outputs
             if o.time_to_first_token is not None]
     itl_m = [o.itl_mean for o in outputs if o.itl_mean is not None]
     itl_p = [o.itl_p99 for o in outputs if o.itl_p99 is not None]
+    pooled = pooled_itls(outputs)
     if lat:
         lines.append(f"latency s: mean {float(np.mean(lat)):.3f} "
                      f"p50 {float(np.median(lat)):.3f} "
@@ -151,8 +171,13 @@ def _latency_lines(outputs: list[RequestOutput]) -> list[str]:
         lines.append(f"ttft s: mean {float(np.mean(ttft)):.4f} "
                      f"p50 {percentile(ttft, 50):.4f} "
                      f"p99 {percentile(ttft, 99):.4f}")
+    if pooled:
+        lines.append(f"itl s (pooled, {len(pooled)} gaps): "
+                     f"mean {float(np.mean(pooled)):.4f} "
+                     f"p50 {percentile(pooled, 50):.4f} "
+                     f"p99 {percentile(pooled, 99):.4f}")
     if itl_m:
-        lines.append(f"itl s: mean {float(np.mean(itl_m)):.4f} "
+        lines.append(f"itl s (per-request): mean {float(np.mean(itl_m)):.4f} "
                      f"p99 {percentile(itl_p, 99):.4f}")
     if not lines:
         lines.append(f"latency: 0/{len(outputs)} sequences finished "
@@ -207,6 +232,7 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             if o.time_to_first_token is not None]
     itl_m = [o.itl_mean for o in done if o.itl_mean is not None]
     itl_p = [o.itl_p99 for o in done if o.itl_p99 is not None]
+    pooled = pooled_itls(done)
     return {
         "engine": {
             "prefill_tokens": st.prefill_tokens,
@@ -215,6 +241,13 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             "decode_tokens": st.decode_tokens,
             "decode_steps": st.decode_steps,
             "decode_tps": st.decode_tps,
+            # chunked-prefill composition (--chunk-size): chunk groups run
+            # beside decode rows; max_decode_stall_s is the longest gap
+            # between decode dispatches while a slot sat decode-ready —
+            # the tentpole's before/after number
+            "chunk_size": engine.chunk_size,
+            "chunk_dispatches": st.chunk_dispatches,
+            "max_decode_stall_s": st.max_decode_stall,
             # one compile counter per dispatch kind: decode must stay at 1
             # forever; prefill/prefix grow one per pow2 shape bucket, so a
             # drift here means the bucketing regressed
@@ -245,15 +278,22 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
         # trie hit-rate counters; None when --prefix-cache is off
         "prefix_cache": (engine.prefix.stats()
                          if engine.prefix is not None else None),
-        # aggregates over per-request summaries, None stages skipped.
-        # itl_s.p99 is the p99 of PER-REQUEST itl_p99 values (RequestOutput
-        # keeps summaries, not raw gaps) — a conservative tail proxy that
-        # typically over-reports versus the p99 over all token gaps
         "ttft_s": {"mean": sum(ttft) / len(ttft) if ttft else None,
                    "p50": percentile(ttft, 50) if ttft else None,
                    "p99": percentile(ttft, 99) if ttft else None},
+        # per-request-summary aggregate (kept for continuity): itl_s.p99
+        # is the p99 of PER-REQUEST itl_p99 values — a conservative tail
+        # proxy that weights every request equally regardless of length
         "itl_s": {"mean": sum(itl_m) / len(itl_m) if itl_m else None,
                   "p99": percentile(itl_p, 99) if itl_p else None},
+        # TRUE token-level distribution: every inter-token gap of every
+        # retired request pooled into one sample (each token's wait counts
+        # once) — this is the number the chunked-prefill bar gates on
+        "itl_pooled_s": {
+            "count": len(pooled),
+            "mean": sum(pooled) / len(pooled) if pooled else None,
+            "p50": percentile(pooled, 50) if pooled else None,
+            "p99": percentile(pooled, 99) if pooled else None},
     }
 
 
@@ -416,6 +456,10 @@ def run_batch(args, engine: Engine, cfg) -> None:
              st.prefill_tokens, st.prefill_dispatches, st.prefill_tps)
     log.info("decode: %d tokens in %d steps, %.1f tok/s",
              st.decode_tokens, st.decode_steps, st.decode_tps)
+    if engine.chunk_size is not None:
+        log.info("chunked prefill: chunk_size %d, %d chunk dispatches",
+                 engine.chunk_size, st.chunk_dispatches)
+    log.info("max decode stall: %.4f s", st.max_decode_stall)
     for line in _latency_lines(outputs):
         log.info("%s", line)
     log.info("sample %s: %s", outputs[0].request_id,
@@ -461,6 +505,12 @@ def main():
                     help="undo preemptions by restoring the victim's KV "
                          "blocks from a host copy instead of recomputing "
                          "them (pinned host memory when available)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunked prefill: per-step prefill token budget "
+                         "composed WITH decode into one mixed dispatch, so "
+                         "a long prompt no longer stalls running slots "
+                         "(needs --page-size; 0 = off, the legacy "
+                         "admit-or-decode step)")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
                          "budget (params priced under the active policy; "

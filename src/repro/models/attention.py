@@ -300,8 +300,13 @@ def attn_prefill_paged_past(
     block causally at ``t' <= q`` — the same validity set a full prefill
     over the whole prompt sees, with masked scores at NEG_INF contributing
     exactly zero to the softmax, so the tail activations are bit-identical
-    to the uncached forward.  Returns (out (B, S, d), {"k", "v"} tail K/V
-    (B, S, Hkv, hd)) for the page-table scatter.
+    to the uncached forward.  ``prefix_lens[b] == 0`` is valid (chunked
+    prefill's first chunk): every prefix column masks away and the row
+    reduces to plain causal attention over the tail.  A partially-filled
+    page at the prefix/tail boundary is also fine — the stale region past
+    ``prefix_lens`` is masked, and the fresh tail K/V arrives via the
+    concatenation, never double-counted.  Returns (out (B, S, d),
+    {"k", "v"} tail K/V (B, S, Hkv, hd)) for the page-table scatter.
     """
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd

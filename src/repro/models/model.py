@@ -304,7 +304,11 @@ def prefill_with_prefix(params: dict, cfg: ModelConfig, inputs: jax.Array,
     """Tail prefill: forward ONLY the unmatched tail of each prompt,
     attending to the matched prefix K/V already resident in the paged
     block pool — the prefix-cache fast path that turns a long shared
-    system prompt into a near-decode-latency dispatch.
+    system prompt into a near-decode-latency dispatch.  Chunked prefill
+    rides the same contract: a chunk's "prefix" is the sequence's earlier
+    chunks (pool pages written by prior steps), and ``prefix_lens == 0``
+    — chunk 0, nothing resident yet — is a supported degenerate case (the
+    gathered scratch view is fully masked, see the validity note below).
 
     inputs: (B, S_tail) right-padded tail tokens; paged_caches: the pool
     pytree (``init_paged_caches`` layout, attention leaves (P, num_blocks,

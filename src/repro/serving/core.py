@@ -64,11 +64,13 @@ class EngineCore:
         self.swap_enabled = spec.swap
         self.max_top_k = spec.max_top_k
         self.eos_id = eos_id
+        self.chunk_size = spec.chunk_size
         if spec.page_size is not None:
             self.scheduler = Scheduler(spec.num_slots, max_len=spec.max_len,
                                        page_size=spec.page_size,
                                        num_pages=spec.num_pages,
-                                       overcommit=spec.overcommit)
+                                       overcommit=spec.overcommit,
+                                       chunk_size=spec.chunk_size)
         else:
             self.scheduler = Scheduler(spec.num_slots, spec.token_budget,
                                        max_len=spec.max_len)
@@ -87,6 +89,10 @@ class EngineCore:
         # request_ids preempted during the CURRENT step (reported as
         # informational tokenless events, then cleared)
         self._preempted_now: list[str] = []
+        # decode-stall watermark: wall clock of the last decode dispatch's
+        # completion, None while no admitted sequence is decode-ready (the
+        # gap only counts as a stall if someone was waiting to decode)
+        self._last_decode_done: float | None = None
 
     # ---------------------------------------------------------- lifecycle --
     def validate(self, seq: Sequence) -> None:
@@ -155,37 +161,33 @@ class EngineCore:
                          finish_reason=seq.finish_reason)
 
     def step(self) -> list[StepEvent]:
-        """ONE admit-or-decode iteration; re-entrant — call until the
-        scheduler drains (or forever, interleaving ``submit``/``abort``
-        between calls).  If the queue head can be admitted this step is a
-        prefill (first token per admitted sequence); otherwise all active
-        slots take one decode step.  Finished sequences are retired before
-        returning, so a freed slot is admissible by the NEXT call — one
-        admission or one decode dispatch per call, never both.  Returns one
-        event per sequence that progressed (empty when idle)."""
+        """ONE engine iteration; re-entrant — call until the scheduler
+        drains (or forever, interleaving ``submit``/``abort`` between
+        calls).  Legacy mode (``chunk_size`` unset): admit-OR-decode — if
+        the queue head can be admitted this step is a prefill (first token
+        per admitted sequence); otherwise all active slots take one decode
+        step.  Chunked mode: ONE token-budget batch per step — every
+        caught-up slot decodes AND up to ``chunk_size`` prefill tokens run
+        beside them (:meth:`_step_chunked`).  Finished sequences are
+        retired before returning, so a freed slot is admissible by the
+        NEXT call.  Returns one event per sequence that progressed (empty
+        when idle)."""
         if not self.scheduler.has_work:
             return []
         t0 = time.perf_counter()
         dev0 = self.stats.device_time
         try:
             self._preempted_now = []
-            admitted = self.scheduler.admit()
-            if admitted:
-                before = {s.request_id: len(s.tokens) for s in admitted}
-                self._prefill_admitted(admitted)
-                # resumed sequences (recompute/swap restore) append no token
-                # on their re-admission step — their next token comes from
-                # decode — so only sequences whose token count grew produce
-                # a delta
-                progressed = [s for s in admitted
-                              if len(s.tokens) > before[s.request_id]]
+            # stall accounting arms only while someone could decode: a gap
+            # with no decode-ready sequence (pure prefill warmup, idle)
+            # is not a stall
+            if not any(s.tokens and s.swap_state is None
+                       for s in self.scheduler.active.values()):
+                self._last_decode_done = None
+            if self.chunk_size is not None:
+                progressed = self._step_chunked()
             else:
-                active = list(self.scheduler.active.values())
-                if not active:
-                    raise RuntimeError(
-                        "scheduler stalled: waiting requests but nothing "
-                        "active")
-                progressed = self._decode_once(active)
+                progressed = self._step_legacy()
             events = [StepEvent(rid, token=None, index=None, preempted=True)
                       for rid in self._preempted_now]
             events += [StepEvent(s.request_id, s.tokens[-1],
@@ -200,6 +202,157 @@ class EngineCore:
             dev = self.stats.device_time - dev0
             self.stats.host_time += max(
                 0.0, (time.perf_counter() - t0) - dev)
+
+    def _step_legacy(self) -> list:
+        """The admit-OR-decode step body (``chunk_size`` unset): byte-for-
+        byte the pre-chunking behavior — one admission wave or one decode
+        dispatch per call, never both."""
+        admitted = self.scheduler.admit()
+        if admitted:
+            before = {s.request_id: len(s.tokens) for s in admitted}
+            self._prefill_admitted(admitted)
+            # resumed sequences (recompute/swap restore) append no token
+            # on their re-admission step — their next token comes from
+            # decode — so only sequences whose token count grew produce
+            # a delta
+            return [s for s in admitted
+                    if len(s.tokens) > before[s.request_id]]
+        active = list(self.scheduler.active.values())
+        if not active:
+            raise RuntimeError(
+                "scheduler stalled: waiting requests but nothing "
+                "active")
+        return self._decode_once(active)
+
+    def _step_chunked(self) -> list:
+        """One token-budget batch (Sarathi/vLLM-v1 chunked prefill): the
+        scheduler's :meth:`~repro.serving.scheduler.Scheduler.plan_step`
+        picks the step's decode rows and chunk group; this method executes
+        the plan as ONE mixed dispatch.
+
+        Every chunk — the first included — rides the prefix machinery: its
+        earlier chunks (and any trie-matched pages) are already pool pages,
+        so the chunk prefills as a tail via ``prefill_with_prefix`` with
+        absolute positions (chunk 0 is the ``prefix_len == 0`` case).  The
+        final chunk's sample lands at the same fold-in position as an
+        unchunked prefill, so the output stream is bit-exact against the
+        legacy path by construction; intermediate chunk samples are
+        discarded (same rule as resumed-recompute prefills).
+
+        Preemption composes: a mid-prefill victim's chunk pages are
+        released like any other pages (its cursor resets to 0 for
+        drop-and-recompute, survives for swap restore) and the plan rows
+        are re-filtered by state after every reclaim."""
+        plan = self.scheduler.plan_step()
+        if not plan.admitted and not self.scheduler.active:
+            raise RuntimeError(
+                "scheduler stalled: waiting requests but nothing active")
+        protect = frozenset(s.request_id for s in plan.admitted) | \
+            frozenset(s.request_id for s, _ in plan.chunks)
+        # admission processing mirrors _prefill_admitted up to (not
+        # including) the prefill dispatch: swap restores happen now, trie
+        # hits map their resident pages + COW the partial page now (the
+        # pins taken at admission are consumed exactly once, here)
+        for s in plan.admitted:
+            if s.swap_state is not None:
+                self._swap_in(s, protect)
+                continue
+            if s.tokens:
+                self.stats.recomputed += 1
+            m = s.prefix_match
+            if m is not None and m.matched_len > 0:
+                self.executor.map_prefix(s.slot, m.full_blocks)
+                if m.partial_len > 0:
+                    self._with_reclaim(
+                        lambda s=s, m=m: self.executor.cow_block(
+                            s.slot, m.full_pages, m.partial_block), protect)
+            s.prefix_match = None
+        # chunk page allocation: extend each chunk row's mapped tail to
+        # cover this chunk's positions.  A sequence's TOTAL chunk pages
+        # never exceed its current-footprint pages, which its admission
+        # charge always covers — so protecting the plan's rows preserves
+        # the PR 7 no-deadlock argument.
+        for s, n in plan.chunks:
+            if s.state is not SequenceState.RUNNING:
+                continue  # preempted by an earlier alloc this step
+            self._with_reclaim(
+                lambda s=s, n=n, p=s.prefill_progress:
+                    self.executor.alloc_tail(s.slot, p, p + n), protect)
+        # decode page growth keeps legacy semantics: it may preempt ANY
+        # active row — including a mid-prefill one, whose already-written
+        # chunk pages are simply released (recompute-from-progress later)
+        decode = list(plan.decode)
+        if decode:
+            for s in decode:
+                while s.state is SequenceState.RUNNING:
+                    try:
+                        self.executor.ensure_mapped(
+                            s.slot, self.executor.position(s.slot))
+                        break
+                    except PoolExhausted as e:
+                        if not self._reclaim(e.shortfall, frozenset()):
+                            raise
+            decode = [s for s in decode
+                      if s.state is SequenceState.RUNNING]
+        chunks = [(s, n) for s, n in plan.chunks
+                  if s.state is SequenceState.RUNNING]
+        if not decode and not chunks:
+            return []
+        chunk_group = [s for s, _ in chunks]
+        starts = [s.prefill_progress for s in chunk_group]
+        temps, topks, seeds = _sampling_columns(chunk_group)
+        out = self.executor.execute(ExecuteInput(
+            kind="mixed",
+            slots=tuple(s.slot for s in decode),
+            chunk_slots=tuple(s.slot for s in chunk_group),
+            tokens=tuple(tuple(s.prefill_tokens[p:p + n])
+                         for (s, n), p in zip(chunks, starts)),
+            prefix_lens=tuple(starts),
+            temperatures=temps, top_ks=topks, seeds=seeds))
+        progressed = []
+        if decode:
+            self._note_decode_dispatch()
+            for s in decode:
+                s.append_token(int(out.tokens[s.slot]), self.eos_id)
+                s.prefill_progress = s.prefill_len
+                progressed.append(s)
+        # advance cursors; a sequence whose cursor reaches prefill_len is
+        # done prefilling — its final chunk's sample IS its first token
+        # (recorded before the tail scatter, like the prefix path: this is
+        # the TTFT stamp), and its staging row arms for decode
+        completed = []
+        for j, (s, n) in enumerate(chunks):
+            s.prefill_progress += n
+            if s.prefill_progress < s.prefill_len:
+                continue
+            if not s.tokens:
+                s.append_token(int(out.chunk_tokens[j]), self.eos_id)
+                progressed.append(s)
+            # resumed recompute: the chunk sample is DISCARDED (wrong fold
+            # position for the NEXT token — see _prefill_group); the
+            # pending last token goes back into the step buffer
+            self.executor.set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=temps[j], top_k=topks[j], seed=seeds[j])
+            completed.append(s)
+        if chunks:
+            self.executor.write_tails(
+                [s.slot for s, _ in chunks], out.caches,
+                starts=starts,
+                lengths=[p + n for (s, n), p in zip(chunks, starts)],
+                rows=list(range(len(chunks))))
+        self._adopt_group(completed)
+        return progressed
+
+    def _note_decode_dispatch(self) -> None:
+        """Record the gap since the previous decode dispatch while at
+        least one sequence was decode-ready — the max is the stall metric
+        chunked prefill exists to bound."""
+        now = time.perf_counter()
+        if self._last_decode_done is not None:
+            self.stats.max_decode_stall = max(
+                self.stats.max_decode_stall, now - self._last_decode_done)
+        self._last_decode_done = now
 
     def run(self, requests: list[Request]) -> list[RequestOutput]:
         """Closed-batch compatibility wrapper: submit all, step until
@@ -329,6 +482,7 @@ class EngineCore:
             self.executor.set_slot(
                 s.slot, token=s.tokens[-1], pos=s.prefill_len,
                 temperature=temps[j], top_k=topks[j], seed=seeds[j])
+            s.prefill_progress = s.prefill_len
         self._adopt_group(group)
 
     def _prefill_prefix_group(self, group: list[Sequence],
@@ -377,6 +531,7 @@ class EngineCore:
             self.executor.set_slot(
                 s.slot, token=s.tokens[-1], pos=s.prefill_len,
                 temperature=temps[j], top_k=topks[j], seed=seeds[j])
+            s.prefill_progress = s.prefill_len
         self.executor.write_tails(
             [s.slot for s in group], out.caches,
             starts=[s.prefix_match.matched_len for s in group],
@@ -427,8 +582,12 @@ class EngineCore:
                 return []
         out = self.executor.execute(ExecuteInput(
             kind="decode", slots=tuple(s.slot for s in active)))
+        self._note_decode_dispatch()
         for s in active:
             s.append_token(int(out.tokens[s.slot]), self.eos_id)
+            # each appended token extends prefill_len by one cached
+            # position (the previous pending token); the cursor tracks it
+            s.prefill_progress = s.prefill_len
         return active
 
     # --------------------------------------------------------- preemption --
@@ -461,6 +620,12 @@ class EngineCore:
         if self.swap_enabled:
             victim.swap_state = self.executor.swap_out(slot)
             self.stats.swapped_out += 1
+        else:
+            # drop-and-recompute: the pages are gone, chunked progress with
+            # them — re-admission re-prefills from scratch (a mid-prefill
+            # victim's partial chunk pages are exactly as releasable as a
+            # decoder's, recoverable by recompute-from-progress-0)
+            victim.prefill_progress = 0
         self.executor.evict([slot])
         self.scheduler.preempt(victim)
         self.executor.clear_slot(slot)
@@ -477,13 +642,19 @@ class EngineCore:
         self._with_reclaim(
             lambda: self.executor.swap_in(s.slot, s.swap_state), protect)
         s.swap_state = None
-        self.executor.set_slot(
-            s.slot, token=s.tokens[-1], pos=s.prefill_len,
-            temperature=s.request.sampling.temperature,
-            top_k=s.request.sampling.top_k,
-            seed=s.request.sampling.seed)
+        # a mid-chunked-prefill victim restores tokenless with its cursor
+        # short of prefill_len: it has no pending token to stage and no
+        # full prompt to adopt yet — its remaining chunks arm the slot when
+        # the cursor catches up
+        if s.tokens and s.prefill_progress >= s.prefill_len:
+            self.executor.set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=s.request.sampling.temperature,
+                top_k=s.request.sampling.top_k,
+                seed=s.request.sampling.seed)
         self.stats.swapped_in += 1
-        self._adopt_group([s])
+        if s.prefill_progress >= s.prefill_len:
+            self._adopt_group([s])
 
     # ------------------------------------------------------------- retire --
     def _retire_finished(self) -> None:

@@ -65,13 +65,14 @@ class Engine:
                  num_pages: int | None = None,
                  prefix_cache: bool = False,
                  overcommit: float = 1.0,
-                 swap: bool = False):
+                 swap: bool = False,
+                 chunk_size: int | None = None):
         spec = resolve_engine_spec(
             cfg, max_len, num_slots=num_slots, token_budget=token_budget,
             memory_budget_bytes=memory_budget_bytes, mesh=mesh, dp=dp,
             tp=tp, max_top_k=max_top_k, page_size=page_size,
             num_pages=num_pages, prefix_cache=prefix_cache,
-            overcommit=overcommit, swap=swap)
+            overcommit=overcommit, swap=swap, chunk_size=chunk_size)
         self.executor = LocalExecutor(params, cfg, spec,
                                       mesh=mesh, dp=dp, tp=tp)
         self.core = EngineCore(self.executor, eos_id=eos_id)
@@ -177,6 +178,10 @@ class Engine:
     @property
     def swap_enabled(self) -> bool:
         return self.core.swap_enabled
+
+    @property
+    def chunk_size(self) -> int | None:
+        return self.core.chunk_size
 
     @property
     def max_top_k(self) -> int:

@@ -1,11 +1,20 @@
 """Step events: the per-sequence deltas the engine's step loop emits.
 
-``Engine.step()`` runs ONE admit-or-decode iteration and returns a list of
-:class:`StepEvent` — one per sequence that made progress this step.  An
-event carries the newly sampled token (and its 0-based index into the
-request's generated tokens) and, when this step retired the sequence, the
-``finish_reason``.  An abort produces a tokenless event (``token is
-None``) so consumers always observe a terminal event exactly once.
+``Engine.step()`` runs ONE engine iteration — an admit-or-decode step in
+legacy mode, or one token-budget batch (decode rows + a prefill chunk
+group) with ``chunk_size`` set — and returns a list of :class:`StepEvent`,
+one per sequence that made progress this step.  A mid-prefill sequence
+(its chunk cursor short of its prompt) emits NO event until its final
+chunk samples its first token, so the client-visible stream is identical
+either way.  An event carries the newly sampled token (and its 0-based
+index into the request's generated tokens) and, when this step retired
+the sequence, the ``finish_reason``.  An abort produces a tokenless event
+(``token is None``) so consumers always observe a terminal event exactly
+once.
+
+This module is host-policy data only — importing ``jax`` here (or in
+``core.py``/``scheduler.py``) is a layering violation enforced by
+``tools/layering_lint.py``.
 
 :class:`TokenDelta` is the client-facing name for the same record: the
 AsyncEngine fans step events out to per-request queues and streams them to

@@ -47,6 +47,10 @@ class EngineSpec:
     swap: bool = False
     prefix_cache: bool = False
     max_top_k: int = MAX_TOP_K
+    # chunked prefill: per-step prefill token budget composed with decode
+    # into one mixed dispatch.  None (the default) keeps the legacy
+    # admit-or-decode step byte-identical; set iff ``page_size`` is.
+    chunk_size: int | None = None
 
 
 def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
@@ -60,7 +64,8 @@ def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
                         num_pages: int | None = None,
                         prefix_cache: bool = False,
                         overcommit: float = 1.0,
-                        swap: bool = False) -> EngineSpec:
+                        swap: bool = False,
+                        chunk_size: int | None = None) -> EngineSpec:
     """Validate + normalize engine sizing into an :class:`EngineSpec`.
 
     num_slots/token_budget can be given directly, or derived from a device
@@ -146,11 +151,30 @@ def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
                 f"{cfg.name}: prefix_cache needs a pure-attention "
                 "pattern; recurrent prefix state cannot be recovered "
                 "from the block pool")
+    if chunk_size is not None:
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if page_size is None:
+            if requested_paging:
+                # pure-recurrent stack: paging was silently dropped, and
+                # with it chunking (there are no KV pages for chunk N>0 to
+                # attend back into) — same convention as overcommit/swap
+                chunk_size = None
+            else:
+                raise ValueError(
+                    "chunked prefill (--chunk-size) needs the paged KV "
+                    "cache; pass page_size")
+        elif not all(m == "attn" for m, _ in cfg.pattern):
+            raise ValueError(
+                f"{cfg.name}: chunked prefill needs a pure-attention "
+                "pattern; recurrent mid-prompt state cannot be rebuilt "
+                "from the block pool between chunks")
     return EngineSpec(max_len=max_len, num_slots=num_slots,
                       token_budget=token_budget, page_size=page_size,
                       num_pages=num_pages, overcommit=float(overcommit),
                       swap=bool(swap), prefix_cache=bool(prefix_cache),
-                      max_top_k=min(max_top_k, cfg.vocab_size))
+                      max_top_k=min(max_top_k, cfg.vocab_size),
+                      chunk_size=chunk_size)
 
 
 class Executor:

@@ -108,6 +108,15 @@ class Sequence:
         self.admit_seqno: int = -1
         self.preemptions: int = 0
         self.swap_state = None
+        # chunked-prefill cursor: how many positions of ``prefill_tokens``
+        # are already written to the KV cache.  The legacy (unchunked) path
+        # keeps it at ``prefill_len`` after every prefill/decode step; the
+        # chunked planner advances it one chunk at a time and a sequence
+        # whose cursor is short of ``prefill_len`` is mid-prefill — it holds
+        # a slot and pages but takes no decode token yet.  Reset to 0 on
+        # drop-and-recompute preemption; preserved across swap (the pages
+        # restore verbatim).
+        self.prefill_progress: int = 0
         self._clock = clock
         self.t_arrival = clock()
         self.t_admitted: float | None = None
@@ -199,6 +208,7 @@ class Sequence:
             itl_mean=sum(itl) / len(itl) if itl else None,
             itl_p99=percentile(itl, 99.0) if itl else None,
             preemptions=self.preemptions,
+            itls=tuple(itl),
         )
 
 
@@ -219,6 +229,10 @@ class RequestOutput:
     itl_mean: float | None = None
     itl_p99: float | None = None
     preemptions: int = 0
+    # raw per-token inter-token gaps (len(tokens) - 1 entries) so the CLI
+    # can pool a TRUE token-level ITL distribution across requests instead
+    # of aggregating per-request summaries (the PR 5 tail proxy)
+    itls: tuple[float, ...] = ()
 
 
 def make_requests(prompts: TypingSequence[TypingSequence[int]], max_new: int,

@@ -95,18 +95,29 @@ class ExecuteInput:
       "prefix"   tail-only prefill against resident prefix pages;
                  ``tokens[j]`` holds ONLY the unshared tail and
                  ``prefix_lens[j]`` the matched (already-resident) length.
+      "mixed"    one token-budget step (chunked prefill): the decode rows
+                 in ``slots`` advance one token, AND one chunk group runs —
+                 ``chunk_slots[j]`` takes the ``tokens[j]`` chunk as a tail
+                 against its ``prefix_lens[j]`` already-written positions
+                 (earlier chunks / trie pages).  Chunk 0 is the
+                 ``prefix_lens == 0`` degenerate case of the same path.
+                 Either half may be empty (pure-decode / pure-chunk step).
 
-    Sampling params travel per ROW for prefill/prefix (aligned with
-    ``tokens``); decode reads the staging arrays set at admission.
+    Sampling params travel per ROW for prefill/prefix, and per CHUNK row
+    (aligned with ``chunk_slots``) for mixed; decode rows read the staging
+    arrays set at admission.
     """
 
-    kind: str  # "decode" | "prefill" | "prefix"
+    kind: str  # "decode" | "prefill" | "prefix" | "mixed"
     slots: tuple[int, ...] = ()
     tokens: tuple[tuple[int, ...], ...] = ()
     prefix_lens: tuple[int, ...] = ()
     temperatures: tuple[float, ...] = ()
     top_ks: tuple[int, ...] = ()
     seeds: tuple[int, ...] = ()
+    # mixed only: the chunk group's slot per row (``tokens``/``prefix_lens``
+    # /sampling columns align with THIS tuple, not ``slots``)
+    chunk_slots: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -116,15 +127,23 @@ class ExecuteOutput:
     ``tokens``: sampled next tokens as a host numpy array — indexed by SLOT
     for decode (all rows present, idle rows garbage), by ROW for
     prefill/prefix (bucketed length; rows past the real group are dummies).
+    For mixed it is the decode half's slot-indexed array (None when the
+    step had no decode rows).
     ``caches``: the dispatch's K/V output when the core must place it —
     full prefill caches to ``insert`` (fixed and paged alike), tail caches
-    to ``write_tails`` for prefix hits; None for decode (the runner updated
-    its pool in place).  Opaque to the core: it round-trips the pytree into
-    the runner's cache calls without looking inside.
+    to ``write_tails`` for prefix hits and mixed-step chunks; None for
+    decode (the runner updated its pool in place).  Opaque to the core: it
+    round-trips the pytree into the runner's cache calls without looking
+    inside.
+    ``chunk_tokens``: mixed only — the chunk group's sampled tokens by ROW
+    (aligned with ``chunk_slots``).  Only a sequence's FINAL chunk's sample
+    is meaningful (it sits at the full prefill position); the core discards
+    the rest.
     """
 
-    tokens: np.ndarray
+    tokens: np.ndarray | None
     caches: object | None = None
+    chunk_tokens: np.ndarray | None = None
 
 
 def _compiled_count(fn) -> int | None:
@@ -280,18 +299,37 @@ class ModelRunner:
         exhaustion, page-table growth) are separate calls so the core can
         wrap THEM in its retry loop without ever re-dispatching."""
         if inp.kind == "decode":
-            return self._execute_decode(inp)
+            return ExecuteOutput(tokens=self._decode_dispatch(inp.slots))
         if inp.kind == "prefill":
             return self._execute_prefill(inp)
         if inp.kind == "prefix":
             return self._execute_prefix(inp)
+        if inp.kind == "mixed":
+            return self._execute_mixed(inp)
         raise ValueError(f"unknown ExecuteInput kind {inp.kind!r}")
 
-    def _execute_decode(self, inp: ExecuteInput) -> ExecuteOutput:
-        """One decode dispatch over ALL slots; rows named in ``inp.slots``
-        advance their staging state (token fed back, position +1)."""
-        table = self.cache.table_device() \
-            if self.page_size is not None else None
+    def _decode_dispatch(self, advance, live_rows=None) -> np.ndarray:
+        """One decode dispatch over ALL slots; rows named in ``advance``
+        feed their sampled token back and move their position +1.
+
+        ``live_rows`` (mixed steps only) restricts the page-table VALUE the
+        step sees to those rows — every other row's table is zeroed so its
+        ride-along K/V write lands in the scratch block, exactly like an
+        idle slot.  This protects mid-prefill slots: their staging position
+        is 0 but their table row maps REAL chunk pages, so an unmasked
+        ride-along write would clobber their position-0 K/V.  A masked
+        table is the same shape/dtype as the full one — a value change,
+        never a recompile."""
+        if self.page_size is None:
+            table = None
+        elif live_rows is None:
+            table = self.cache.table_device()
+        else:
+            masked = np.zeros_like(self.cache.table)
+            rows = list(live_rows)
+            if rows:
+                masked[rows] = self.cache.table[rows]
+            table = jnp.asarray(masked)
         t0 = time.perf_counter()
         with self._trace_ctx():
             nxt, self.cache.data = self._step(
@@ -301,11 +339,30 @@ class ModelRunner:
         nxt = np.asarray(nxt)
         self.stats.decode_time += time.perf_counter() - t0
         self.stats.decode_steps += 1
-        self.stats.decode_tokens += len(inp.slots)
-        for slot in inp.slots:
+        self.stats.decode_tokens += len(advance)
+        for slot in advance:
             self._tok[slot, 0] = nxt[slot]
             self._pos[slot] += 1
-        return ExecuteOutput(tokens=nxt)
+        return nxt
+
+    def _execute_mixed(self, inp: ExecuteInput) -> ExecuteOutput:
+        """One token-budget step: the decode rows advance one token, then
+        the chunk group prefills against its already-resident positions via
+        the same bucketed prefix path trie hits use (chunk 0 simply has
+        ``prefix_lens == 0``).  The two halves touch DISJOINT pool blocks —
+        decode writes land in the decode rows' (or scratch) pages, chunk
+        tails return as caches for the core to scatter — so their order
+        cannot change either result."""
+        nxt = self._decode_dispatch(inp.slots, live_rows=inp.slots) \
+            if inp.slots else None
+        chunk_tokens = caches = None
+        if inp.chunk_slots:
+            chunk_tokens, caches = self._prefix_dispatch(
+                inp.chunk_slots, inp.tokens, inp.prefix_lens,
+                inp.temperatures, inp.top_ks, inp.seeds)
+            self.stats.chunk_dispatches += 1
+        return ExecuteOutput(tokens=nxt, caches=caches,
+                             chunk_tokens=chunk_tokens)
 
     def _execute_prefill(self, inp: ExecuteInput) -> ExecuteOutput:
         """Batched full prefill.  (rows, width) bucket to powers of two so
@@ -350,20 +407,30 @@ class ModelRunner:
         return ExecuteOutput(tokens=np.asarray(first), caches=caches)
 
     def _execute_prefix(self, inp: ExecuteInput) -> ExecuteOutput:
-        """Tail-only prefill for prefix hits: the matched pages are already
-        mapped into each slot's table (the core did map_prefix/cow_block/
-        alloc_tail first), so ONE bucketed ``prefill_with_prefix`` dispatch
-        computes just the tails.  Rows / tail width / prefix pages bucket
-        to powers of two so the compile cache stays O(log^3) for a
-        long-lived runner; dummy rows carry a zero prefix + length-1 tail
-        and are never scattered."""
+        first, tail_caches = self._prefix_dispatch(
+            inp.slots, inp.tokens, inp.prefix_lens,
+            inp.temperatures, inp.top_ks, inp.seeds)
+        return ExecuteOutput(tokens=first, caches=tail_caches)
+
+    def _prefix_dispatch(self, slots, tokens, prefix_lens,
+                         temperatures, top_ks, seeds_in):
+        """Tail-only prefill for prefix hits AND mixed-step chunks: the
+        already-resident pages are mapped into each slot's table (the core
+        did map_prefix/cow_block/alloc_tail first), so ONE bucketed
+        ``prefill_with_prefix`` dispatch computes just the tails.  A chunk
+        is simply a tail whose "prefix" is the sequence's earlier chunks
+        (``prefix_lens == 0`` for chunk 0: the zeroed table gathers the
+        scratch block and the mask drops every prefix column).  Rows /
+        tail width / prefix pages bucket to powers of two so the compile
+        cache stays O(log^3) for a long-lived runner; dummy rows carry a
+        zero prefix + length-1 tail and are never scattered."""
         ps = self.page_size
-        group = len(inp.slots)
-        tail_lens = [len(t) for t in inp.tokens]
+        group = len(slots)
+        tail_lens = [len(t) for t in tokens]
         rows = pow2_bucket(group, self.num_slots)
         tailw = pow2_bucket(max(tail_lens), self.max_len)
         npref = pow2_bucket(
-            max(math.ceil(p / ps) for p in inp.prefix_lens),
+            max(math.ceil(p / ps) for p in prefix_lens),
             self.cache.max_pages)
         tails = np.zeros((rows, tailw), np.int32)
         tables = np.zeros((rows, npref), np.int32)
@@ -373,14 +440,14 @@ class ModelRunner:
         topk = np.zeros((rows,), np.int32)
         seeds = np.zeros((rows,), np.uint32)
         for j in range(group):
-            pages = math.ceil(inp.prefix_lens[j] / ps)
-            tables[j, :pages] = self.cache.table[inp.slots[j], :pages]
-            tails[j, : tail_lens[j]] = inp.tokens[j]
-            plens[j] = inp.prefix_lens[j]
+            pages = math.ceil(prefix_lens[j] / ps)
+            tables[j, :pages] = self.cache.table[slots[j], :pages]
+            tails[j, : tail_lens[j]] = tokens[j]
+            plens[j] = prefix_lens[j]
             tlens[j] = tail_lens[j]
-            temps[j] = inp.temperatures[j]
-            topk[j] = inp.top_ks[j]
-            seeds[j] = inp.seeds[j]
+            temps[j] = temperatures[j]
+            topk[j] = top_ks[j]
+            seeds[j] = seeds_in[j]
 
         dpa = self._dpa()
         t0 = time.perf_counter()
@@ -395,7 +462,7 @@ class ModelRunner:
         self.stats.prefill_time += time.perf_counter() - t0
         self.stats.prefill_tokens += int(sum(tail_lens))
         self.stats.prefill_dispatches += 1
-        return ExecuteOutput(tokens=np.asarray(first), caches=tail_caches)
+        return np.asarray(first), tail_caches
 
     # ----------------------------------------------- cache execution ops --
     # The core decides WHEN to allocate/evict/swap (and how to reclaim on

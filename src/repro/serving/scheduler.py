@@ -46,11 +46,35 @@ Invariants (property-tested in tests/test_serving_scheduler.py):
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from collections import deque
 from typing import Iterable
 
 from repro.serving.request import Sequence, SequenceState
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One step's worth of work under the per-step token budget (chunked
+    prefill, Sarathi/vLLM-v1 style).  Plain host data — no arrays.
+
+    ``admitted``: sequences newly admitted THIS step (their prefix match /
+    swap restore still needs processing by the core before any dispatch).
+    ``decode``: every running sequence whose KV cache is fully caught up
+    (``prefill_progress >= prefill_len``) and that holds a pending last
+    token — they each take one decode position in the mixed dispatch.
+    ``chunks``: ``(sequence, n_tokens)`` pairs — up to ``chunk_size``
+    prompt/recompute tokens total, taken FIFO (oldest admission first) from
+    sequences whose cursor is still short of ``prefill_len``."""
+
+    admitted: tuple[Sequence, ...]
+    decode: tuple[Sequence, ...]
+    chunks: tuple[tuple[Sequence, int], ...]
+
+    @property
+    def chunk_tokens(self) -> int:
+        return sum(n for _, n in self.chunks)
 
 
 class Scheduler:
@@ -64,7 +88,8 @@ class Scheduler:
                  max_len: int | None = None,
                  page_size: int | None = None,
                  num_pages: int | None = None,
-                 overcommit: float = 1.0):
+                 overcommit: float = 1.0,
+                 chunk_size: int | None = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if token_budget is not None and token_budget < 1:
@@ -87,6 +112,16 @@ class Scheduler:
                 "overcommit > 1 needs the paged regime (page_size/num_pages):"
                 " the fixed-slot cache preallocates max_len stripes, so "
                 "there is nothing to overcommit")
+        if chunk_size is not None:
+            if chunk_size < 1:
+                raise ValueError(
+                    f"chunk_size must be >= 1, got {chunk_size}")
+            if page_size is None:
+                raise ValueError(
+                    "chunked prefill (chunk_size) needs the paged regime "
+                    "(page_size/num_pages): chunk N>0 rides the prefix "
+                    "machinery, which gathers earlier chunks from pool pages")
+        self.chunk_size = chunk_size
         self.num_slots = num_slots
         self.token_budget = token_budget
         self.max_len = max_len
@@ -244,6 +279,50 @@ class Scheduler:
                 hook.note(match, head.prompt_len)
             admitted.append(seq)
         return admitted
+
+    # ---------------------------------------------------------- planning --
+    def plan_step(self) -> BatchPlan:
+        """Token-budget batch composition (requires ``chunk_size``): admit
+        from the FIFO head as usual, then split the step's work into decode
+        rows (every caught-up running sequence) plus at most ``chunk_size``
+        prefill tokens handed out FIFO (oldest admission first) to
+        sequences whose ``prefill_progress`` cursor trails ``prefill_len``.
+
+        Admission still charges pages up front (the PR 7 optimistic charge
+        covers every chunk's allocation: a sequence's total chunk pages
+        never exceed its current-footprint pages, which the charge always
+        includes), but the PHYSICAL page allocation now lands chunk by
+        chunk via ``alloc_tail`` instead of all at insert.  The cursor for
+        a fresh admission starts at its trie-matched length (those pages
+        are already resident — chunking composes with the prefix cache);
+        a swap-restored admission keeps its cursor (pages restore
+        verbatim, nothing to re-prefill)."""
+        if self.chunk_size is None:
+            raise RuntimeError("plan_step requires chunk_size")
+        admitted = self.admit()
+        for s in admitted:
+            if s.swap_state is None:
+                m = s.prefix_match
+                s.prefill_progress = m.matched_len if m is not None else 0
+        by_age = sorted(self.active.values(), key=lambda s: s.admit_seqno)
+        budget = self.chunk_size
+        chunks: list[tuple[Sequence, int]] = []
+        for s in by_age:
+            if s.swap_state is not None:
+                continue  # restore first (the core handles it this step)
+            rem = s.prefill_len - s.prefill_progress
+            if rem <= 0:
+                continue
+            if budget <= 0:
+                break
+            n = min(budget, rem)
+            chunks.append((s, n))
+            budget -= n
+        decode = tuple(
+            s for s in by_age
+            if s.swap_state is None and s.tokens
+            and s.prefill_progress >= s.prefill_len)
+        return BatchPlan(tuple(admitted), decode, tuple(chunks))
 
     # -------------------------------------------------------- preemption --
     def preempt(self, seq: Sequence) -> None:

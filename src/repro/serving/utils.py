@@ -68,9 +68,17 @@ class EngineStats:
     prefill_tokens: int = 0
     prefill_time: float = 0.0
     prefill_dispatches: int = 0
+    # chunked-prefill dispatches (a subset of prefill_dispatches: each
+    # mixed-step chunk group counts in both)
+    chunk_dispatches: int = 0
     decode_tokens: int = 0
     decode_time: float = 0.0
     decode_steps: int = 0
+    # longest wall-clock gap between consecutive decode dispatches while at
+    # least one admitted sequence was decode-ready — the stall a monolithic
+    # prefill inflicts on running slots, and the number chunked prefill
+    # exists to bound (before/after evidence for --chunk-size)
+    max_decode_stall: float = 0.0
     # host-vs-device split: step() wall time not spent inside a compiled
     # dispatch (scheduling, cache bookkeeping, event emission)
     host_time: float = 0.0

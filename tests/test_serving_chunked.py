@@ -1,0 +1,434 @@
+"""Chunked prefill (DESIGN.md section 15): planner properties and parity.
+
+Host-level suite (fast, no model): a miniature engine loop drives the
+real ``Scheduler`` through ``plan_step`` — admissions, chunk cursors,
+decode rows — and asserts, at every step:
+  * the chunk group never exceeds the per-step token budget,
+  * chunk tokens go to the OLDEST admissions first (FIFO by admit_seqno)
+    and a mid-prefill sequence never appears as a decode row,
+  * decode rows are exactly the caught-up, token-bearing, non-swapped
+    active sequences,
+  * the drain completes within a bounded step count and every request
+    finishes with ``reserved_units`` back at exactly 0.
+
+Engine-level suite (slow, golden parity): a chunked run must be
+TOKEN-FOR-TOKEN equal to an unchunked run of the same requests — for
+dense / butterfly / mixed factorization policies, greedy and sampled,
+with the prefix cache on, and across preempt-between-chunks resume
+(drop-and-recompute and host-swap).  Abort and preemption mid-chunk
+must conserve the page pool: partial chunk pages are freed, shared
+trie prefix pages survive with correct refcounts.  The decode step
+compiles exactly once; chunk dispatches bucket to O(log) pow2 variants.
+"""
+import random
+
+import pytest
+
+from repro.serving.request import Request, SamplingParams, Sequence, \
+    SequenceState
+from repro.serving.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; tier-1 runs without it
+    HAVE_HYPOTHESIS = False
+
+slow = pytest.mark.slow
+
+
+# ------------------------------------------------- host-level plan drain ----
+
+
+def _chunked_plan_drain(shapes, num_slots, chunk_size, pool_frac):
+    """Drive Scheduler.plan_step the way _step_chunked does — advance
+    chunk cursors, decode caught-up rows, retire at done — asserting the
+    planner invariants at every step.  Returns total steps taken."""
+    ps = 4
+    seqs = [Sequence(Request(f"r{i}", tuple(range(1, p + 1)), m))
+            for i, (p, m) in enumerate(shapes)]
+    need = lambda s: -(-s.reserved_tokens // ps)
+    num_pages = max(max(need(s) for s in seqs),
+                    int(sum(need(s) for s in seqs) * pool_frac))
+    sched = Scheduler(num_slots, page_size=ps, num_pages=num_pages,
+                      max_len=max(s.reserved_tokens for s in seqs),
+                      chunk_size=chunk_size)
+    sched.add_all(seqs)
+    finished = set()
+    steps = 0
+    for _ in range(40 * sum(p + m for p, m in shapes) + 40):
+        if not sched.has_work:
+            break
+        steps += 1
+        plan = sched.plan_step()
+        # budget: the chunk group never exceeds chunk_size tokens
+        assert plan.chunk_tokens <= chunk_size
+        for s, n in plan.chunks:
+            assert 1 <= n <= s.prefill_len - s.prefill_progress
+        # FIFO: chunk tokens drain the oldest admission first — a younger
+        # sequence gets chunk tokens only when every older one is either
+        # caught up or ahead of it in this very plan
+        ages = [s.admit_seqno for s, _ in plan.chunks]
+        assert ages == sorted(ages)
+        mid = {s.request_id for s in sched.active.values()
+               if s.swap_state is None and s.prefill_progress < s.prefill_len}
+        planned = {s.request_id for s, _ in plan.chunks}
+        if plan.chunk_tokens < chunk_size:
+            # budget left over means NO runnable prefill work remained
+            assert mid == planned
+        # decode rows: exactly the caught-up token-bearing active rows,
+        # and never a mid-prefill sequence
+        expect = {s.request_id for s in sched.active.values()
+                  if s.swap_state is None and s.tokens
+                  and s.prefill_progress >= s.prefill_len}
+        assert {s.request_id for s in plan.decode} == expect
+        assert not planned & {s.request_id for s in plan.decode}
+        # execute the plan: decode rows append (engine keeps the cursor
+        # pinned at prefill_len); chunk cursors advance; a final chunk
+        # samples the first token
+        for s in plan.decode:
+            s.append_token(7)
+            s.prefill_progress = s.prefill_len
+        for s, n in plan.chunks:
+            s.prefill_progress += n
+            if s.prefill_progress >= s.prefill_len and not s.tokens:
+                s.append_token(7)
+        for s in list(sched.active.values()):
+            if s.done:
+                sched.retire(s)
+                finished.add(s.request_id)
+        assert plan.admitted or plan.decode or plan.chunks, \
+            "plan made no progress with work pending (stall)"
+    assert not sched.has_work, "chunked drain did not complete (deadlock)"
+    assert finished == {s.request_id for s in seqs}
+    assert sched.reserved_units == 0
+    return steps
+
+
+_shapes = lambda rng, n: [(rng.randint(1, 40), rng.randint(1, 12))
+                          for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+    _shape = st.tuples(st.integers(1, 40), st.integers(1, 12))
+
+    @given(shapes=st.lists(_shape, min_size=1, max_size=10),
+           num_slots=st.integers(1, 6),
+           chunk_size=st.integers(1, 24),
+           pool_frac=st.sampled_from([0.5, 1.0]))
+    @settings(max_examples=120, deadline=None)
+    def test_plan_step_invariants_hypothesis(shapes, num_slots, chunk_size,
+                                             pool_frac):
+        _chunked_plan_drain(shapes, num_slots, chunk_size, pool_frac)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_plan_step_invariants_seeded(trial):
+    rng = random.Random(7100 + trial)
+    _chunked_plan_drain(_shapes(rng, rng.randint(1, 10)),
+                        rng.randint(1, 6), rng.randint(1, 24),
+                        rng.choice([0.5, 1.0]))
+
+
+def test_small_chunks_take_more_steps_than_one_big_chunk():
+    """Sanity that the property suite exercises actual chunking: a prompt
+    split at chunk_size=3 must take more planner steps than at 64."""
+    shapes = [(30, 2)]
+    assert _chunked_plan_drain(shapes, 2, 3, 1.0) > \
+        _chunked_plan_drain(shapes, 2, 64, 1.0)
+
+
+def test_plan_step_requires_chunk_size():
+    sched = Scheduler(2, page_size=4, num_pages=8, max_len=16)
+    with pytest.raises(RuntimeError):
+        sched.plan_step()
+
+
+def test_chunk_size_validation():
+    with pytest.raises(ValueError):
+        Scheduler(2, page_size=4, num_pages=8, max_len=16, chunk_size=0)
+    with pytest.raises(ValueError):  # chunked prefill needs the paged regime
+        Scheduler(2, token_budget=64, max_len=16, chunk_size=8)
+
+
+def test_resolve_spec_rejects_chunk_without_paging():
+    """--chunk-size with the fixed-slot cache is a configuration error
+    (chunk N>0 gathers earlier chunks from pool pages)."""
+    from repro.configs import get_config, reduced
+    from repro.serving.executor import resolve_engine_spec
+
+    cfg = reduced(get_config("qwen3-4b"))
+    with pytest.raises(ValueError, match="paged"):
+        resolve_engine_spec(cfg, 32, num_slots=2, chunk_size=8)
+
+
+# --------------------------------------------------- engine-level parity ----
+
+
+ARCH = "qwen3-4b"
+PAGE = 8
+
+
+def _cfg(policy_name: str):
+    from repro.configs import get_config, reduced
+    from repro.configs.base import recommended_policy
+    from repro.core.policy import uniform_policy
+
+    cfg = reduced(get_config(ARCH))
+    if policy_name == "butterfly":
+        cfg = cfg.with_fact(uniform_policy("butterfly", block_size=16))
+    elif policy_name == "mixed":
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+    else:
+        assert policy_name == "dense"
+    return cfg
+
+
+def _params(cfg):
+    import jax
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _requests(sampled=False):
+    """Mixed prompt lengths spanning several chunk boundaries."""
+    kw = {}
+    out = []
+    for i, (p, m) in enumerate([(7, 8), (33, 6), (18, 8), (25, 4)]):
+        if sampled:
+            kw = dict(sampling=SamplingParams(temperature=0.9, top_k=5,
+                                              seed=100 + i))
+        out.append(Request(f"r{i}", tuple(range(3 + i, 3 + i + p)), m, **kw))
+    return out
+
+
+def _run(cfg, params, *, chunk_size=None, num_pages=64, overcommit=1.0,
+         swap=False, prefix=False, sampled=False, max_len=96, num_slots=4):
+    from repro.serving import Engine
+    eng = Engine(params, cfg, max_len=max_len, num_slots=num_slots,
+                 page_size=PAGE, num_pages=num_pages, overcommit=overcommit,
+                 swap=swap, prefix_cache=prefix, chunk_size=chunk_size)
+    outs = eng.run(_requests(sampled))
+    return {o.request_id: o.tokens for o in outs}, eng
+
+
+@slow
+@pytest.mark.parametrize("policy_name", ["dense", "butterfly", "mixed"])
+def test_chunked_parity_greedy(policy_name):
+    """Chunked output is token-for-token identical to unchunked, across
+    the factorization policies; decode compiles exactly once; chunk
+    dispatches actually happened."""
+    cfg = _cfg(policy_name)
+    params = _params(cfg)
+    ref, _ = _run(cfg, params)
+    got, eng = _run(cfg, params, chunk_size=8)
+    assert got == ref, f"{policy_name}: chunked run diverged"
+    assert eng.stats.chunk_dispatches >= 1
+    assert eng.decode_compile_count() in (None, 1)
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == 0
+
+
+@slow
+def test_chunked_parity_sampled():
+    """Seeded sampling: the final chunk samples at the same fold-in
+    position as an unchunked prefill, so sampled streams match too —
+    including a chunk size that never divides the prompt lengths."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    ref, _ = _run(cfg, params, sampled=True)
+    got, eng = _run(cfg, params, chunk_size=5, sampled=True)
+    assert got == ref, "sampled chunked run diverged"
+    assert eng.stats.chunk_dispatches >= 1
+
+
+@slow
+def test_chunked_parity_with_prefix_cache():
+    """Chunking composes with the trie: matched pages map at admission,
+    the cursor starts at matched_len, and the pool drains back to the
+    trie's resident pages."""
+    from repro.serving import Engine
+
+    cfg = _cfg("butterfly")
+    params = _params(cfg)
+    head = tuple(range(7, 31))  # 24-token shared prefix = 3 full pages
+
+    def reqs():
+        return [Request(f"p{i}", head + tuple(range(60 + 4 * i, 63 + 4 * i)),
+                        6) for i in range(4)]
+
+    ref_eng = Engine(params, cfg, max_len=96, num_slots=2, page_size=PAGE,
+                     num_pages=64)
+    ref = {o.request_id: o.tokens for o in ref_eng.run(reqs())}
+    eng = Engine(params, cfg, max_len=96, num_slots=2, page_size=PAGE,
+                 num_pages=64, prefix_cache=True, chunk_size=8)
+    got = {o.request_id: o.tokens for o in eng.run(reqs())}
+    assert got == ref, "chunked+prefix run diverged"
+    assert eng.prefix.hits >= 1
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+
+
+@slow
+@pytest.mark.parametrize("swap", [False, True])
+def test_preempt_between_chunks_resumes_bit_exact(swap):
+    """A pressure pool preempts mid-run with chunking on; the drained
+    output still matches an unpressured CHUNKED run of the same requests
+    (same compiled programs, so preemption parity is isolated from
+    kernel-level float differences): drop-and-recompute resets the
+    cursor to 0, host swap preserves it, and the pool conserves.
+
+    The workload mirrors the PR 7 overcommit suite: two long generations
+    whose true footprint (8 pages each at page_size 4) together exceeds
+    the 12-page pool, so exhaustion — and preemption — is guaranteed no
+    matter how lazily chunking allocates.  chunk_size 5 never divides
+    the 8-token prompts, so chunk boundaries cross page boundaries."""
+    from repro.serving import Engine
+
+    cfg = _cfg("dense")
+    params = _params(cfg)
+
+    def reqs():
+        out = [Request("long-0", tuple(range(1, 9)), 24),
+               Request("long-1", tuple(range(11, 19)), 24)]
+        out += [Request(f"short-{i}", tuple(range(31 + 8 * i, 39 + 8 * i)),
+                        4) for i in range(4)]
+        return out
+
+    ref_eng = Engine(params, cfg, max_len=32, num_slots=6, page_size=4,
+                     num_pages=64, chunk_size=5)
+    ref = {o.request_id: o.tokens for o in ref_eng.run(reqs())}
+    eng = Engine(params, cfg, max_len=32, num_slots=6, page_size=4,
+                 num_pages=12, overcommit=4.0, swap=swap, chunk_size=5)
+    got = {o.request_id: o.tokens for o in eng.run(reqs())}
+    assert got == ref, f"preempted chunked run diverged (swap={swap})"
+    assert eng.stats.preemptions >= 1, "pressure pool never preempted"
+    if swap:
+        assert eng.stats.swapped_out >= 1
+    assert eng.decode_compile_count() in (None, 1)
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == 0
+
+
+@slow
+def test_forced_preempt_mid_chunk_recomputes_from_zero():
+    """Deterministic mid-chunk preemption: step until a long prompt is
+    provably mid-prefill, preempt it directly, and check (a) its partial
+    chunk pages are all released, (b) its cursor resets for recompute,
+    (c) the drained stream still matches the uninterrupted run."""
+    from repro.serving import Engine
+
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    reqs = _requests()
+    ref, _ = _run(cfg, params)
+    eng = Engine(params, cfg, max_len=96, num_slots=4, page_size=PAGE,
+                 num_pages=64, chunk_size=6)
+    seqs = [eng.submit(r) for r in reqs]
+    long = max(seqs, key=lambda s: len(s.request.prompt))
+    for _ in range(64):
+        eng.step()
+        if 0 < long.prefill_progress < long.prefill_len:
+            break
+    assert 0 < long.prefill_progress < long.prefill_len, \
+        "never observed a mid-prefill cursor"
+    live_before = eng.cache.allocator.num_live
+    eng.core._preempt(long)
+    assert long.prefill_progress == 0  # drop-and-recompute
+    assert long.state is SequenceState.PREEMPTED
+    assert eng.cache.allocator.num_live < live_before, \
+        "preempting a mid-prefill row released no pages"
+    for _ in range(400):
+        if not eng.scheduler.has_work:
+            break
+        eng.step()
+    assert not eng.scheduler.has_work
+    assert eng.stats.preemptions >= 1
+    got = {s.request_id: s.to_output().tokens for s in seqs}
+    assert got == ref, "recomputed-after-mid-chunk-preempt run diverged"
+    assert eng.cache.allocator.num_live == 0
+    assert eng.scheduler.reserved_units == 0
+
+
+@slow
+def test_abort_mid_chunk_frees_partial_pages_keeps_shared_prefix():
+    """Abort a sequence mid-chunked-prefill while a sibling shares its
+    trie prefix: the victim's unshared chunk pages are freed, the shared
+    prefix pages survive for the sibling (refcount correctness), and the
+    survivors' tokens are unaffected."""
+    from repro.serving import Engine
+
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    head = tuple(range(7, 31))  # 3 shared full pages at PAGE=8
+
+    def reqs():
+        return [Request(f"p{i}", head + tuple(range(60 + 6 * i, 75 + 6 * i)),
+                        6) for i in range(3)]
+
+    ref_eng = Engine(params, cfg, max_len=96, num_slots=3, page_size=PAGE,
+                     num_pages=64)
+    ref = {o.request_id: o.tokens for o in ref_eng.run(reqs())}
+    eng = Engine(params, cfg, max_len=96, num_slots=3, page_size=PAGE,
+                 num_pages=64, prefix_cache=True, chunk_size=5)
+    seqs = [eng.submit(r) for r in reqs()]
+    victim = seqs[-1]
+    for _ in range(64):
+        eng.step()
+        if 0 < victim.prefill_progress < victim.prefill_len:
+            break
+    assert 0 < victim.prefill_progress < victim.prefill_len, \
+        "never observed a mid-prefill cursor to abort"
+    ev = eng.abort(victim.request_id)
+    assert ev.finished
+    for _ in range(400):
+        if not eng.scheduler.has_work:
+            break
+        eng.step()
+    assert not eng.scheduler.has_work
+    got = {s.request_id: s.to_output().tokens for s in seqs[:-1]}
+    assert got == {k: v for k, v in ref.items()
+                   if k != victim.request_id}, "survivors diverged"
+    # conservation: everything except the trie's resident pages is free,
+    # and the shared prefix survived the abort for future hits
+    assert eng.scheduler.reserved_units == 0
+    assert eng.cache.allocator.num_live == eng.prefix.resident_pages
+    assert eng.prefix.resident_pages >= len(head) // PAGE
+
+
+@slow
+def test_unset_chunk_size_keeps_legacy_counters():
+    """chunk_size unset: zero chunk dispatches, same outputs as ever —
+    the legacy step body is untouched."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    got, eng = _run(cfg, params)
+    assert eng.chunk_size is None
+    assert eng.stats.chunk_dispatches == 0
+    assert all(len(v) >= 1 for v in got.values())
+    assert eng.stats.max_decode_stall >= 0.0
+
+
+# ------------------------------------------------------ satellite units ----
+
+
+def test_pooled_itls_flattens_all_gaps():
+    from repro.launch.serve import pooled_itls
+    from repro.serving.request import RequestOutput
+
+    def out(rid, itls):
+        return RequestOutput(
+            request_id=rid, prompt=(1,), tokens=(2,) * (len(itls) + 1),
+            finish_reason=None, queue_time=0.0, time_to_first_token=0.0,
+            latency=sum(itls), itls=tuple(itls))
+
+    pooled = pooled_itls([out("a", [0.1, 0.3]), out("b", []),
+                          out("c", [0.2])])
+    assert sorted(pooled) == [0.1, 0.2, 0.3]
+
+
+def test_stall_metric_defaults_zero():
+    from repro.serving.utils import EngineStats
+    st = EngineStats()
+    assert st.max_decode_stall == 0.0
+    assert st.chunk_dispatches == 0

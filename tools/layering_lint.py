@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Layering lint for the serving stack (DESIGN.md section 14).
 
-Two one-way rules keep the EngineCore / ModelRunner / Executor split from
-silently regressing back into a monolith:
+Three one-way rules keep the EngineCore / ModelRunner / Executor split
+from silently regressing back into a monolith:
 
 1. ``serving/runner.py`` (the device layer) must not import the host-policy
    modules — ``scheduler``, ``request``, ``prefix_cache``, ``events`` — or
@@ -15,6 +15,13 @@ silently regressing back into a monolith:
    A jit appearing in ``core.py``/``engine.py``/anywhere else means device
    execution leaked out of the layer that owns compile counters, sharding
    specs, and the compiled-once guarantee.
+
+3. The host-policy layer — ``core.py``, ``scheduler.py``, ``events.py`` —
+   must not import ``jax`` at all (``jax.numpy`` and friends included).
+   These modules are what a multi-process or remote executor replicates
+   on a controller host with no accelerator; a jax import there drags the
+   whole device runtime into the policy process and breaks the "plain
+   host data across the seam" contract.
 
 stdlib ``ast`` only — no third-party deps, runs in the fast CI job.
 Exits non-zero listing every violation.
@@ -41,6 +48,11 @@ RUNNER_FORBIDDEN = (
 # files allowed to call jax.jit: the device layer, and the seed-path
 # parity oracle (not part of the engine stack)
 JIT_ALLOWED = {"runner.py", "reference.py"}
+
+# host-policy modules that must never import jax (directly or via
+# ``from jax... import ...``): they run on controller hosts with no
+# accelerator when the executor is remote
+NO_JAX = {"core.py", "scheduler.py", "events.py"}
 
 
 def _imported_modules(tree: ast.AST):
@@ -104,6 +116,16 @@ def check() -> list[str]:
             errors.append(
                 f"{path}:{line}: jax.jit called outside the runner — "
                 "compiled dispatches belong to serving/runner.py")
+
+    for name in sorted(NO_JAX):
+        path = SERVING / name
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for mod, line in _imported_modules(tree):
+            if mod == "jax" or mod.startswith("jax."):
+                errors.append(
+                    f"{path}:{line}: {name} imports {mod} — the host-"
+                    "policy layer must stay device-free (it runs on "
+                    "controller hosts when the executor is remote)")
     return errors
 
 
@@ -115,7 +137,7 @@ def main() -> int:
         print(f"layering-lint: {len(errors)} violation(s)", file=sys.stderr)
         return 1
     print("layering-lint: ok (runner imports clean; jax.jit confined to "
-          "the runner)")
+          "the runner; core/scheduler/events jax-free)")
     return 0
 
 
