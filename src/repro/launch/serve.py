@@ -44,11 +44,19 @@ step composes every running slot's decode token with up to N prompt
 tokens from the queue head into ONE mixed dispatch, so a long admission
 no longer stalls running decodes — token streams stay bit-identical to
 the unchunked path.
+
+``--speculative`` turns on speculative decoding (DESIGN.md section 16): a
+small dense draft — the target's first ``--draft-layers`` layers sharing
+its embedding/head — proposes ``--spec-k`` tokens per slot per round and
+ONE batched target dispatch verifies them all; the output stream stays
+bit-identical to non-speculative decode at any temperature.  Conflicts
+with ``--chunk-size`` and ``--swap``.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import dataclasses
 import itertools
 import json
 import logging
@@ -80,6 +88,27 @@ def resolve_policy(args) -> FactorizationPolicy | None:
     return None
 
 
+def make_draft(cfg, params, draft_layers: int):
+    """(draft_params, draft_cfg) for ``--speculative``: the target's first
+    ``draft_layers`` layers with the embedding / final norm / head SHARED
+    (zero extra bytes for those), under the same factorization policy so
+    the sliced period params apply unchanged.  A distilled draft would
+    load its own checkpoint here; the truncated-target draft is the
+    zero-training stand-in with the right cost shape."""
+    period = len(cfg.pattern)
+    if draft_layers < period or draft_layers % period != 0 or \
+            draft_layers >= cfg.num_layers:
+        raise ValueError(
+            f"--draft-layers must be a multiple of the pattern period "
+            f"({period}) in [{period}, {cfg.num_layers}), got {draft_layers}")
+    m = draft_layers // period
+    draft_cfg = dataclasses.replace(cfg, num_layers=draft_layers)
+    draft_params = dict(params)
+    draft_params["periods"] = jax.tree.map(lambda x: x[:m],
+                                           params["periods"])
+    return draft_params, draft_cfg
+
+
 def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
     """Engine construction shared by the closed-batch and HTTP modes.
 
@@ -103,6 +132,23 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
     if chunk_size is not None and page_size is None:
         raise SystemExit("--chunk-size needs the paged KV cache; drop "
                          "--fixed-slots / set --page-size")
+    speculative = bool(getattr(args, "speculative", False))
+    spec_k = int(getattr(args, "spec_k", 0) or 0) or None
+    if speculative and chunk_size is not None:
+        raise SystemExit("--speculative and --chunk-size are mutually "
+                         "exclusive: a verify round is the step's whole "
+                         "token budget")
+    if speculative and swap:
+        raise SystemExit("--speculative composes with drop-and-recompute "
+                         "preemption only; drop --swap")
+    draft_params = draft_cfg = None
+    if speculative:
+        try:
+            draft_params, draft_cfg = make_draft(
+                cfg, params, int(getattr(args, "draft_layers", 0)
+                                 or len(cfg.pattern)))
+        except ValueError as e:
+            raise SystemExit(str(e))
     try:
         if args.memory_budget_mb:  # derived sizing; explicit flags conflict
             if args.slots or args.token_budget:
@@ -111,7 +157,8 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
             budget = int(args.memory_budget_mb * 1e6)
             plan = plan_engine_report(cfg, budget, max_len, mesh=mesh,
                                       page_size=page_size,
-                                      overcommit=overcommit)
+                                      overcommit=overcommit,
+                                      draft_cfg=draft_cfg)
             log.info("plan (per device): params %.2f MB, kv %.2f MB, "
                      "%d slots x %d shards -> %d total, token budget %s"
                      "%s",
@@ -120,6 +167,17 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                      plan.dp_size, plan.num_slots, plan.token_budget,
                      f", {plan.num_pages} pages x {plan.page_size} tokens"
                      if plan.num_pages is not None else "")
+            if draft_cfg is not None:
+                savings = plan.dense_target_param_bytes_per_device - \
+                    plan.param_bytes_per_device
+                log.info("speculative plan: draft %.2f MB (dense-priced) + "
+                         "%.2f MB/slot KV vs %.2f MB factorization "
+                         "savings — %sfunded by compression",
+                         plan.draft_param_bytes_per_device / 1e6,
+                         plan.draft_slot_bytes_per_device / 1e6,
+                         savings / 1e6,
+                         "" if plan.draft_param_bytes_per_device <= savings
+                         else "NOT ")
             # hand the spec the plan we just logged (num_slots is already a
             # dp multiple) instead of re-deriving it from the budget
             spec = resolve_engine_spec(
@@ -128,14 +186,18 @@ def build_engine(args, cfg, params, max_len: int, mesh) -> Engine:
                               else plan.token_budget),
                 page_size=plan.page_size, num_pages=plan.num_pages,
                 mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
-                swap=swap, chunk_size=chunk_size)
+                swap=swap, chunk_size=chunk_size,
+                speculative=speculative, spec_k=spec_k)
         else:
             spec = resolve_engine_spec(
                 cfg, max_len, num_slots=(args.slots or min(args.batch, 8)),
                 token_budget=args.token_budget or None, page_size=page_size,
                 mesh=mesh, prefix_cache=prefix, overcommit=overcommit,
-                swap=swap, chunk_size=chunk_size)
-        executor = LocalExecutor(params, cfg, spec, mesh=mesh)
+                swap=swap, chunk_size=chunk_size,
+                speculative=speculative, spec_k=spec_k)
+        executor = LocalExecutor(params, cfg, spec, mesh=mesh,
+                                 draft_params=draft_params,
+                                 draft_cfg=draft_cfg)
         return Engine.from_executor(executor)
     except ValueError as e:
         # e.g. --prefix-cache on a recurrent arch (needs pure attention)
@@ -225,6 +287,35 @@ def request_from_json(payload: dict, request_id: str) -> Request:
                    sampling=sampling)
 
 
+def _spec_section(engine: Engine) -> dict | None:
+    """The /stats + /healthz speculative block (None when --speculative is
+    off): acceptance bookkeeping, per-round yield, dispatch counts, and
+    the draft/verify wall-time split."""
+    if not engine.speculative:
+        return None
+    st = engine.stats
+    dst = engine.draft_stats
+    return {
+        "spec_k": engine.spec_k,
+        "rounds": st.spec_rounds,
+        "proposed": st.spec_proposed,
+        "accepted": st.spec_accepted,
+        "committed": st.spec_committed,
+        "acceptance_rate": (st.spec_accepted / st.spec_proposed
+                            if st.spec_proposed else None),
+        # mean tokens per per-sequence commit: 1.0 = plain-decode yield,
+        # spec_k + 1 = every proposal accepted every round
+        "mean_run_length": (st.spec_committed / st.spec_commits
+                            if st.spec_commits else None),
+        "verify_dispatches": st.verify_dispatches,
+        "draft_decode_dispatches": dst.decode_steps,
+        "verify_time_s": st.verify_time,
+        "draft_time_s": dst.device_time,
+        "verify_compile_count": engine.verify_compile_count(),
+        "draft_decode_compile_count": engine.draft_decode_compile_count(),
+    }
+
+
 def stats_payload(engine: Engine, state: ServerState) -> dict:
     st = engine.stats
     done = state.completed
@@ -275,6 +366,13 @@ def stats_payload(engine: Engine, state: ServerState) -> dict:
             "swapped_in": st.swapped_in,
         },
         "completed": len(done),
+        # speculative decoding (--speculative); None when off.  acceptance
+        # _rate is proposals the target agreed with; mean_run_length is
+        # tokens committed per verify round (1.0 = never better than plain
+        # decode, spec_k + 1 = every proposal accepted); the wall-time
+        # split shows where a round's device time goes (draft dispatches
+        # accumulate in the DRAFT runner's own stats block)
+        "speculative": _spec_section(engine),
         # trie hit-rate counters; None when --prefix-cache is off
         "prefix_cache": (engine.prefix.stats()
                          if engine.prefix is not None else None),
@@ -309,6 +407,9 @@ def healthz_payload(engine: Engine) -> dict:
         "free_pages": alloc.num_free if alloc is not None else None,
         # a router can weigh preemption churn when picking a replica
         "preemptions": engine.stats.preemptions,
+        # a router can weigh speculative yield too: a replica whose
+        # acceptance collapsed is barely faster than plain decode
+        "speculative": _spec_section(engine),
     }
 
 
@@ -459,6 +560,17 @@ def run_batch(args, engine: Engine, cfg) -> None:
     if engine.chunk_size is not None:
         log.info("chunked prefill: chunk_size %d, %d chunk dispatches",
                  engine.chunk_size, st.chunk_dispatches)
+    if engine.speculative:
+        spec = _spec_section(engine)
+        log.info("speculative: k=%d, %d rounds, %d/%d proposals accepted "
+                 "(%.0f%%), run length %.2f; verify %.3fs in %d "
+                 "dispatches, draft %.3fs in %d",
+                 spec["spec_k"], spec["rounds"], spec["accepted"],
+                 spec["proposed"],
+                 100 * (spec["acceptance_rate"] or 0.0),
+                 spec["mean_run_length"] or 0.0,
+                 spec["verify_time_s"], spec["verify_dispatches"],
+                 spec["draft_time_s"], spec["draft_decode_dispatches"])
     log.info("max decode stall: %.4f s", st.max_decode_stall)
     for line in _latency_lines(outputs):
         log.info("%s", line)
@@ -511,6 +623,20 @@ def main():
                          "a long prompt no longer stalls running slots "
                          "(needs --page-size; 0 = off, the legacy "
                          "admit-or-decode step)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: a small dense draft (the "
+                         "target's first --draft-layers layers, shared "
+                         "embedding/head) proposes --spec-k tokens per "
+                         "slot and one batched target dispatch verifies "
+                         "them; bit-identical output, conflicts with "
+                         "--chunk-size/--swap")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens proposed per slot per verify round "
+                         "(0 = the engine default, 3)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="layers in the truncated-target draft model (0 = "
+                         "one pattern period; must be a multiple of the "
+                         "period, below the target's layer count)")
     ap.add_argument("--memory-budget-mb", type=float, default=0.0,
                     help="derive slots + token budget from a device memory "
                          "budget (params priced under the active policy; "

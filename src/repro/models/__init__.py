@@ -8,5 +8,6 @@ from repro.models.model import (
     lm_loss,
     param_count,
     prefill,
+    prefill_with_past,
     prefill_with_prefix,
 )

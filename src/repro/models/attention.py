@@ -225,17 +225,23 @@ def attn_decode(
     params: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
 ) -> tuple[jax.Array, dict]:
     """Single-token decode.  x: (B, 1, d); cache k/v: (B, T, Hkv, hd);
-    pos: (B,) current position (tokens written at cache[pos])."""
+    pos: (B,) current position (tokens written at cache[pos]).
+
+    The write is a scatter-set, not an add: it overwrites whatever the
+    cache holds at ``pos``, so stale K/V past a row's live length (e.g. a
+    rejected speculative tail) is harmless — the causal mask already hides
+    it from reads, and the next write at that position replaces it."""
     b = x.shape[0]
     positions = pos[:, None]  # (B, 1)
     if cfg.mrope:
         positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
 
-    t = cache["k"].shape[1]
-    onehot = jax.nn.one_hot(pos, t, dtype=cache["k"].dtype)  # (B, T)
-    k = cache["k"] + onehot[:, :, None, None] * k_new.astype(cache["k"].dtype)
-    v = cache["v"] + onehot[:, :, None, None] * v_new.astype(cache["v"].dtype)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, pos].set(
+        k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[rows, pos].set(
+        v_new[:, 0].astype(cache["v"].dtype), mode="drop")
 
     y = _decode_attention(params, cfg, q, k, v, pos, x.dtype)
     return y, {"k": k, "v": v}
@@ -316,6 +322,46 @@ def attn_prefill_paged_past(
     vp = cache["v"][page_table].reshape(b, -1, hkv, hd)
     kp = pctx.constrain(kp, "dp", None, None, None)
     vp = pctx.constrain(vp, "dp", None, None, None)
+    y = _prefill_past_attention(params, cfg, q, k, v, kp, vp,
+                                prefix_lens, x.dtype)
+    return y, {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
+
+def attn_prefill_dense_past(
+    params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+    prefix_lens: jax.Array, positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """Tail prefill attending to a fixed-stripe prefix plus itself.
+
+    The fixed-slot analogue of :func:`attn_prefill_paged_past`: cache k/v
+    are per-slot dense stripes (B, T, Hkv, hd) and the whole stripe plays
+    the role of the gathered page view — ``prefix_lens`` masks everything
+    at and beyond each row's live length, so stale positions (zeros, or a
+    previously rejected speculative tail) contribute exactly nothing.  The
+    attention math itself is the shared :func:`_prefill_past_attention`
+    core, which is what makes fixed/paged speculative verify bit-identical.
+    Returns (out (B, S, d), {"k", "v"} tail K/V (B, S, Hkv, hd)).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    kp = pctx.constrain(cache["k"], "dp", None, None, None)
+    vp = pctx.constrain(cache["v"], "dp", None, None, None)
+    y = _prefill_past_attention(params, cfg, q, k, v, kp, vp,
+                                prefix_lens, x.dtype)
+    return y, {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
+
+def _prefill_past_attention(params: dict, cfg: ModelConfig, q: jax.Array,
+                            k: jax.Array, v: jax.Array, kp: jax.Array,
+                            vp: jax.Array, prefix_lens: jax.Array,
+                            out_dtype) -> jax.Array:
+    """Shared tail-vs-past attention core: tail q/k/v (B, S, ...) against a
+    dense past view kp/vp (B, n_pref, Hkv, hd) masked at ``t <
+    prefix_lens`` plus the tail itself masked causally.  Both the paged and
+    fixed-stripe past-prefill paths end here — bit-exact parity between
+    them depends on this being the ONE place the math lives."""
+    b, s = q.shape[0], q.shape[1]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     n_pref = kp.shape[1]
     kf = jnp.concatenate([kp, k.astype(kp.dtype)], axis=1)  # (B, T, Hkv, hd)
     vf = jnp.concatenate([vp, v.astype(vp.dtype)], axis=1)
@@ -333,10 +379,9 @@ def attn_prefill_paged_past(
     scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bkgqt,btkh->bqkgh", p, vf.astype(jnp.float32))
-    o = o.reshape(b, s, hq * hd).astype(x.dtype)
+    o = o.reshape(b, s, hq * hd).astype(out_dtype)
     _, out_lin = _linears(cfg)
-    y = out_lin(params["out"], o)
-    return y, {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+    return out_lin(params["out"], o)
 
 
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:

@@ -235,8 +235,9 @@ def prefill(params: dict, cfg: ModelConfig, inputs: jax.Array, max_len: int,
     inputs: (B, S) tokens or (B, S, d) embeddings with S <= max_len.
     lengths: (B,) true prompt lengths for right-padded ragged batches
     (default: every row is full length S).  Attention K/V are zero-padded to
-    ``max_len`` and zeroed beyond each row's true length — decode's additive
-    one-hot cache writes require untouched positions to be exactly zero.
+    ``max_len`` and zeroed beyond each row's true length — positions past a
+    row's live length are never read (the causal/prefix masks hide them),
+    and decode overwrites them in place when the row grows.
 
     Ragged lengths (any row shorter than S) are only exact for pure-attention
     patterns: recurrent mixers (mamba/xlstm) fold right-pad tokens into their
@@ -359,6 +360,63 @@ def prefill_with_prefix(params: dict, cfg: ModelConfig, inputs: jax.Array,
         return x, tuple(tails)
 
     x, tails = jax.lax.scan(period_body, x, (params["periods"], paged_caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_linear(cfg)(params["head"], x)
+    return logits, tails
+
+
+def prefill_with_past(params: dict, cfg: ModelConfig, inputs: jax.Array,
+                      caches, prefix_lens: jax.Array):
+    """Tail prefill against fixed-stripe decode caches: the fixed-slot
+    analogue of :func:`prefill_with_prefix`, used by speculative verify on
+    engines without a paged pool.
+
+    inputs: (B, S_tail) right-padded tail tokens; caches: decode caches in
+    the ``init_caches(cfg, B, max_len)`` layout (attention leaves (P, B,
+    max_len, Hkv, hd)); prefix_lens: (B,) committed token counts — each
+    row's stripe is valid through ``prefix_lens[b]`` and masked beyond it,
+    so stale positions (zeros or a rejected speculative tail) contribute
+    exactly nothing.  Tail token t of row b sits at absolute position
+    ``prefix_lens[b] + t``.
+
+    Returns (logits (B, S_tail, padded_vocab), per-period ``{"k", "v"}``
+    tail caches (P, B, S_tail, Hkv, hd)) for ``SlotCache.write_tails``.
+    The attention core is shared with the paged path, so tail logits are
+    bit-identical to it — and to an uncached forward over the full history.
+
+    Pure-attention patterns only, for the same reason as the paged path.
+    """
+    if any(m != "attn" for m, _ in cfg.pattern):
+        raise ValueError(
+            f"{cfg.name}: past-prefill needs a pure-attention pattern; "
+            "recurrent state cannot be recovered from the cache stripes")
+    b, s = inputs.shape[:2]
+    positions = prefix_lens[:, None] + jnp.arange(s)[None]  # (B, S)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    params = cast_params(params, cfg.dtype)
+    x = _embed_inputs(params, cfg, inputs)
+    x = pctx.constrain(x, "dp", None, None)
+
+    def period_body(x, inp):
+        pp, pcaches = inp
+        tails = []
+        for i, (m, f) in enumerate(cfg.pattern):
+            p = pp[f"slot{i}"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            h, kv = attention.attn_prefill_dense_past(
+                p["mixer"], cfg, h, pcaches[i], prefix_lens, positions)
+            x = x + h
+            if f != "none":
+                g = rms_norm(x, p["norm2"], cfg.norm_eps)
+                g = (moe_lib.moe_forward(p["ffn"], cfg, g) if f == "moe"
+                     else mlp_forward(p["ffn"], cfg, g))
+                x = x + g
+            x = pctx.constrain(x, "dp", None, None)
+            tails.append(kv)
+        return x, tuple(tails)
+
+    x, tails = jax.lax.scan(period_body, x, (params["periods"], caches))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _head_linear(cfg)(params["head"], x)
     return logits, tails

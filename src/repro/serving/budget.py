@@ -132,6 +132,15 @@ class EnginePlan:
     page_size: int | None = None
     num_pages: int | None = None
     overcommit: float = 1.0
+    # speculative decoding (``draft_cfg`` passed): the draft model's bill,
+    # priced under a DENSE policy (the draft is small and dense — that is
+    # the trade), next to what the TARGET would cost dense.  The paper's
+    # compression-funded framing in two numbers: the draft fits iff
+    # ``draft_param_bytes <= dense_target_param_bytes - param_bytes``,
+    # i.e. the factorization savings cover the whole speculative apparatus.
+    draft_param_bytes_per_device: int = 0
+    draft_slot_bytes_per_device: int = 0   # per-slot draft KV stripe
+    dense_target_param_bytes_per_device: int = 0
 
 
 def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
@@ -140,8 +149,18 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
                        mesh=None, dp: tuple[str, ...] = ("data",),
                        fsdp: bool | None = None,
                        page_size: int | None = None,
-                       overcommit: float = 1.0) -> EnginePlan:
+                       overcommit: float = 1.0,
+                       draft_cfg: ModelConfig | None = None) -> EnginePlan:
     """Full per-device budget breakdown; ``plan_engine`` is the tuple view.
+
+    ``draft_cfg`` (speculative decoding) adds the draft model to the bill:
+    its params are priced under a DENSE policy regardless of what
+    ``draft_cfg.fact`` says — the draft exists because butterfly savings
+    on the TARGET freed the memory, and pricing it dense keeps that trade
+    honest — and every slot additionally carries the draft's fixed-stripe
+    KV (``max_len`` tokens; the draft cache is never paged).  The plan's
+    ``draft_param_bytes_per_device`` vs ``dense_target_param_bytes_per_
+    device - param_bytes_per_device`` is the funded-by-compression check.
 
     Fixed-slot regime (``page_size=None``): slots are sized for
     ``mean_seq_tokens`` occupancy (default max_len / 2) — continuous
@@ -190,10 +209,25 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
     mean = mean_seq_tokens or max(1, max_len // 2)
     dp_size = axes_product(mesh, dp) if mesh is not None else 1
     pb = param_bytes(cfg, mesh=mesh, fsdp=fsdp)
-    avail = memory_bytes - pb
+    draft_pb = dense_pb = draft_slot = 0
+    if draft_cfg is not None:
+        from repro.core.policy import DENSE_POLICY
+        draft_pb = param_bytes(draft_cfg.with_fact(DENSE_POLICY),
+                               mesh=mesh, fsdp=fsdp)
+        dense_pb = param_bytes(cfg.with_fact(DENSE_POLICY),
+                               mesh=mesh, fsdp=fsdp)
+        if mesh is None:
+            draft_slot = slot_state_bytes(draft_cfg) + \
+                cache_bytes_per_token(draft_cfg) * max_len
+        else:
+            d_tok, d_fix = _local_slot_bytes(draft_cfg, mesh, dp, max_len)
+            draft_slot = d_fix + d_tok * max_len
+    avail = memory_bytes - pb - draft_pb
     if avail <= 0:
+        what = "params alone" if draft_cfg is None else \
+            "target + draft params"
         raise ValueError(
-            f"{cfg.name}: params alone ({pb} B"
+            f"{cfg.name}: {what} ({pb + draft_pb} B"
             f"{'/device' if mesh is not None else ''}) exceed the memory "
             f"budget ({memory_bytes} B); try a tighter factorization "
             "policy (FactorizationPolicy.from_budget)")
@@ -202,6 +236,9 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
         fixed = slot_state_bytes(cfg)
     else:
         per_tok, fixed = _local_slot_bytes(cfg, mesh, dp, max_len)
+    # the draft's per-slot stripe is fixed physical state, exactly like
+    # recurrent slot state — fold it into the per-slot floor
+    fixed += draft_slot
     # floor: one slot's fixed state + the smallest admissible request
     # (prompt 1 + max_new 1 = 2 reserved tokens)
     if avail < fixed + 2 * per_tok:
@@ -239,7 +276,10 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
         return EnginePlan(slots, num_pages * page_size, dp_size, local_slots,
                           pb, avail, per_tok, fixed,
                           page_size=page_size, num_pages=num_pages,
-                          overcommit=float(overcommit))
+                          overcommit=float(overcommit),
+                          draft_param_bytes_per_device=draft_pb,
+                          draft_slot_bytes_per_device=draft_slot,
+                          dense_target_param_bytes_per_device=dense_pb)
 
     per_slot = fixed + per_tok * mean
     local_slots = int(avail // per_slot) if per_slot else cap
@@ -247,10 +287,16 @@ def plan_engine_report(cfg: ModelConfig, memory_bytes: int, max_len: int,
     slots = local_slots * dp_size
     if per_tok == 0:
         return EnginePlan(slots, None, dp_size, local_slots, pb, avail,
-                          per_tok, fixed)
+                          per_tok, fixed,
+                          draft_param_bytes_per_device=draft_pb,
+                          draft_slot_bytes_per_device=draft_slot,
+                          dense_target_param_bytes_per_device=dense_pb)
     tokens = dp_size * int((avail - local_slots * fixed) // per_tok)
     return EnginePlan(slots, min(tokens, slots * max_len), dp_size,
-                      local_slots, pb, avail, per_tok, fixed)
+                      local_slots, pb, avail, per_tok, fixed,
+                      draft_param_bytes_per_device=draft_pb,
+                      draft_slot_bytes_per_device=draft_slot,
+                      dense_target_param_bytes_per_device=dense_pb)
 
 
 def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
@@ -259,11 +305,14 @@ def plan_engine(cfg: ModelConfig, memory_bytes: int, max_len: int,
                 mesh=None, dp: tuple[str, ...] = ("data",),
                 fsdp: bool | None = None,
                 page_size: int | None = None,
-                overcommit: float = 1.0) -> tuple[int, int | None]:
+                overcommit: float = 1.0,
+                draft_cfg: ModelConfig | None = None) -> tuple[int, int | None]:
     """(num_slots, token_budget) that fit ``memory_bytes`` (per device when
     a mesh is given) — see :func:`plan_engine_report` for the breakdown
-    (including ``num_pages`` for paged plans)."""
+    (including ``num_pages`` for paged plans and the dense-priced draft
+    bill for speculative plans)."""
     plan = plan_engine_report(cfg, memory_bytes, max_len, mean_seq_tokens,
                               max_slots, mesh=mesh, dp=dp, fsdp=fsdp,
-                              page_size=page_size, overcommit=overcommit)
+                              page_size=page_size, overcommit=overcommit,
+                              draft_cfg=draft_cfg)
     return plan.num_slots, plan.token_budget

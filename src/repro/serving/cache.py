@@ -34,6 +34,46 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_caches, init_paged_caches
+from repro.serving.utils import next_pow2
+
+
+def _make_tail_scatter(attn_flags: tuple[bool, ...]):
+    """Compiled tail-K/V scatter shared by both cache layouts:
+    ``data[i][k|v][:, a_idx[n], b_idx[n]] = caches[i][k|v][:, r_idx[n],
+    t_idx[n]]`` for every attention period i.  Eagerly this is a traced
+    gather + scatter per period per key — tens of dispatches of pure
+    Python overhead on the speculative-commit hot path (every verify
+    round scatters its accepted tail); jitted it is one fused program.
+    Callers pad the index vectors to a power of two by REPEATING the
+    last entry (duplicate scatter indices carrying identical payloads
+    are deterministic), so compiled variants stay O(log max batch)."""
+
+    @jax.jit
+    def scatter(data, caches, r_idx, t_idx, a_idx, b_idx):
+        new = []
+        for i, is_attn in enumerate(attn_flags):
+            if is_attn:
+                entry = {}
+                for key in ("k", "v"):
+                    dst = data[i][key]
+                    src = caches[i][key][:, r_idx, t_idx]
+                    entry[key] = dst.at[:, a_idx, b_idx].set(
+                        src.astype(dst.dtype))
+                new.append(entry)
+            else:
+                new.append(data[i])
+        return tuple(new)
+
+    return scatter
+
+
+def _pad_pow2(*columns):
+    """Pad parallel index lists to the next power of two by repeating
+    their last entry; returns int32 arrays (see _make_tail_scatter)."""
+    n = len(columns[0])
+    pad = next_pow2(n)
+    return tuple(np.asarray(col + [col[-1]] * (pad - n), np.int32)
+                 for col in columns)
 
 
 class PoolExhausted(MemoryError):
@@ -91,6 +131,7 @@ class SlotCache:
         self.num_slots = num_slots
         self.max_len = max_len
         self.shardings = shardings
+        self._tail_scatter = None  # built lazily on first write_tails
         self.data = init_caches(cfg, num_slots, max_len)
         # blank single-slot template used to restore evicted slots
         self._blank = init_caches(cfg, 1, max_len)
@@ -137,6 +178,47 @@ class SlotCache:
                                  blank.shape[:1] + (len(slots),)
                                  + blank.shape[2:])),
             self.data, self._blank)
+        self._commit()
+
+    # ------------------------------------------------------ tail scatter --
+    def write_tails(self, slots: TypingSequence[int], caches,
+                    starts: TypingSequence[int],
+                    lengths: TypingSequence[int],
+                    rows: TypingSequence[int] | None = None) -> None:
+        """Scatter tail K/V rows into the fixed stripes — the fixed-slot
+        mirror of :meth:`PagedSlotCache.write_tails` (same signature, no
+        mapping step: a stripe always backs every position).  ``caches`` is
+        a per-period tuple of ``{"k", "v"}`` leaves shaped ``(P, B, S_tail,
+        Hkv, hd)`` (from ``models.prefill_with_past``); row ``rows[j]``'s
+        tail index t holds sequence position ``starts[j] + t``, and
+        positions [``starts[j]``, ``lengths[j]``) are written.  Attention
+        entries only — recurrent entries are left untouched (the callers
+        are attention-only paths)."""
+        if rows is None:
+            rows = list(range(len(slots)))
+        if len(rows) != len(slots) or len(starts) != len(slots) \
+                or len(lengths) != len(slots):
+            raise ValueError(
+                f"{len(slots)} slots vs {len(rows)} rows / "
+                f"{len(starts)} starts / {len(lengths)} lengths")
+        self._check_slots(slots)
+        row_sel, tail_sel, slot_sel, pos_sel = [], [], [], []
+        for r, s, st, ln in zip(rows, slots, starts, lengths):
+            if not 0 <= int(st) < int(ln) <= self.max_len:
+                raise ValueError(f"slot {s}: tail [{st}, {ln}) out of range "
+                                 f"(0, {self.max_len}]")
+            for pos in range(int(st), int(ln)):
+                row_sel.append(int(r))
+                tail_sel.append(pos - int(st))
+                slot_sel.append(int(s))
+                pos_sel.append(pos)
+        r_idx, t_idx, s_idx, p_idx = _pad_pow2(
+            row_sel, tail_sel, slot_sel, pos_sel)
+        if self._tail_scatter is None:
+            self._tail_scatter = _make_tail_scatter(
+                tuple(m == "attn" for m, _ in self.cfg.pattern))
+        self.data = self._tail_scatter(
+            self.data, caches, r_idx, t_idx, s_idx, p_idx)
         self._commit()
 
     # ------------------------------------------------------------ views --
@@ -299,6 +381,7 @@ class PagedSlotCache:
         self.table = np.zeros((num_slots, self.max_pages), np.int32)
         self.shardings = shardings
         self._attn = [m == "attn" for m, _ in cfg.pattern]
+        self._tail_scatter = None  # built lazily on first write_tails
         self.data = init_paged_caches(cfg, num_slots, num_pages + 1, page_size)
         # blank single-slot template for the slot-indexed (recurrent) leaves
         self._blank = init_caches(cfg, 1, 1)
@@ -489,23 +572,11 @@ class PagedSlotCache:
                 tail_sel.append(pos - int(st))
                 bid.append(b)
                 off.append(pos % self.page_size)
-        r_idx = jnp.asarray(row_sel, jnp.int32)
-        t_idx = jnp.asarray(tail_sel, jnp.int32)
-        b_idx = jnp.asarray(bid, jnp.int32)
-        o_idx = jnp.asarray(off, jnp.int32)
-        new = []
-        for i, is_attn in enumerate(self._attn):
-            if is_attn:
-                entry = {}
-                for key in ("k", "v"):
-                    pool = self.data[i][key]
-                    src = caches[i][key][:, r_idx, t_idx]  # (P, N, Hkv, hd)
-                    entry[key] = pool.at[:, b_idx, o_idx].set(
-                        src.astype(pool.dtype))
-                new.append(entry)
-            else:
-                new.append(self.data[i])
-        self.data = tuple(new)
+        r_idx, t_idx, b_idx, o_idx = _pad_pow2(row_sel, tail_sel, bid, off)
+        if self._tail_scatter is None:
+            self._tail_scatter = _make_tail_scatter(tuple(self._attn))
+        self.data = self._tail_scatter(
+            self.data, caches, r_idx, t_idx, b_idx, o_idx)
         self._commit()
 
     # ------------------------------------------------------------ evict --

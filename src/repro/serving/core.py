@@ -31,6 +31,7 @@ from repro.serving.request import (Request, RequestOutput, Sequence,
                                    SequenceState)
 from repro.serving.runner import ExecuteInput
 from repro.serving.scheduler import Scheduler
+from repro.serving.speculative import DraftProposer, SpecVerifier
 
 
 def _sampling_columns(group: list[Sequence]):
@@ -65,6 +66,8 @@ class EngineCore:
         self.max_top_k = spec.max_top_k
         self.eos_id = eos_id
         self.chunk_size = spec.chunk_size
+        self.speculative = spec.speculative
+        self.spec_k = spec.spec_k
         if spec.page_size is not None:
             self.scheduler = Scheduler(spec.num_slots, max_len=spec.max_len,
                                        page_size=spec.page_size,
@@ -93,6 +96,18 @@ class EngineCore:
         # completion, None while no admitted sequence is decode-ready (the
         # gap only counts as a stall if someone was waiting to decode)
         self._last_decode_done: float | None = None
+        # speculative decoding (DESIGN.md section 16): the drafter runs the
+        # executor's small dense draft model k tokens ahead per slot, the
+        # verifier scores every slot's proposals in ONE batched target
+        # dispatch and commits the accepted run — both are host policy
+        # driving the SAME executor contract as everything above
+        self.drafter: DraftProposer | None = None
+        self.verifier: SpecVerifier | None = None
+        if spec.speculative:
+            self.drafter = DraftProposer(executor, k=spec.spec_k)
+            self.verifier = SpecVerifier(
+                executor, self.drafter, eos_id=eos_id, stats=self.stats,
+                page_size=spec.page_size, reclaim=self._reclaim)
 
     # ---------------------------------------------------------- lifecycle --
     def validate(self, seq: Sequence) -> None:
@@ -157,6 +172,8 @@ class EngineCore:
             slot = seq.slot
             self.scheduler.retire(seq)
             self.executor.clear_slot(slot)
+            if self.drafter is not None:
+                self.drafter.drop(seq.request_id)
         return StepEvent(request_id, token=None, index=None,
                          finish_reason=seq.finish_reason)
 
@@ -184,15 +201,29 @@ class EngineCore:
             if not any(s.tokens and s.swap_state is None
                        for s in self.scheduler.active.values()):
                 self._last_decode_done = None
-            if self.chunk_size is not None:
+            # token counts BEFORE the step body: a speculative verify
+            # commits several tokens per sequence per step (and commits
+            # BEFORE any page-pressure preemption, so even a preempted
+            # sequence may have grown) — every path's events come from
+            # this one before/after delta, one event per new token
+            before = {rid: len(s.tokens) for rid, s in self._live.items()}
+            if self.speculative:
+                progressed = self._step_speculative()
+            elif self.chunk_size is not None:
                 progressed = self._step_chunked()
             else:
                 progressed = self._step_legacy()
-            events = [StepEvent(rid, token=None, index=None, preempted=True)
-                      for rid in self._preempted_now]
-            events += [StepEvent(s.request_id, s.tokens[-1],
-                                 len(s.tokens) - 1, s.finish_reason)
-                       for s in progressed]
+            events = []
+            for s in progressed:
+                n = len(s.tokens)
+                for i in range(before.get(s.request_id, n - 1), n):
+                    events.append(StepEvent(
+                        s.request_id, s.tokens[i], i,
+                        s.finish_reason if i == n - 1 else None))
+            # commit-then-preempt: token events first, the informational
+            # preemption notice after — matching the order it happened
+            events += [StepEvent(rid, token=None, index=None, preempted=True)
+                       for rid in self._preempted_now]
             self._retire_finished()
             return events
         finally:
@@ -223,6 +254,36 @@ class EngineCore:
                 "scheduler stalled: waiting requests but nothing "
                 "active")
         return self._decode_once(active)
+
+    def _step_speculative(self) -> list:
+        """The admit-or-verify step body (``--speculative``): same shape as
+        legacy admit-OR-decode, but the decode half is one speculative
+        round — the draft model proposes up to ``spec_k`` tokens per slot,
+        ONE batched verify dispatch on the target scores every slot's
+        proposals, and the accepted run (plus the target's own next token)
+        commits.  Admission waves additionally prefill the DRAFT cache for
+        the admitted sequences (fresh and resumed alike — recompute rebuilds
+        both models' state), so a round never mixes prefill and verify."""
+        admitted = self.scheduler.admit()
+        if admitted:
+            before = {s.request_id: len(s.tokens) for s in admitted}
+            self._prefill_admitted(admitted)
+            self.drafter.on_prefilled(
+                [s for s in admitted
+                 if s.state is SequenceState.RUNNING])
+            return [s for s in admitted
+                    if len(s.tokens) > before[s.request_id]]
+        active = list(self.scheduler.active.values())
+        if not active:
+            raise RuntimeError(
+                "scheduler stalled: waiting requests but nothing "
+                "active")
+        proposals = self.drafter.propose(active)
+        progressed = self.verifier.verify_and_commit(active, proposals)
+        # a verify round IS the step's decode dispatch for stall purposes:
+        # every running slot took at least one token from it
+        self._note_decode_dispatch()
+        return progressed
 
     def _step_chunked(self) -> list:
         """One token-budget batch (Sarathi/vLLM-v1 chunked prefill): the
@@ -607,8 +668,30 @@ class EngineCore:
                    if s.request_id not in protect]
         if not victims:
             return freed > 0
-        self._preempt(max(victims, key=lambda s: s.admit_seqno))
+        self._preempt(self._pick_victim(victims))
         return True
+
+    def _pick_victim(self, victims: list[Sequence]) -> Sequence:
+        """Choose which running sequence to preempt.  Among the candidates,
+        PREFER one whose full prompt pages the prefix trie still holds: its
+        drop-and-recompute resume rides the trie's tail-only prefill path,
+        so the recompute bill shrinks from the whole prompt to the
+        generated tail.  Within the preferred set (or among all victims
+        when the trie holds nothing) pick the YOUNGEST admission — least KV
+        beyond the prompt to rebuild, and FIFO fairness is unaffected
+        because the scheduler re-enqueues any victim at its arrival-order
+        position.  ``PrefixCache.match`` takes no references and touches no
+        LRU state, so probing here has no side effects."""
+        if self.prefix is not None and self.page_size is not None:
+            preferred = []
+            for s in victims:
+                m = self.prefix.match(s.request.prompt)
+                if m.full_pages >= 1 and \
+                        m.full_pages >= s.prompt_len // self.page_size:
+                    preferred.append(s)
+            if preferred:
+                return max(preferred, key=lambda s: s.admit_seqno)
+        return max(victims, key=lambda s: s.admit_seqno)
 
     def _preempt(self, victim: Sequence) -> None:
         """Take ``victim``'s pages and slot back: swap-mode saves its
@@ -629,6 +712,9 @@ class EngineCore:
         self.executor.evict([slot])
         self.scheduler.preempt(victim)
         self.executor.clear_slot(slot)
+        if self.drafter is not None:
+            # the draft cache rebuilds with the target's at re-admission
+            self.drafter.drop(victim.request_id)
         self.stats.preemptions += 1
         self._preempted_now.append(victim.request_id)
 
@@ -666,4 +752,6 @@ class EngineCore:
             slot = s.slot
             self.scheduler.retire(s)
             self.executor.clear_slot(slot)
+            if self.drafter is not None:
+                self.drafter.drop(s.request_id)
             self._live.pop(s.request_id, None)

@@ -66,15 +66,22 @@ class Engine:
                  prefix_cache: bool = False,
                  overcommit: float = 1.0,
                  swap: bool = False,
-                 chunk_size: int | None = None):
+                 chunk_size: int | None = None,
+                 speculative: bool = False,
+                 spec_k: int | None = None,
+                 draft_params=None,
+                 draft_cfg: ModelConfig | None = None):
         spec = resolve_engine_spec(
             cfg, max_len, num_slots=num_slots, token_budget=token_budget,
             memory_budget_bytes=memory_budget_bytes, mesh=mesh, dp=dp,
             tp=tp, max_top_k=max_top_k, page_size=page_size,
             num_pages=num_pages, prefix_cache=prefix_cache,
-            overcommit=overcommit, swap=swap, chunk_size=chunk_size)
+            overcommit=overcommit, swap=swap, chunk_size=chunk_size,
+            speculative=speculative, spec_k=spec_k, draft_cfg=draft_cfg)
         self.executor = LocalExecutor(params, cfg, spec,
-                                      mesh=mesh, dp=dp, tp=tp)
+                                      mesh=mesh, dp=dp, tp=tp,
+                                      draft_params=draft_params,
+                                      draft_cfg=draft_cfg)
         self.core = EngineCore(self.executor, eos_id=eos_id)
 
     @classmethod
@@ -118,6 +125,16 @@ class Engine:
     def prefix_compile_count(self) -> int | None:
         """Prefix-prefill bucket compilations so far."""
         return self.executor.prefix_compile_count()
+
+    def verify_compile_count(self) -> int | None:
+        """Speculative-verify compilations so far.  The verify shape is
+        fully static, so this stays at 1 across admission waves — the
+        speculative benchmark asserts it."""
+        return self.executor.verify_compile_count()
+
+    def draft_decode_compile_count(self) -> int | None:
+        """Draft-model decode-step compilations (None without a draft)."""
+        return self.executor.draft_decode_compile_count()
 
     # ----------------------------------------------------- compat surface --
     # Host-policy state lives on the core, device state on the runner; the
@@ -182,6 +199,18 @@ class Engine:
     @property
     def chunk_size(self) -> int | None:
         return self.core.chunk_size
+
+    @property
+    def speculative(self) -> bool:
+        return self.core.speculative
+
+    @property
+    def spec_k(self) -> int:
+        return self.core.spec_k
+
+    @property
+    def draft_stats(self) -> EngineStats | None:
+        return getattr(self.executor, "draft_stats", None)
 
     @property
     def max_top_k(self) -> int:

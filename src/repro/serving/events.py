@@ -1,11 +1,16 @@
 """Step events: the per-sequence deltas the engine's step loop emits.
 
 ``Engine.step()`` runs ONE engine iteration — an admit-or-decode step in
-legacy mode, or one token-budget batch (decode rows + a prefill chunk
-group) with ``chunk_size`` set — and returns a list of :class:`StepEvent`,
-one per sequence that made progress this step.  A mid-prefill sequence
-(its chunk cursor short of its prompt) emits NO event until its final
-chunk samples its first token, so the client-visible stream is identical
+legacy mode, one token-budget batch (decode rows + a prefill chunk
+group) with ``chunk_size`` set, or one draft-propose-and-verify round
+with ``--speculative`` — and returns a list of :class:`StepEvent`, one
+per TOKEN a sequence gained this step.  Legacy and chunked steps grow a
+sequence by at most one token, so event-per-token and event-per-sequence
+coincide there; a speculative verify round can commit several tokens per
+sequence per step, emitted as consecutive events in index order with
+``finish_reason`` set only on the last.  A mid-prefill sequence (its
+chunk cursor short of its prompt) emits NO event until its final chunk
+samples its first token, so the client-visible stream is identical
 either way.  An event carries the newly sampled token (and its 0-based
 index into the request's generated tokens) and, when this step retired
 the sequence, the ``finish_reason``.  An abort produces a tokenless event

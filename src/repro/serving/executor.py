@@ -51,6 +51,12 @@ class EngineSpec:
     # into one mixed dispatch.  None (the default) keeps the legacy
     # admit-or-decode step byte-identical; set iff ``page_size`` is.
     chunk_size: int | None = None
+    # speculative decoding: a small dense draft model proposes ``spec_k``
+    # tokens per slot per round and ONE batched target dispatch verifies
+    # them (DESIGN.md section 16).  Mutually exclusive with chunk_size and
+    # swap; works in both the fixed and paged regimes.
+    speculative: bool = False
+    spec_k: int = 0
 
 
 def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
@@ -65,7 +71,10 @@ def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
                         prefix_cache: bool = False,
                         overcommit: float = 1.0,
                         swap: bool = False,
-                        chunk_size: int | None = None) -> EngineSpec:
+                        chunk_size: int | None = None,
+                        speculative: bool = False,
+                        spec_k: int | None = None,
+                        draft_cfg: ModelConfig | None = None) -> EngineSpec:
     """Validate + normalize engine sizing into an :class:`EngineSpec`.
 
     num_slots/token_budget can be given directly, or derived from a device
@@ -112,7 +121,9 @@ def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
                 "or explicit num_slots/token_budget/num_pages, not both")
         plan = plan_engine_report(cfg, memory_budget_bytes, max_len,
                                   mesh=mesh, dp=dp, page_size=page_size,
-                                  overcommit=overcommit)
+                                  overcommit=overcommit,
+                                  draft_cfg=draft_cfg if speculative
+                                  else None)
         num_slots, token_budget = plan.num_slots, plan.token_budget
         num_pages, page_size = plan.num_pages, plan.page_size
     num_slots = num_slots or 4
@@ -169,12 +180,36 @@ def resolve_engine_spec(cfg: ModelConfig, max_len: int, *,
                 f"{cfg.name}: chunked prefill needs a pure-attention "
                 "pattern; recurrent mid-prompt state cannot be rebuilt "
                 "from the block pool between chunks")
+    if speculative:
+        if not all(m == "attn" for m, _ in cfg.pattern):
+            raise ValueError(
+                f"{cfg.name}: speculative decoding needs a pure-attention "
+                "pattern; the batched verify scores tails against cached "
+                "history, which recurrent state cannot replay")
+        if chunk_size is not None:
+            raise ValueError(
+                "speculative decoding and chunked prefill are mutually "
+                "exclusive: a verify round IS the step's whole token "
+                "budget — pass one of --speculative / --chunk-size")
+        if swap:
+            raise ValueError(
+                "speculative decoding composes with drop-and-recompute "
+                "preemption only; --swap is not supported (the draft "
+                "cache cannot be swapped alongside the target's pages)")
+        spec_k = 3 if spec_k is None else spec_k
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    else:
+        if spec_k is not None:
+            raise ValueError("spec_k only makes sense with speculative")
+        spec_k = 0
     return EngineSpec(max_len=max_len, num_slots=num_slots,
                       token_budget=token_budget, page_size=page_size,
                       num_pages=num_pages, overcommit=float(overcommit),
                       swap=bool(swap), prefix_cache=bool(prefix_cache),
                       max_top_k=min(max_top_k, cfg.vocab_size),
-                      chunk_size=chunk_size)
+                      chunk_size=chunk_size,
+                      speculative=bool(speculative), spec_k=spec_k)
 
 
 class Executor:
@@ -233,6 +268,19 @@ class Executor:
     def position(self, slot: int) -> int:
         raise NotImplementedError
 
+    # draft model (speculative decoding; only valid when spec.speculative).
+    # The draft runner shares slot indices with the target — the core's
+    # DraftProposer drives it through the same ExecuteInput contract.
+    def draft_execute(self, inp: ExecuteInput) -> ExecuteOutput:
+        raise NotImplementedError
+
+    def draft_insert(self, slots, caches) -> None:
+        raise NotImplementedError
+
+    def draft_set_slot(self, slot: int, *, token: int, pos: int,
+                       temperature: float, top_k: int, seed: int) -> None:
+        raise NotImplementedError
+
     # observability
     def decode_compile_count(self) -> int | None:
         raise NotImplementedError
@@ -241,6 +289,12 @@ class Executor:
         raise NotImplementedError
 
     def prefix_compile_count(self) -> int | None:
+        raise NotImplementedError
+
+    def verify_compile_count(self) -> int | None:
+        raise NotImplementedError
+
+    def draft_decode_compile_count(self) -> int | None:
         raise NotImplementedError
 
 
@@ -256,6 +310,7 @@ class LocalExecutor(Executor):
     def __init__(self, params, cfg: ModelConfig, spec: EngineSpec, *,
                  mesh=None, dp: tuple[str, ...] = ("data",),
                  tp: str | None = "model",
+                 draft_params=None, draft_cfg: ModelConfig | None = None,
                  stats: EngineStats | None = None):
         self.cfg = cfg
         self.spec = spec
@@ -265,7 +320,25 @@ class LocalExecutor(Executor):
             params, cfg, max_len=spec.max_len, num_slots=spec.num_slots,
             page_size=spec.page_size, num_pages=spec.num_pages,
             mesh=mesh, dp=dp, tp=tp, max_top_k=spec.max_top_k,
-            stats=self.stats)
+            spec_k=spec.spec_k, stats=self.stats)
+        # speculative decoding: a SECOND runner for the draft model, same
+        # slot geometry as the target so slot indices are shared, always
+        # on the fixed stripe cache (the draft is small — that's the
+        # point; paging it would buy nothing and cost a second pool).
+        # Its dispatch counters accumulate in a separate EngineStats so
+        # /stats can report the draft/verify wall-time split.
+        self.draft: ModelRunner | None = None
+        self.draft_stats: EngineStats | None = None
+        if spec.speculative:
+            if draft_params is None or draft_cfg is None:
+                raise ValueError(
+                    "speculative decoding needs draft_params + draft_cfg")
+            self.draft_stats = EngineStats()
+            self.draft = ModelRunner(
+                draft_params, draft_cfg, max_len=spec.max_len,
+                num_slots=spec.num_slots, page_size=None,
+                mesh=mesh, dp=dp, tp=tp, max_top_k=spec.max_top_k,
+                stats=self.draft_stats)
 
     @property
     def cache(self):
@@ -299,6 +372,10 @@ class LocalExecutor(Executor):
 
     def evict(self, slots) -> None:
         self.runner.evict(slots)
+        if self.draft is not None:
+            # the draft row dies with the target's — re-admission
+            # re-prefills both
+            self.draft.evict(slots)
 
     def swap_out(self, slot: int):
         return self.runner.swap_out(slot)
@@ -313,9 +390,22 @@ class LocalExecutor(Executor):
 
     def clear_slot(self, slot: int) -> None:
         self.runner.clear_slot(slot)
+        if self.draft is not None:
+            self.draft.clear_slot(slot)
 
     def position(self, slot: int) -> int:
         return self.runner.position(slot)
+
+    def draft_execute(self, inp: ExecuteInput) -> ExecuteOutput:
+        return self.draft.execute(inp)
+
+    def draft_insert(self, slots, caches) -> None:
+        self.draft.insert(slots, caches)
+
+    def draft_set_slot(self, slot: int, *, token: int, pos: int,
+                       temperature: float, top_k: int, seed: int) -> None:
+        self.draft.set_slot(slot, token=token, pos=pos,
+                            temperature=temperature, top_k=top_k, seed=seed)
 
     def decode_compile_count(self) -> int | None:
         return self.runner.decode_compile_count()
@@ -325,3 +415,10 @@ class LocalExecutor(Executor):
 
     def prefix_compile_count(self) -> int | None:
         return self.runner.prefix_compile_count()
+
+    def verify_compile_count(self) -> int | None:
+        return self.runner.verify_compile_count()
+
+    def draft_decode_compile_count(self) -> int | None:
+        return None if self.draft is None \
+            else self.draft.decode_compile_count()

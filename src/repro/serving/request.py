@@ -73,10 +73,10 @@ class Request:
 class SequenceState(enum.Enum):
     WAITING = "waiting"      # queued, no slot
     RUNNING = "running"      # admitted into a decode slot
-    PREEMPTED = "preempted"  # pages reclaimed under pool pressure; back at
-    #                          the HEAD of the waiting queue (it arrived
-    #                          before everything still waiting, so FIFO
-    #                          order is preserved) awaiting re-admission
+    PREEMPTED = "preempted"  # pages reclaimed under pool pressure; back in
+    #                          the waiting queue at its arrival-order
+    #                          position (FIFO is preserved no matter which
+    #                          victim was picked) awaiting re-admission
     FINISHED = "finished"    # retired; slot released
 
 
@@ -103,9 +103,11 @@ class Sequence:
         self.charged_units: int | None = None
         self.prefix_match = None
         # preemption bookkeeping: admission recency (youngest-victim
-        # selection), how often this sequence was preempted, and — in swap
+        # selection), arrival order (FIFO-preserving re-enqueue after a
+        # preemption), how often this sequence was preempted, and — in swap
         # mode — the host-side copy of its KV pages awaiting restore
         self.admit_seqno: int = -1
+        self.arrival_seqno: int = -1
         self.preemptions: int = 0
         self.swap_state = None
         # chunked-prefill cursor: how many positions of ``prefill_tokens``
@@ -163,8 +165,15 @@ class Sequence:
         return self.finish_reason is not None
 
     # ---------------------------------------------------------- updates --
-    def append_token(self, token: int, eos_id: int | None = None) -> None:
-        now = self._clock()
+    def append_token(self, token: int, eos_id: int | None = None,
+                     at: float | None = None) -> None:
+        """Record one generated token.  ``at`` overrides the timestamp:
+        speculative commits land several tokens from ONE verify dispatch,
+        and stamping them all "now" would report zero inter-token latency —
+        the spec controller instead interpolates each token's time across
+        the dispatch window so ITL percentiles and ``max_decode_stall``
+        keep measuring real wall-clock pacing."""
+        now = self._clock() if at is None else at
         if self.t_first_token is None:
             self.t_first_token = now
         self.t_tokens.append(now)

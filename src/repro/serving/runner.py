@@ -33,7 +33,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, prefill, prefill_with_prefix
+from repro.models import (decode_step, prefill, prefill_with_past,
+                          prefill_with_prefix)
 from repro.parallel import context as pctx
 from repro.serving.cache import PagedSlotCache, SlotCache
 from repro.serving.utils import EngineStats, pow2_bucket
@@ -102,13 +103,22 @@ class ExecuteInput:
                  (earlier chunks / trie pages).  Chunk 0 is the
                  ``prefix_lens == 0`` degenerate case of the same path.
                  Either half may be empty (pure-decode / pure-chunk step).
+      "verify"   speculative verify: ``tokens[j]`` is slot ``slots[j]``'s
+                 pending token plus its draft proposals (a tail of at most
+                 ``spec_k + 1``), ``prefix_lens[j]`` its committed K/V
+                 length.  ONE dispatch at a FIXED shape (all num_slots
+                 rows, width spec_k + 1) scores every row's tail against
+                 its committed past and samples the target's token after
+                 each tail position — so it compiles exactly once,
+                 regardless of how many slots are live or how few
+                 proposals a near-finished row has left.
 
     Sampling params travel per ROW for prefill/prefix, and per CHUNK row
     (aligned with ``chunk_slots``) for mixed; decode rows read the staging
     arrays set at admission.
     """
 
-    kind: str  # "decode" | "prefill" | "prefix" | "mixed"
+    kind: str  # "decode" | "prefill" | "prefix" | "mixed" | "verify"
     slots: tuple[int, ...] = ()
     tokens: tuple[tuple[int, ...], ...] = ()
     prefix_lens: tuple[int, ...] = ()
@@ -128,7 +138,10 @@ class ExecuteOutput:
     for decode (all rows present, idle rows garbage), by ROW for
     prefill/prefix (bucketed length; rows past the real group are dummies).
     For mixed it is the decode half's slot-indexed array (None when the
-    step had no decode rows).
+    step had no decode rows).  For verify it is SLOT-indexed and
+    two-dimensional, (num_slots, spec_k + 1): ``tokens[slot, j]`` is the
+    target's sample after consuming the slot's tail through index j
+    (garbage for idle slots and past a row's real tail).
     ``caches``: the dispatch's K/V output when the core must place it —
     full prefill caches to ``insert`` (fixed and paged alike), tail caches
     to ``write_tails`` for prefix hits and mixed-step chunks; None for
@@ -171,12 +184,14 @@ class ModelRunner:
                  mesh=None, dp: tuple[str, ...] = ("data",),
                  tp: str | None = "model",
                  max_top_k: int = MAX_TOP_K,
+                 spec_k: int = 0,
                  stats: EngineStats | None = None):
         self.cfg = cfg
         self.max_len = max_len
         self.num_slots = num_slots
         self.page_size = page_size
         self.num_pages = num_pages
+        self.spec_k = spec_k
         self.mesh = mesh
         self.dp = tuple(dp)
         self.tp = tp
@@ -255,6 +270,23 @@ class ModelRunner:
             first = self._sample(last, temps, topk, seeds, plens + tlens)
             return first, tail_caches
 
+        def verify_paged_fn(params, data, tables, tails, plens,
+                            temps, topk, seeds):
+            # score each row's speculative tail against its committed
+            # prefix pages; the sample after tail index j is the token at
+            # absolute position plens + 1 + j, so every draw lands on the
+            # same fold_in position non-speculative decode would use
+            logits, tail_caches = prefill_with_prefix(
+                params, cfg, tails, data, tables, plens)
+            return self._verify_sample(logits, plens, temps, topk,
+                                       seeds), tail_caches
+
+        def verify_fixed_fn(params, data, tails, plens, temps, topk, seeds):
+            logits, tail_caches = prefill_with_past(
+                params, cfg, tails, data, plens)
+            return self._verify_sample(logits, plens, temps, topk,
+                                       seeds), tail_caches
+
         if mesh is not None:
             row = self._slot_sh
             # the page table is replicated host state (None when unpaged)
@@ -270,6 +302,20 @@ class ModelRunner:
         # per call (_put) and jit infers shardings from the committed args
         self._prefill = jax.jit(prefill_fn, static_argnames=("ragged",))
         self._prefix_prefill = jax.jit(prefix_fn)
+        self._verify = jax.jit(
+            verify_paged_fn if ps is not None else verify_fixed_fn)
+
+    def _verify_sample(self, logits, plens, temps, topk, seeds):
+        """Sample the target's token after EVERY tail position of every
+        row: logits (N, W, padded_vocab) -> (N, W) int32, where column j
+        draws at fold position ``plens + 1 + j`` — the position the token
+        will occupy, identical to the one-at-a-time decode sequence."""
+        n, w = logits.shape[:2]
+        pos = (plens[:, None] + 1 + jnp.arange(w)[None, :]).reshape(-1)
+        out = self._sample(logits.reshape(n * w, -1),
+                           jnp.repeat(temps, w), jnp.repeat(topk, w),
+                           jnp.repeat(seeds, w), pos)
+        return out.reshape(n, w)
 
     # ------------------------------------------------------------- mesh ---
     def _trace_ctx(self):
@@ -306,6 +352,8 @@ class ModelRunner:
             return self._execute_prefix(inp)
         if inp.kind == "mixed":
             return self._execute_mixed(inp)
+        if inp.kind == "verify":
+            return self._execute_verify(inp)
         raise ValueError(f"unknown ExecuteInput kind {inp.kind!r}")
 
     def _decode_dispatch(self, advance, live_rows=None) -> np.ndarray:
@@ -363,6 +411,55 @@ class ModelRunner:
             self.stats.chunk_dispatches += 1
         return ExecuteOutput(tokens=nxt, caches=caches,
                              chunk_tokens=chunk_tokens)
+
+    def _execute_verify(self, inp: ExecuteInput) -> ExecuteOutput:
+        """One speculative-verify dispatch at a FIXED shape: all
+        ``num_slots`` rows, tail width ``spec_k + 1``.  Live rows land at
+        their own SLOT index (the output is slot-indexed, like decode);
+        idle rows are zero dummies with ``prefix_lens == 0``.  Deliberately
+        NOT pow2-bucketed: bucketing by live-row count or remaining-token
+        width would retrace as sequences finish — a fixed shape with
+        zero-padded tails compiles exactly once and pads only host-side
+        zeros.  Returns tail K/V as ``caches`` for the core to scatter
+        (only the ACCEPTED positions — commit is the core's call)."""
+        if self.spec_k < 1:
+            raise ValueError("runner built without spec_k; no verify fn")
+        ns, w = self.num_slots, self.spec_k + 1
+        tails = np.zeros((ns, w), np.int32)
+        plens = np.zeros((ns,), np.int32)
+        temps = np.zeros((ns,), np.float32)
+        topk = np.zeros((ns,), np.int32)
+        seeds = np.zeros((ns,), np.uint32)
+        n_toks = 0
+        for j, slot in enumerate(inp.slots):
+            toks = inp.tokens[j]
+            if len(toks) > w:
+                raise ValueError(
+                    f"slot {slot}: verify tail {len(toks)} > spec_k+1 {w}")
+            tails[slot, :len(toks)] = toks
+            plens[slot] = inp.prefix_lens[j]
+            temps[slot] = inp.temperatures[j]
+            topk[slot] = inp.top_ks[j]
+            seeds[slot] = inp.seeds[j]
+            n_toks += len(toks)
+
+        dpa = self._dpa()
+        args = [self.params, self.cache.data]
+        if self.page_size is not None:
+            # the page table at FULL width — a value input, like decode's
+            args.append(self.cache.table_device())
+        args += [self._put(tails, P(dpa, None)), self._put(plens, P(dpa)),
+                 self._put(temps, P(dpa)), self._put(topk, P(dpa)),
+                 self._put(seeds, P(dpa))]
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            out, tail_caches = self._verify(*args)
+        jax.block_until_ready((out, tail_caches))
+        self.stats.verify_time += time.perf_counter() - t0
+        self.stats.verify_dispatches += 1
+        # committed tokens count as decode_tokens at the core (they ARE the
+        # output stream); the dispatch itself is accounted as verify_*
+        return ExecuteOutput(tokens=np.asarray(out), caches=tail_caches)
 
     def _execute_prefill(self, inp: ExecuteInput) -> ExecuteOutput:
         """Batched full prefill.  (rows, width) bucket to powers of two so
@@ -541,3 +638,9 @@ class ModelRunner:
     def prefix_compile_count(self) -> int | None:
         """Number of prefix-prefill bucket compilations."""
         return _compiled_count(self._prefix_prefill)
+
+    def verify_compile_count(self) -> int | None:
+        """Number of speculative-verify compilations.  The verify shape is
+        fully static (num_slots rows x spec_k+1 width), so this stays at 1
+        across admission waves — the speculative benchmark asserts it."""
+        return _compiled_count(self._verify)

@@ -136,9 +136,11 @@ class Scheduler:
         # page_size is set
         self.reserved_units = 0
         # lifetime counters + a monotonic admission stamp (victim selection
-        # preempts the YOUNGEST admission, deterministically)
+        # preempts the YOUNGEST admission, deterministically) and an arrival
+        # stamp (re-enqueue keeps the waiting queue sorted by it)
         self.preemptions = 0
         self._admit_seqno = 0
+        self._arrival_seqno = 0
         # optional prefix-cache hook (paged regime only): an object with
         # match/pin/unpin/note, ``resident_pages`` and ``evict(n)`` —
         # admission then charges each sequence only its UNSHARED tail and
@@ -207,6 +209,8 @@ class Scheduler:
         admitted (see :meth:`validate`)."""
         self.validate(seq)
         seq.state = SequenceState.WAITING
+        seq.arrival_seqno = self._arrival_seqno
+        self._arrival_seqno += 1
         self.waiting.append(seq)
 
     def add_all(self, seqs: Iterable[Sequence]) -> None:
@@ -327,13 +331,16 @@ class Scheduler:
     # -------------------------------------------------------- preemption --
     def preempt(self, seq: Sequence) -> None:
         """Take an ACTIVE sequence's slot and reservation back and requeue
-        it at the HEAD of the waiting queue for re-admission.  The caller
-        (the engine) releases the physical pages; this method is the pure
-        accounting inverse of :meth:`admit`, so arbitrary admit/preempt/
-        retire interleavings leave ``reserved_units`` consistent.  Head
-        re-enqueue preserves FIFO: the victim arrived before every
-        still-waiting sequence (it was admitted from this same queue), so
-        admission order still equals arrival order."""
+        it for re-admission in ARRIVAL order.  The caller (the engine)
+        releases the physical pages; this method is the pure accounting
+        inverse of :meth:`admit`, so arbitrary admit/preempt/retire
+        interleavings leave ``reserved_units`` consistent.  Re-enqueue
+        preserves FIFO by construction: the waiting queue is kept sorted
+        by ``arrival_seqno`` (``add`` appends monotonically; this method
+        inserts the victim before the first later arrival), so admission
+        order equals arrival order regardless of WHICH active sequence the
+        engine's victim policy picked — the youngest-victim default and
+        the prefix-aware preference both re-enqueue identically."""
         if self.active.get(seq.slot) is not seq:
             raise ValueError(
                 f"{seq.request_id} is not active in slot {seq.slot}")
@@ -348,7 +355,16 @@ class Scheduler:
         seq.prefix_match = None  # pins were consumed by its prefill
         seq.state = SequenceState.PREEMPTED
         seq.preemptions += 1
-        self.waiting.appendleft(seq)
+        # insert before the first strictly-later arrival; with the classic
+        # youngest-victim policy every waiting entry is later, so this is
+        # exactly the historical appendleft
+        at = 0
+        for at, w in enumerate(self.waiting):
+            if w.arrival_seqno > seq.arrival_seqno:
+                break
+        else:
+            at = len(self.waiting)
+        self.waiting.insert(at, seq)
         self.preemptions += 1
 
     # -------------------------------------------------------- retirement --

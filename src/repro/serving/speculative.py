@@ -1,0 +1,272 @@
+"""Speculative decoding: draft proposals + batched target verification.
+
+The economics come straight from the paper: butterfly factorization has
+already cut the TARGET model's parameter bytes by 4-10x, and this module
+spends a slice of that freed memory on a small DENSE draft model — the
+first ``draft_layers`` periods of the target running ``k`` tokens ahead
+per slot — so each target dispatch can score ``k`` proposals at once
+instead of producing one token.  ``plan_engine`` prices the draft under a
+dense policy next to the compressed target, making the trade explicit:
+the draft's bill must fit inside the compression savings.
+
+Two host-policy classes, both driving the :class:`~repro.serving.
+executor.Executor` contract and nothing else (no jax here — enforced by
+``tools/layering_lint.py``):
+
+:class:`DraftProposer`
+    Owns the draft model's slot state.  Admission waves prefill the draft
+    cache alongside the target's; each round re-arms every row's staging
+    state and runs ``k`` draft decode dispatches to collect proposals.
+    The only subtlety is the LAG machine (below).
+
+:class:`SpecVerifier`
+    Builds ONE ``kind="verify"`` dispatch per round — every live slot's
+    pending token + proposals as a zero-padded fixed-shape tail riding
+    the existing prefix-attention machinery (no new kernel family; the
+    dispatch compiles exactly once) — then commits the accepted run.
+    Because every committed token is the TARGET's own sample at the same
+    fold-in PRNG position one-at-a-time decode would have used, the
+    output stream is bit-identical to non-speculative decode at ANY
+    temperature; acceptance only decides how many tokens each round
+    yields.  Accepted tail K/V scatters into the pool through the same
+    ``alloc_tail``/``write_tails`` calls prefix hits use; rejected tails
+    never allocate a page.
+
+The draft LAG machine.  After a round commits ``a`` accepted proposals
+(+1 target token), the draft cache is valid through committed position
+``prefill_len + min(a, p_gen - 1)`` where ``p_gen`` proposals were
+generated: the draft CONSUMED ``tokens[-1], d_1 .. d_{p_gen-1}`` and the
+first ``a`` proposals match the committed stream.  So the draft is fully
+caught up (lag 0) iff ``a < p_gen``, and exactly ONE position behind
+(lag 1) iff ``a == p_gen`` — the full-acceptance case, where the next
+round's first draft dispatch consumes ``tokens[-2]`` at position
+``prefill_len - 1`` to fill the gap (its sample is discarded) before
+proposing.  A lag-1 row therefore generates ``k - 1`` proposals that
+round; fresh or re-prefilled rows always start at lag 0.
+"""
+from __future__ import annotations
+
+from repro.serving.cache import PoolExhausted
+from repro.serving.request import Sequence, SequenceState
+from repro.serving.runner import ExecuteInput
+from repro.serving.utils import EngineStats
+
+
+def _sampling_columns(group: list[Sequence]):
+    """Per-row sampling params aligned with a dispatch's rows.  (A copy of
+    the core's helper: this module must not import ``core`` — the import
+    direction is core -> speculative.)"""
+    return (tuple(float(s.request.sampling.temperature) for s in group),
+            tuple(int(s.request.sampling.top_k) for s in group),
+            tuple(int(s.request.sampling.seed) for s in group))
+
+
+class DraftProposer:
+    """Runs the executor's draft model ``k`` tokens ahead of each slot.
+
+    The draft runner is a second fixed-stripe ModelRunner inside the
+    executor (same ``max_len``/``num_slots``, so slot indices are shared
+    with the target; never paged — the draft is small, that is the point).
+    All state here is the per-request lag bit; everything device-side
+    lives behind ``executor.draft_execute``/``draft_insert``/
+    ``draft_set_slot``, and slot eviction fans out from the target
+    automatically.
+    """
+
+    def __init__(self, executor, *, k: int):
+        if k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {k}")
+        self.executor = executor
+        self.k = k
+        # request_id -> 0|1: how many committed positions the draft cache
+        # is missing (see the lag machine in the module docstring)
+        self._lag: dict[str, int] = {}
+
+    def on_prefilled(self, seqs: list[Sequence]) -> None:
+        """Prefill the draft cache for an admitted wave (fresh and resumed
+        alike — drop-and-recompute rebuilds BOTH models' state).  One
+        batched dispatch; the draft's prefill sample is discarded (the
+        verifier only ever consumes draft DECODE proposals) and each row's
+        staging arms with the pending token, exactly like the target."""
+        group = [s for s in seqs if not s.done]
+        if not group:
+            return
+        temps, topks, seeds = _sampling_columns(group)
+        out = self.executor.draft_execute(ExecuteInput(
+            kind="prefill",
+            slots=tuple(s.slot for s in group),
+            tokens=tuple(s.prefill_tokens for s in group),
+            temperatures=temps, top_ks=topks, seeds=seeds))
+        self.executor.draft_insert([s.slot for s in group], out.caches)
+        for j, s in enumerate(group):
+            self.executor.draft_set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=temps[j], top_k=topks[j], seed=seeds[j])
+            self._lag[s.request_id] = 0
+
+    def propose(self, seqs: list[Sequence]) -> dict[str, list[int]]:
+        """One proposal round: re-arm every row per its lag, then run the
+        draft decoder ``k`` steps over all live slots.  Lag-1 rows spend
+        their first step refilling the position the last full acceptance
+        skipped (sample discarded, staging re-armed at the pending token),
+        so they contribute ``k - 1`` proposals; lag-0 rows contribute
+        ``k``.  Stale K/V from earlier REJECTED proposals is simply
+        overwritten — the decode step's cache write is a positional set,
+        not an accumulate — so no cleanup pass exists."""
+        temps, topks, seeds = _sampling_columns(seqs)
+        lagged = []
+        for j, s in enumerate(seqs):
+            lag = self._lag[s.request_id]
+            # lag 0: feed the pending token at its position; lag 1: feed
+            # the one BEFORE it, one position back, to fill the gap first
+            self.executor.draft_set_slot(
+                s.slot, token=s.tokens[-1 - lag], pos=s.prefill_len - lag,
+                temperature=temps[j], top_k=topks[j], seed=seeds[j])
+            if lag:
+                lagged.append((j, s))
+        slots = tuple(s.slot for s in seqs)
+        proposals: dict[str, list[int]] = {s.request_id: [] for s in seqs}
+        for step in range(self.k):
+            out = self.executor.draft_execute(
+                ExecuteInput(kind="decode", slots=slots))
+            for j, s in enumerate(seqs):
+                if step == 0 and self._lag[s.request_id]:
+                    continue  # gap-filling step: sample discarded
+                proposals[s.request_id].append(int(out.tokens[s.slot]))
+            if step == 0:
+                # lag-1 rows discard the gap sample and re-arm at the
+                # pending token before the first REAL proposal step
+                for j, s in lagged:
+                    self.executor.draft_set_slot(
+                        s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                        temperature=temps[j], top_k=topks[j],
+                        seed=seeds[j])
+        return proposals
+
+    def on_commit(self, seq: Sequence, accepted: int) -> None:
+        """Update the lag bit after a verify round committed ``accepted``
+        of this row's proposals: full acceptance leaves the draft one
+        position behind (the committed bonus token was never a draft
+        input), anything less means the rejected suffix re-proposes from
+        a caught-up cache."""
+        gen = self.k - self._lag[seq.request_id]
+        self._lag[seq.request_id] = 1 if accepted == gen else 0
+
+    def drop(self, request_id: str) -> None:
+        """Forget a retired/aborted/preempted row; re-admission re-enters
+        through :meth:`on_prefilled`."""
+        self._lag.pop(request_id, None)
+
+
+class SpecVerifier:
+    """Scores every slot's proposals in ONE target dispatch and commits.
+
+    Commit ordering is token-first: accepted tokens append to host state
+    BEFORE any page allocation, so a pool-pressure preemption during the
+    K/V scatter can never un-commit a token — the preempted sequence keeps
+    its tokens and recompute rebuilds the cache behind them (the same
+    drop-and-recompute contract as everything else).  Only the ACCEPTED
+    positions allocate pages; a fully rejected tail costs zero pool pages.
+    """
+
+    def __init__(self, executor, drafter: DraftProposer, *, eos_id,
+                 stats: EngineStats, page_size: int | None, reclaim):
+        self.executor = executor
+        self.drafter = drafter
+        self.eos_id = eos_id
+        self.stats = stats
+        self.page_size = page_size
+        # (shortfall, protect) -> bool: the core's reclaim policy (trie
+        # eviction, then victim preemption)
+        self._reclaim = reclaim
+
+    def verify_and_commit(self, seqs: list[Sequence],
+                          proposals: dict[str, list[int]]) -> list[Sequence]:
+        """One verify round over ``seqs``; returns every sequence that
+        appended at least one token (preempted-mid-commit rows included —
+        their tokens stand).  Each row's tail is its pending token plus
+        its proposals, capped at ``max_new - len(tokens) - 1`` so a commit
+        can never overrun the request's budget (the cap leaves room for
+        the round's guaranteed target token)."""
+        tails, plens = [], []
+        for s in seqs:
+            rem = s.request.max_new - len(s.tokens)
+            props = proposals[s.request_id][:max(0, rem - 1)]
+            tails.append((s.tokens[-1], *props))
+            plens.append(s.prefill_len)  # BEFORE any append moves it
+        temps, topks, seeds = _sampling_columns(seqs)
+        t0 = {s.request_id: s.now() for s in seqs}
+        out = self.executor.execute(ExecuteInput(
+            kind="verify",
+            slots=tuple(s.slot for s in seqs),
+            tokens=tuple(tails),
+            prefix_lens=tuple(plens),
+            temperatures=temps, top_ks=topks, seeds=seeds))
+        self.stats.spec_rounds += 1
+
+        # --- commit tokens (host state first; device pages after) ------
+        progressed = []
+        committed = []  # (seq, start, n_c) rows needing a K/V scatter
+        for j, s in enumerate(seqs):
+            t1 = s.now()
+            row = out.tokens[s.slot]
+            props = tails[j][1:]
+            # longest prefix of proposals the target reproduced: the
+            # sample after tail position i must equal the NEXT tail token
+            a = 0
+            while a < len(props) and int(row[a]) == props[a]:
+                a += 1
+            # commit the accepted run + the target's own next token,
+            # stopping early if one of them finishes the sequence; every
+            # committed token gets a timestamp interpolated across the
+            # dispatch window (a single "now" would fake zero ITL)
+            n_c = 0
+            span = (t1 - t0[s.request_id]) / (a + 1)
+            for i in range(a + 1):
+                s.append_token(int(row[i]), self.eos_id,
+                               at=t0[s.request_id] + (i + 1) * span)
+                n_c += 1
+                if s.done:
+                    break
+            self.stats.spec_commits += 1
+            self.stats.spec_proposed += len(props)
+            self.stats.spec_accepted += a
+            self.stats.spec_committed += n_c
+            self.stats.decode_tokens += n_c
+            self.drafter.on_commit(s, a)
+            progressed.append(s)
+            committed.append((s, plens[j], n_c))
+
+        # --- commit K/V: map pages for the accepted span, scatter the
+        # tail caches, re-arm staging.  Finished rows skip it (their
+        # cache is never read again); under pool pressure the alloc loop
+        # reclaims — possibly preempting a row of THIS round, whose
+        # tokens above stand.
+        live = []
+        for s, start, n_c in committed:
+            if s.done:
+                continue
+            if self.page_size is not None:
+                while s.state is SequenceState.RUNNING:
+                    try:
+                        self.executor.alloc_tail(s.slot, start, start + n_c)
+                        break
+                    except PoolExhausted as e:
+                        if not self._reclaim(e.shortfall, frozenset()):
+                            raise
+            if s.state is SequenceState.RUNNING:
+                live.append((s, start, n_c))
+        if live:
+            self.executor.write_tails(
+                [s.slot for s, _, _ in live], out.caches,
+                starts=[start for _, start, _ in live],
+                lengths=[start + n_c for _, start, n_c in live],
+                rows=[s.slot for s, _, _ in live])
+        for s, _, _ in live:
+            self.executor.set_slot(
+                s.slot, token=s.tokens[-1], pos=s.prefill_len,
+                temperature=s.request.sampling.temperature,
+                top_k=s.request.sampling.top_k,
+                seed=s.request.sampling.seed)
+            s.prefill_progress = s.prefill_len
+        return progressed

@@ -88,6 +88,17 @@ class EngineStats:
     recomputed: int = 0
     swapped_out: int = 0
     swapped_in: int = 0
+    # speculative decoding: verify dispatches run on the TARGET runner
+    # (the draft's own decode dispatches accumulate in the draft runner's
+    # separate EngineStats); proposal/acceptance bookkeeping lives here so
+    # /stats can report acceptance rate and mean accepted-run length.
+    verify_time: float = 0.0
+    verify_dispatches: int = 0
+    spec_rounds: int = 0        # verify rounds executed (all slots batched)
+    spec_commits: int = 0       # per-sequence commits (rounds x live rows)
+    spec_proposed: int = 0      # draft tokens actually put to the verifier
+    spec_accepted: int = 0      # of those, how many the target agreed with
+    spec_committed: int = 0     # tokens committed (accepted + 1 corrected)
 
     @property
     def prefill_tps(self) -> float:
@@ -100,4 +111,4 @@ class EngineStats:
     @property
     def device_time(self) -> float:
         """Total wall time spent inside compiled dispatches."""
-        return self.prefill_time + self.decode_time
+        return self.prefill_time + self.decode_time + self.verify_time

@@ -408,7 +408,12 @@ def _drain_with_preemption(shapes, num_slots, num_pages, overcommit,
                 sched.preempt(s)
                 assert sched.reserved_units == before - charge
                 assert s.charged_units is None
-                assert sched.waiting[0] is s  # head re-enqueue
+                assert s in sched.waiting
+                # arrival-order re-enqueue: waiting stays sorted by
+                # arrival_seqno, so the victim never jumps ahead of an
+                # older arrival nor falls behind a younger one
+                seqnos = [w.arrival_seqno for w in sched.waiting]
+                assert seqnos == sorted(seqnos)
             elif op == "retire":
                 sched.retire(s)
                 finished.add(s.request_id)

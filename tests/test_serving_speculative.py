@@ -1,0 +1,413 @@
+"""Speculative decoding: parity, bookkeeping, preemption, compile counts.
+
+Fast host-level suite: spec validation in ``resolve_engine_spec``, the
+preemption-aware victim picker (trie-held prompts preferred, youngest
+otherwise), and the scheduler's arrival-order re-enqueue — the FIFO
+property PR 7's head-of-queue requeue almost had.
+
+Engine-level suite (slow): the load-bearing guarantee is that speculative
+decoding NEVER changes the output stream — every committed token is the
+target's own sample at the same fold-in PRNG position one-at-a-time
+decode would have used, so acceptance only buys throughput.  Asserted
+for dense / butterfly / mixed policies in both the fixed and paged
+regimes, at greedy and at seeded temperature, under forced full
+rejection (a draft that can never match), and under pool-pressure
+preemption mid-verify (allocator conservation + drop-and-recompute
+parity).  The verify dispatch and the draft decode step must each
+compile exactly once across admission waves.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import pytest
+
+from repro.serving.request import Request, SamplingParams, Sequence
+from repro.serving.scheduler import Scheduler
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.configs.base import recommended_policy  # noqa: E402
+from repro.core.policy import uniform_policy  # noqa: E402
+from repro.serving import Engine  # noqa: E402
+from repro.serving.core import EngineCore  # noqa: E402
+from repro.serving.executor import resolve_engine_spec  # noqa: E402
+
+ARCH = "qwen3-4b"  # pure-attention stack (speculative requires it)
+PROMPT_LEN, MAX_NEW, BATCH = 6, 8, 3
+MAX_LEN = PROMPT_LEN + MAX_NEW
+
+slow = pytest.mark.slow
+
+
+# ------------------------------------------------------------- fixtures ----
+
+
+def _cfg(policy_name: str):
+    cfg = reduced(get_config(ARCH))
+    if policy_name == "butterfly":
+        cfg = cfg.with_fact(uniform_policy("butterfly", block_size=16))
+    elif policy_name == "mixed":
+        cfg = cfg.with_fact(recommended_policy(cfg, block=16))
+    else:
+        assert policy_name == "dense"
+    return cfg
+
+
+def _random_draft(cfg, params, m: int = 1):
+    """A draft that shares the target's embedding/head but runs only the
+    first ``m`` periods — the serve.py ``--draft-layers`` construction.
+    Against an un-distilled target its proposals mostly miss, which is
+    exactly what the parity tests want: acceptance must not matter."""
+    from repro.models import init_params
+    dcfg = dataclasses.replace(cfg, num_layers=m * len(cfg.pattern))
+    dparams = dict(init_params(dcfg, jax.random.PRNGKey(1)))
+    dparams["periods"] = jax.tree.map(lambda x: x[:m], params["periods"])
+    for k in ("embed", "final_norm", "head"):
+        if k in params:
+            dparams[k] = params[k]
+    return dparams, dcfg
+
+
+def _distilled(cfg, params, m: int = 1):
+    """Zero every target period >= ``m`` (pre-norm residual blocks with a
+    zeroed norm scale are identities), so the first-``m``-period draft IS
+    the target bit-for-bit and every proposal is accepted.  Returns
+    (target_params, draft_params, draft_cfg)."""
+    tparams = dict(params)
+    tparams["periods"] = jax.tree.map(
+        lambda x: x.at[m:].set(jnp.zeros_like(x[m:])), params["periods"])
+    dcfg = dataclasses.replace(cfg, num_layers=m * len(cfg.pattern))
+    dparams = dict(tparams)
+    dparams["periods"] = jax.tree.map(lambda x: x[:m], tparams["periods"])
+    return tparams, dparams, dcfg
+
+
+def _requests(cfg, *, seed=42, batch=BATCH, sampling=None):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, size=(batch, PROMPT_LEN))
+    return [Request(f"r{i}", tuple(map(int, prompts[i])), MAX_NEW,
+                    sampling or SamplingParams())
+            for i in range(batch)]
+
+
+# ------------------------------------------------ fast: spec validation ----
+
+
+def test_resolve_spec_speculative_defaults_and_conflicts():
+    cfg = _cfg("dense")
+    spec = resolve_engine_spec(cfg, MAX_LEN, num_slots=2, speculative=True)
+    assert spec.speculative and spec.spec_k == 3  # default draft depth
+    spec = resolve_engine_spec(cfg, MAX_LEN, num_slots=2,
+                               speculative=True, spec_k=5)
+    assert spec.spec_k == 5
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        resolve_engine_spec(cfg, MAX_LEN, num_slots=2, page_size=4,
+                            num_pages=8, chunk_size=4, speculative=True)
+    with pytest.raises(ValueError, match="swap"):
+        resolve_engine_spec(cfg, MAX_LEN, num_slots=2, page_size=4,
+                            num_pages=8, swap=True, speculative=True)
+    with pytest.raises(ValueError, match="spec_k"):
+        resolve_engine_spec(cfg, MAX_LEN, num_slots=2,
+                            speculative=True, spec_k=0)
+    with pytest.raises(ValueError, match="spec_k"):
+        resolve_engine_spec(cfg, MAX_LEN, num_slots=2, spec_k=3)
+
+
+# ------------------------------------- fast: FIFO re-enqueue (PR 7 bug) ----
+
+
+def test_preempt_reenqueues_at_arrival_order_position():
+    """Preempting in ARBITRARY order must leave the waiting queue sorted
+    by arrival — head-of-queue requeue would turn preemption order into
+    admission order and starve early arrivals."""
+    sched = Scheduler(num_slots=4, max_len=MAX_LEN)
+    seqs = [Sequence(Request(f"r{i}", (1, 2, 3), 4)) for i in range(6)]
+    for s in seqs:
+        sched.add(s)
+    admitted = sched.admit()
+    assert [s.request_id for s in admitted] == ["r0", "r1", "r2", "r3"]
+    for victim in (admitted[2], admitted[0], admitted[3]):
+        sched.preempt(victim)
+    assert [s.request_id for s in sched.waiting] == \
+        ["r0", "r2", "r3", "r4", "r5"]
+    # and re-admission drains that order from the head
+    assert [s.request_id for s in sched.admit()] == ["r0", "r2", "r3"]
+
+
+def test_preempt_random_interleavings_preserve_fifo():
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        sched = Scheduler(num_slots=3, max_len=MAX_LEN)
+        seqs = [Sequence(Request(f"r{i}", (1,), 2)) for i in range(8)]
+        for s in seqs:
+            sched.add(s)
+        admission_order = []
+        while sched.has_work and len(admission_order) < 64:
+            wave = sched.admit()
+            admission_order += [s.request_id for s in wave]
+            running = list(sched.active.values())
+            # preempt a random subset in random order, then retire the rest
+            rng.shuffle(running)
+            for s in running[:int(rng.integers(0, len(running) + 1))]:
+                if len(admission_order) < 8 or rng.integers(0, 2):
+                    sched.preempt(s)
+            for s in list(sched.active.values()):
+                sched.retire(s)
+        # every sequence's FIRST admission happened in arrival order
+        first = {}
+        for i, rid in enumerate(admission_order):
+            first.setdefault(rid, i)
+        order = sorted(first, key=first.get)
+        assert order == sorted(order, key=lambda r: int(r[1:]))
+
+
+# -------------------------------------- fast: victim selection policy ----
+
+
+class _Match(SimpleNamespace):
+    pass
+
+
+class _FakePrefix:
+    """PrefixCache stand-in: ``match`` reports full coverage for held
+    prompts, nothing for the rest (and, like the real one, mutates no
+    state)."""
+
+    def __init__(self, held):
+        self.held = {tuple(p) for p in held}
+
+    def match(self, prompt):
+        full = len(prompt) // 4 if tuple(prompt) in self.held else 0
+        return _Match(full_pages=full)
+
+
+def _victims(*prompts):
+    out = []
+    for i, p in enumerate(prompts):
+        s = Sequence(Request(f"v{i}", tuple(p), 4))
+        s.admit_seqno = i
+        out.append(s)
+    return out
+
+
+def test_pick_victim_prefers_trie_held_prompt():
+    a, b, c = _victims(range(8), range(100, 108), range(200, 208))
+    fake = SimpleNamespace(prefix=_FakePrefix([b.request.prompt]),
+                           page_size=4)
+    # b is NOT the youngest (c is) but its prompt pages are trie-resident:
+    # its recompute rides the tail-only prefill path, so it wins
+    assert EngineCore._pick_victim(fake, [a, b, c]) is b
+
+
+def test_pick_victim_youngest_among_preferred_then_overall():
+    a, b, c = _victims(range(8), range(100, 108), range(200, 208))
+    fake = SimpleNamespace(
+        prefix=_FakePrefix([a.request.prompt, c.request.prompt]),
+        page_size=4)
+    assert EngineCore._pick_victim(fake, [a, b, c]) is c  # youngest held
+    fake = SimpleNamespace(prefix=_FakePrefix([]), page_size=4)
+    assert EngineCore._pick_victim(fake, [a, b, c]) is c  # youngest overall
+    fake = SimpleNamespace(prefix=None, page_size=4)
+    assert EngineCore._pick_victim(fake, [a, b, c]) is c  # no trie at all
+
+
+def test_pick_victim_partial_prompt_coverage_is_not_preferred():
+    """Half-cached prompts do not qualify: resume would still re-prefill
+    the uncached half, so plain youngest-first applies."""
+    a, b = _victims(range(8), range(100, 108))
+
+    class _Half(_FakePrefix):
+        def match(self, prompt):
+            return _Match(full_pages=1)  # 1 of the 2 pages each needs
+
+    fake = SimpleNamespace(prefix=_Half([]), page_size=4)
+    assert EngineCore._pick_victim(fake, [a, b]) is b
+
+
+# ------------------------------------------------- slow: engine parity ----
+
+
+def _run_pair(cfg, params, dparams, dcfg, requests, *, page_size=None,
+              num_pages=None, spec_k=3, **kw):
+    ref = Engine(params, cfg, max_len=MAX_LEN, num_slots=BATCH,
+                 page_size=page_size, num_pages=num_pages).run(requests)
+    eng = Engine(params, cfg, max_len=MAX_LEN, num_slots=BATCH,
+                 page_size=page_size, num_pages=num_pages,
+                 speculative=True, spec_k=spec_k,
+                 draft_params=dparams, draft_cfg=dcfg, **kw)
+    out = eng.run(requests)
+    return ref, out, eng
+
+
+@slow
+@pytest.mark.parametrize("policy_name", ["dense", "butterfly", "mixed"])
+@pytest.mark.parametrize("regime", ["fixed", "paged"])
+def test_spec_matches_nonspec_greedy(policy_name, regime):
+    from repro.models import init_params
+    cfg = _cfg(policy_name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dparams, dcfg = _random_draft(cfg, params)
+    paged = regime == "paged"
+    ref, out, eng = _run_pair(
+        cfg, params, dparams, dcfg, _requests(cfg),
+        page_size=4 if paged else None, num_pages=BATCH * 4 if paged else None)
+    for r, o in zip(ref, out):
+        assert o.tokens == r.tokens, (
+            f"{policy_name}/{regime}: {o.request_id} diverged")
+    assert eng.stats.verify_dispatches > 0
+    assert eng.stats.decode_steps == 0  # no plain decode dispatch ran
+    # each sequence's FIRST token is the prefill sample; verify rounds
+    # commit everything after it
+    assert eng.stats.spec_committed == \
+        sum(len(o.tokens) for o in out) - BATCH
+
+
+@slow
+def test_spec_matches_nonspec_seeded_temperature():
+    """Same fold-in PRNG positions => bit-identical sampled streams; with
+    a distilled-identity draft every proposal is accepted, pinning the
+    full-acceptance lag machine at temperature too."""
+    from repro.models import init_params
+    cfg = _cfg("mixed")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tparams, dparams, dcfg = _distilled(cfg, params)
+    reqs = _requests(cfg, sampling=SamplingParams(
+        temperature=0.8, top_k=8, seed=7))
+    ref, out, eng = _run_pair(cfg, tparams, dparams, dcfg, reqs,
+                              page_size=4, num_pages=BATCH * 4)
+    for r, o in zip(ref, out):
+        assert o.tokens == r.tokens, f"{o.request_id} diverged under temp"
+    assert eng.stats.spec_proposed > 0
+    assert eng.stats.spec_accepted == eng.stats.spec_proposed, (
+        "distilled-identity draft must be accepted verbatim")
+
+
+@slow
+@pytest.mark.parametrize("regime", ["fixed", "paged"])
+def test_forced_full_rejection_bookkeeping(regime):
+    """A draft that can never match (token -1 is outside the vocabulary)
+    degrades speculative decode to one token per sequence per round with
+    correct output and correct counters — the worst-case floor."""
+    from repro.models import init_params
+    cfg = _cfg("butterfly")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dparams, dcfg = _random_draft(cfg, params)
+    paged = regime == "paged"
+    ref = Engine(params, cfg, max_len=MAX_LEN, num_slots=BATCH,
+                 page_size=4 if paged else None,
+                 num_pages=BATCH * 4 if paged else None).run(_requests(cfg))
+    eng = Engine(params, cfg, max_len=MAX_LEN, num_slots=BATCH,
+                 page_size=4 if paged else None,
+                 num_pages=BATCH * 4 if paged else None,
+                 speculative=True, spec_k=3,
+                 draft_params=dparams, draft_cfg=dcfg)
+    eng.core.drafter.propose = lambda seqs: {
+        s.request_id: [-1, -1, -1] for s in seqs}
+    out = eng.run(_requests(cfg))
+    for r, o in zip(ref, out):
+        assert o.tokens == r.tokens
+    st = eng.stats
+    assert st.spec_accepted == 0
+    assert st.spec_committed == st.spec_commits  # exactly 1 token/commit
+    assert st.spec_committed == sum(len(o.tokens) for o in out) - BATCH
+
+
+@slow
+def test_preempt_mid_verify_conserves_pool_and_tokens():
+    """Overcommitted pool + speculative commits: the alloc-retry loop may
+    preempt a row of the SAME verify round.  Its committed tokens stand
+    (commit-then-preempt), drop-and-recompute replays bit-exactly, and
+    the allocator conserves pages throughout."""
+    from repro.models import init_params
+    cfg = _cfg("mixed")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tparams, dparams, dcfg = _distilled(cfg, params)  # multi-token commits
+    # a longer budget than the shared default: pressure must bite while
+    # every row is still mid-stream (a row that FINISHES in its last
+    # round never allocates its final page — finished rows skip the K/V
+    # commit — so short runs can drain an overcommitted pool untouched)
+    max_new, max_len = 12, PROMPT_LEN + 12
+    rng = np.random.default_rng(42)
+    prompts = rng.integers(0, cfg.vocab_size, size=(BATCH, PROMPT_LEN))
+    reqs = [Request(f"r{i}", tuple(map(int, prompts[i])), max_new)
+            for i in range(BATCH)]
+    ref = Engine(tparams, cfg, max_len=max_len, num_slots=BATCH,
+                 page_size=4, num_pages=BATCH * 5).run(reqs)
+    # worst-case demand is 5 pages/seq (15 total); at overcommit=3 each
+    # fresh admission charges 3 (2 current + 1 margin), so a 9-page pool
+    # admits all three at once and page growth MUST preempt to finish
+    eng = Engine(tparams, cfg, max_len=max_len, num_slots=BATCH,
+                 page_size=4, num_pages=9, overcommit=3.0,
+                 speculative=True, spec_k=3,
+                 draft_params=dparams, draft_cfg=dcfg)
+    out = eng.run(reqs)
+    for r, o in zip(ref, out):
+        assert o.tokens == r.tokens, (
+            f"{o.request_id} diverged across preemption")
+    assert eng.stats.preemptions >= 1, "pool pressure never bit"
+    alloc = eng.cache.allocator
+    assert alloc.num_free + alloc.num_live == 9, "pages not conserved"
+    assert alloc.num_live == 0, "drained engine still owns pages"
+
+
+@slow
+def test_verify_and_draft_compile_once_across_admission_waves():
+    """6 requests through 2 slots: admission waves, slot reuse, ragged
+    tails — the verify dispatch (fixed shape, slot-indexed) and the draft
+    decode step must each compile exactly once."""
+    from repro.models import init_params
+    cfg = _cfg("butterfly")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dparams, dcfg = _random_draft(cfg, params)
+    eng = Engine(params, cfg, max_len=MAX_LEN, num_slots=2,
+                 page_size=4, num_pages=8,
+                 speculative=True, spec_k=3,
+                 draft_params=dparams, draft_cfg=dcfg)
+    if eng.verify_compile_count() is None:
+        pytest.skip("jax build cannot report compile counts")
+    reqs = _requests(cfg, batch=6)
+    ref = Engine(params, cfg, max_len=MAX_LEN, num_slots=2,
+                 page_size=4, num_pages=8).run(reqs)
+    out = eng.run(reqs)
+    for r, o in zip(ref, out):
+        assert o.tokens == r.tokens
+    assert eng.verify_compile_count() == 1, "verify retraced"
+    assert eng.draft_decode_compile_count() == 1, "draft decode retraced"
+
+
+@slow
+def test_multi_token_events_and_interpolated_timestamps():
+    """A verify round that commits several tokens must emit one StepEvent
+    per token (consecutive indices, finish_reason only on the last) and
+    interpolate per-token timestamps across the round — a single shared
+    "now" would fake zero inter-token latency."""
+    from repro.models import init_params
+    cfg = _cfg("mixed")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tparams, dparams, dcfg = _distilled(cfg, params)  # 100% acceptance
+    eng = Engine(tparams, cfg, max_len=MAX_LEN, num_slots=BATCH,
+                 speculative=True, spec_k=3,
+                 draft_params=dparams, draft_cfg=dcfg)
+    seqs = [eng.submit(r) for r in _requests(cfg)]
+    per_rid: dict[str, list] = {s.request_id: [] for s in seqs}
+    multi = False
+    while eng.scheduler.has_work:
+        evs = [e for e in eng.step() if e.token is not None]
+        counts: dict[str, int] = {}
+        for e in evs:
+            per_rid[e.request_id].append(e)
+            counts[e.request_id] = counts.get(e.request_id, 0) + 1
+        multi = multi or any(n > 1 for n in counts.values())
+    assert multi, "distilled draft never committed a multi-token run"
+    for rid, evs in per_rid.items():
+        assert [e.index for e in evs] == list(range(len(evs))), (
+            f"{rid}: event indices not consecutive")
+        assert all(e.finish_reason is None for e in evs[:-1])
+        assert evs[-1].finish_reason is not None
+    for s in seqs:
+        assert len(s.t_tokens) == len(s.tokens)
+        assert all(b > a for a, b in zip(s.t_tokens, s.t_tokens[1:])), (
+            f"{s.request_id}: interpolated timestamps not increasing")

@@ -45,14 +45,16 @@ RUNNER_FORBIDDEN = (
     "repro.serving.engine",
 )
 
-# files allowed to call jax.jit: the device layer, and the seed-path
-# parity oracle (not part of the engine stack)
-JIT_ALLOWED = {"runner.py", "reference.py"}
+# files allowed to call jax.jit: the device layer (runner.py plus
+# cache.py, whose SlotCache/PagedSlotCache classes are constructed and
+# driven only by the runner and jit their tail-scatter commit), and the
+# seed-path parity oracle (not part of the engine stack)
+JIT_ALLOWED = {"runner.py", "cache.py", "reference.py"}
 
 # host-policy modules that must never import jax (directly or via
 # ``from jax... import ...``): they run on controller hosts with no
 # accelerator when the executor is remote
-NO_JAX = {"core.py", "scheduler.py", "events.py"}
+NO_JAX = {"core.py", "scheduler.py", "events.py", "speculative.py"}
 
 
 def _imported_modules(tree: ast.AST):
@@ -82,18 +84,24 @@ def _jit_aliases(tree: ast.AST) -> set[str]:
     return names
 
 
+def _is_jit_ref(node: ast.AST, aliases: set[str]) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+            isinstance(node.value, ast.Name) and node.value.id == "jax":
+        return True
+    return isinstance(node, ast.Name) and node.id in aliases
+
+
 def _jit_calls(tree: ast.AST):
-    """Yield linenos of jax.jit(...) / jit(...) call sites."""
+    """Yield linenos of jax.jit use: calls AND bare ``@jax.jit`` decorators."""
     aliases = _jit_aliases(tree)
     for node in ast.walk(tree):
-        if not isinstance(node, ast.Call):
-            continue
-        f = node.func
-        if isinstance(f, ast.Attribute) and f.attr == "jit" and \
-                isinstance(f.value, ast.Name) and f.value.id == "jax":
+        if isinstance(node, ast.Call) and _is_jit_ref(node.func, aliases):
             yield node.lineno
-        elif isinstance(f, ast.Name) and f.id in aliases:
-            yield node.lineno
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # ``@jax.jit`` without parentheses is not an ast.Call
+            for dec in node.decorator_list:
+                if _is_jit_ref(dec, aliases):
+                    yield dec.lineno
 
 
 def check() -> list[str]:
